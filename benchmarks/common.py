@@ -1,0 +1,76 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Constants are scaled down from the paper's Polaris runs (1 s tasks, 10–100 MB
+payloads, 256 workers) to a single-core CI box; every constant is exposed so
+the paper-scale values can be restored on a real cluster.  EXPERIMENTS.md
+records both the scaled defaults and the paper's originals.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def payload(nbytes: int, seed: int = 0) -> np.ndarray:
+    """Arbitrary Python object of ~nbytes (numpy array, like the paper)."""
+    return np.random.default_rng(seed).integers(
+        0, 255, max(nbytes, 8) // 8, dtype=np.int64
+    )
+
+
+def store_bytes(connector) -> int:
+    """Bytes currently held in a connector (the memory-trace metric)."""
+    return sum(len(connector.get(k) or b"") for k in connector.keys())
+
+
+@dataclass
+class BenchResult:
+    name: str
+    rows: list[dict] = field(default_factory=list)
+    claims: list[str] = field(default_factory=list)  # validated paper claims
+
+    def add(self, **row):
+        self.rows.append(row)
+
+    def claim(self, ok: bool, text: str):
+        self.claims.append(f"[{'PASS' if ok else 'FAIL'}] {text}")
+
+    def dump(self) -> str:
+        lines = [f"== {self.name} =="]
+        if self.rows:
+            keys = list(self.rows[0])
+            lines.append(",".join(keys))
+            for r in self.rows:
+                lines.append(",".join(_fmt(r[k]) for k in keys))
+        lines += self.claims
+        return "\n".join(lines)
+
+    def save(self):
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(os.path.join(RESULTS_DIR, f"{self.name}.json"), "w") as f:
+            json.dump({"rows": self.rows, "claims": self.claims}, f, indent=1)
+
+    @property
+    def ok(self) -> bool:
+        return all(c.startswith("[PASS]") for c in self.claims)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.perf_counter() - self.t0

@@ -1,0 +1,129 @@
+"""Paper Fig 6: scalable stream processing with ProxyStream.
+
+One producer streams items of size d; a dispatcher consumes the stream and
+submits a compute task per item to a worker pool.  Configurations:
+
+- **direct** (the paper's Redis Pub/Sub): bulk data flows THROUGH the
+  dispatcher — it receives + deserializes each item, re-serializes it into
+  the task payload.
+- **proxystream**: the dispatcher consumes *metadata only* and forwards
+  proxies; bulk bytes go store → worker, bypassing the dispatcher.
+
+Metric: completed compute tasks per second.  Paper: 4.6×/6.2× faster than
+Redis Pub/Sub at 1/10 MB and 256 workers; dispatcher caps at ~100 MB/s.
+Scaled here: 4 workers, 0.05 s tasks, 100 kB–5 MB items.
+"""
+from __future__ import annotations
+
+import pickle
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor, wait
+
+from benchmarks.common import BenchResult, Timer, payload
+from repro.core import Store
+from repro.core.proxy import Proxy, extract
+from repro.core.streaming import (
+    QueuePublisher,
+    QueueSubscriber,
+    StreamConsumer,
+    StreamProducer,
+)
+
+WORKERS = 4
+TASK_S = 0.05
+ITEMS = 60
+SIZES = (100_000, 1_000_000, 5_000_000)
+
+
+def _compute(item) -> int:
+    if isinstance(item, Proxy):
+        item = extract(item)  # bulk resolves HERE, in the worker
+    time.sleep(TASK_S)
+    return len(item)
+
+
+def run_direct(d: int) -> float:
+    """Bulk bytes through the dispatcher (pub/sub semantics)."""
+    q: queue.Queue = queue.Queue(maxsize=8)
+    item = payload(d)
+
+    def producer():
+        for _ in range(ITEMS):
+            q.put(pickle.dumps(item))  # broker carries the full item
+        q.put(None)
+
+    done = []
+    with ThreadPoolExecutor(WORKERS) as pool, Timer() as t:
+        threading.Thread(target=producer, daemon=True).start()
+        futs = []
+        while True:
+            blob = q.get()
+            if blob is None:
+                break
+            obj = pickle.loads(blob)            # dispatcher deserializes
+            task_payload = pickle.dumps(obj)    # …and re-serializes
+            futs.append(pool.submit(lambda b: _compute(pickle.loads(b)), task_payload))
+        done = [f.result() for f in futs]
+    assert all(done)
+    return ITEMS / t.elapsed
+
+
+def run_proxystream(d: int) -> float:
+    """Metadata through the dispatcher; bulk store→worker."""
+    ns = f"fig6-{d}"
+    store = Store(f"fig6-store-{d}")
+    producer = StreamProducer(
+        QueuePublisher(ns), {"items": store}, evict_on_resolve=True
+    )
+    consumer = StreamConsumer(QueueSubscriber("items", ns), timeout=30.0)
+    item = payload(d)
+
+    def produce():
+        for i in range(ITEMS):
+            producer.send("items", item, metadata={"i": i})
+            producer.flush_topic("items")
+        producer.close_topic("items")
+
+    with ThreadPoolExecutor(WORKERS) as pool, Timer() as t:
+        threading.Thread(target=produce, daemon=True).start()
+        futs = [pool.submit(_compute, proxy) for proxy in consumer]
+        wait(futs)
+        assert all(f.result() for f in futs)
+    store.close()
+    return ITEMS / t.elapsed
+
+
+def main() -> BenchResult:
+    res = BenchResult("fig6_streaming")
+    for d in SIZES:
+        tps_direct = run_direct(d)
+        tps_ps = run_proxystream(d)
+        res.add(
+            item_bytes=d, direct_tps=tps_direct, proxystream_tps=tps_ps,
+            speedup=tps_ps / tps_direct,
+        )
+    small, large = res.rows[0], res.rows[-1]
+    res.claim(
+        small["speedup"] > 0.8,
+        f"small items (100 kB): comparable throughput (paper: ≈equal; "
+        f"got {small['speedup']:.2f}×)",
+    )
+    res.claim(
+        large["speedup"] > 1.15,
+        f"large items ({large['item_bytes']//1_000_000} MB): ProxyStream beats "
+        f"direct pub/sub (paper: 4.6–7.3× at cluster scale; got "
+        f"{large['speedup']:.2f}× at {WORKERS} workers)",
+    )
+    res.claim(
+        large["speedup"] > small["speedup"],
+        "advantage grows with item size (paper Fig 6 trend)",
+    )
+    return res
+
+
+if __name__ == "__main__":
+    r = main()
+    print(r.dump())
+    r.save()

@@ -1,0 +1,109 @@
+"""Paper Fig 7: memory management over a simulated MapReduce workflow.
+
+Rounds of map-reduce: each mapper receives its input via proxy and produces
+an output consumed by one reducer.  Memory-management models:
+
+- **default**: proxies created, targets never freed → store grows linearly.
+- **manual**: programmer evicts each key after its consumer finishes
+  (requires a-priori knowledge of the data flow).
+- **ownership**: OwnedProxy per object; references passed to tasks go out of
+  scope with the task, owners freed when rounds end — automatic.
+
+Metric: bytes held in the mediated store, sampled after every round (the
+deterministic analogue of the paper's RSS trace).  Paper: default grows
+monotonically; ownership == manual.  Paper constants: 8 rounds × 32 mappers
+× 100 MB in / 10 MB out.  Scaled: 4 rounds × 8 mappers × 4 MB / 0.4 MB.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+
+from benchmarks.common import BenchResult, payload, store_bytes
+from repro.core import Store
+from repro.core.ownership import borrow, free, owned_proxy, release
+from repro.core.proxy import Proxy, extract
+
+ROUNDS = 4
+MAPPERS = 8
+MAP_IN = 4_000_000
+MAP_OUT = 400_000
+
+
+def _mapper(inp) -> object:
+    data = extract(inp) if isinstance(inp, Proxy) else inp
+    return payload(MAP_OUT, seed=int(data[0]) % 7)
+
+
+def _reducer(parts) -> int:
+    return sum(
+        int((extract(p) if isinstance(p, Proxy) else p)[0]) for p in parts
+    )
+
+
+def run(model: str) -> list[int]:
+    """Run the workflow under one memory model; return per-round store bytes."""
+    store = Store(f"fig7-{model}")
+    trace = []
+    with ThreadPoolExecutor(MAPPERS) as pool:
+        for rnd in range(ROUNDS):
+            inputs = [payload(MAP_IN, seed=rnd * MAPPERS + i) for i in range(MAPPERS)]
+            if model == "ownership":
+                owners = [owned_proxy(store, x) for x in inputs]
+                refs = [borrow(o) for o in owners]
+                futs = [pool.submit(_mapper, r) for r in refs]
+                outs = [f.result() for f in futs]
+                for r in refs:
+                    release(r)  # task completed → reference out of scope
+                out_owners = [owned_proxy(store, o) for o in outs]
+                out_refs = [borrow(o) for o in out_owners]
+                _reducer(out_refs)
+                for r in out_refs:
+                    release(r)
+                # round ends: owners go out of scope → targets evicted
+                for o in owners + out_owners:
+                    free(o)
+            else:
+                proxies = [store.proxy(x) for x in inputs]
+                futs = [pool.submit(_mapper, p) for p in proxies]
+                outs = [f.result() for f in futs]
+                out_proxies = [store.proxy(o) for o in outs]
+                _reducer(out_proxies)
+                if model == "manual":
+                    for p in proxies + out_proxies:
+                        store.evict(p.__factory__.key)
+            trace.append(store_bytes(store.connector))
+    store.close()
+    return trace
+
+
+def main() -> BenchResult:
+    res = BenchResult("fig7_memory")
+    traces = {m: run(m) for m in ("default", "manual", "ownership")}
+    for rnd in range(ROUNDS):
+        res.add(
+            round=rnd,
+            default_bytes=traces["default"][rnd],
+            manual_bytes=traces["manual"][rnd],
+            ownership_bytes=traces["ownership"][rnd],
+        )
+    d, m, o = traces["default"], traces["manual"], traces["ownership"]
+    res.claim(
+        all(d[i] > d[i - 1] for i in range(1, ROUNDS)),
+        f"default leaks monotonically ({d[0]/1e6:.0f} → {d[-1]/1e6:.0f} MB)",
+    )
+    res.claim(
+        o[-1] == m[-1] == 0,
+        f"ownership == manual == fully reclaimed at end "
+        f"(ownership {o[-1]} B, manual {m[-1]} B)",
+    )
+    res.claim(
+        max(o) <= max(d) / ROUNDS * 1.5,
+        f"ownership peak ({max(o)/1e6:.0f} MB) ≪ default final ({d[-1]/1e6:.0f} MB)",
+    )
+    return res
+
+
+if __name__ == "__main__":
+    r = main()
+    print(r.dump())
+    r.save()

@@ -1,0 +1,63 @@
+"""Paper §III claim: proxy benefits outweigh overhead above ~10 kB.
+
+Measures, per object size:
+- **pass-by-value**: payload serialized into the task and result out (what a
+  control-flow engine does);
+- **proxy**: Store.proxy() creation + just-in-time resolution in the task.
+
+The crossover where proxy total cost beats pass-by-value is reported; the
+paper places it around 10 kB (connector-dependent).
+"""
+from __future__ import annotations
+
+import pickle
+import time
+
+from benchmarks.common import BenchResult, payload
+from repro.core import Store
+from repro.core.proxy import extract
+
+SIZES = (1_000, 10_000, 100_000, 1_000_000, 10_000_000)
+REPS = 20
+
+
+def main() -> BenchResult:
+    res = BenchResult("proxy_overhead")
+    crossover = None
+    with Store("overhead") as store:
+        for size in SIZES:
+            obj = payload(size)
+            t0 = time.perf_counter()
+            for _ in range(REPS):
+                blob = pickle.dumps(obj)          # into task payload
+                got = pickle.loads(blob)
+                _ = pickle.loads(pickle.dumps(got))  # result path back
+            t_value = (time.perf_counter() - t0) / REPS
+
+            t0 = time.perf_counter()
+            for _ in range(REPS):
+                p = store.proxy(obj, evict_on_resolve=True)
+                _ = extract(p)                    # just-in-time resolve
+            t_proxy = (time.perf_counter() - t0) / REPS
+
+            res.add(bytes=size, pass_by_value_s=t_value, proxy_s=t_proxy,
+                    ratio=t_value / t_proxy)
+            if crossover is None and t_proxy <= t_value:
+                crossover = size
+    res.claim(
+        crossover is not None and crossover <= 100_000,
+        f"proxy wins by ≤100 kB objects (paper: ~10 kB; crossover here: "
+        f"{crossover if crossover else '>10MB'} B)",
+    )
+    big = res.rows[-1]
+    res.claim(
+        big["ratio"] > 1.0,
+        f"10 MB objects: proxy {big['ratio']:.1f}× cheaper than pass-by-value",
+    )
+    return res
+
+
+if __name__ == "__main__":
+    r = main()
+    print(r.dump())
+    r.save()

@@ -1,0 +1,69 @@
+"""Benchmark orchestrator: one benchmark per paper figure/table.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5_pipelining ...]
+
+Runs the paper-reproduction benchmarks (Fig 5 pipelining, Fig 6 streaming,
+Fig 7 memory, §III proxy-overhead threshold), prints each table + validated
+claims, and — if dry-run roofline JSONs exist under results/ — prints the
+roofline summary table (§Roofline of EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+BENCHES = ("fig5_pipelining", "fig6_streaming", "fig7_memory", "proxy_overhead")
+
+
+def run_roofline_summary() -> None:
+    from repro.analysis.roofline import RooflineReport, report_table
+
+    root = os.path.join(os.path.dirname(__file__), "..", "results")
+    paths = sorted(glob.glob(os.path.join(root, "dryrun_*.json")))
+    if not paths:
+        return
+    print("\n== roofline (from dry-run artifacts) ==")
+    for path in paths:
+        with open(path) as f:
+            recs = json.load(f)
+        reports = [
+            RooflineReport(**r["roofline"])
+            for r in recs
+            if r.get("status") == "ok" and r.get("probes")
+            # probe-extrapolated records only: multipod rows are the
+            # compile/sharding proof, their raw scanned costs are not a
+            # roofline (cost_analysis visits scan bodies once)
+        ]
+        if reports:
+            print(f"-- {os.path.basename(path)} --")
+            print(report_table(reports))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", action="append", choices=BENCHES)
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args(argv)
+
+    import importlib
+
+    failures = 0
+    for name in args.only or BENCHES:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        print(f"\n[bench] running {name} ...", flush=True)
+        result = mod.main()
+        print(result.dump())
+        result.save()
+        if not result.ok:
+            failures += 1
+    if not args.skip_roofline:
+        run_roofline_summary()
+    print(f"\n[bench] done; {failures} benchmark(s) with failed claims")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

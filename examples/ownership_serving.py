@@ -1,0 +1,92 @@
+"""MOF-Generation analogue: ownership-managed generation loop (paper §VI,
+Fig 10) — here as a continuous-batching LLM serving run where every
+sequence's KV pages and payloads are ownership-managed.
+
+A client streams prompt requests; the ServeEngine admits them into slots,
+decodes with a paged KV cache whose page lists are OwnedProxies, and frees
+everything deterministically at sequence end.  The assertion at the bottom
+is the paper's Fig 10 claim: active proxied objects return to zero, with no
+manual bookkeeping.
+
+    PYTHONPATH=src python examples/ownership_serving.py
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.store import Store
+from repro.core.streaming import (
+    QueuePublisher,
+    QueueSubscriber,
+    StreamConsumer,
+    StreamProducer,
+)
+from repro.dist.sharding import materialize_params
+from repro.launch.mesh import make_host_mesh, rules_for
+from repro.models.api import build_model
+from repro.models.layers import ModelContext
+from repro.serve.engine import ServeEngine
+
+N_REQUESTS = 6
+MAX_NEW = 8
+
+
+def main():
+    cfg = get_smoke_config("smollm-135m")
+    mesh = make_host_mesh()
+    ctx = ModelContext(cfg, mesh, rules_for(mesh))
+    model = build_model(ctx)
+    params = materialize_params(model.param_specs(), jax.random.PRNGKey(0))
+
+    ns = "mof"
+    store = Store("mof-req")
+    producer = StreamProducer(QueuePublisher(ns), {"requests": store})
+    consumer = StreamConsumer(QueueSubscriber("requests", ns), timeout=0.05)
+
+    rng = np.random.default_rng(1)
+    active_trace: list[int] = []
+
+    def client():
+        for i in range(N_REQUESTS):
+            prompt = rng.integers(1, cfg.vocab, 12).astype(np.int32)
+            producer.send(
+                "requests",
+                {"prompt": prompt},
+                metadata={"req_id": f"mof-{i}", "max_new_tokens": MAX_NEW},
+            )
+            producer.flush_topic("requests")
+            time.sleep(0.05)
+        producer.close_topic("requests")
+
+    engine = ServeEngine(ctx, params, slots=3, max_len=48, eos_id=-1)
+
+    def tracer():
+        while not done.is_set():
+            active_trace.append(engine.pages.pages_in_use())
+            time.sleep(0.05)
+
+    done = threading.Event()
+    threading.Thread(target=client, daemon=True).start()
+    threading.Thread(target=tracer, daemon=True).start()
+    completed = engine.run(consumer)
+    done.set()
+
+    print(
+        f"ownership_serving (MOF analogue): {len(completed)}/{N_REQUESTS} "
+        f"sequences served, {engine.metrics['tokens']} tokens\n"
+        f"  pages-in-use trace (sampled): {active_trace}\n"
+        f"  peak pages {max(active_trace or [0])}, final pages "
+        f"{engine.pages.pages_in_use()} (paper Fig 10: returns to zero)"
+    )
+    assert len(completed) == N_REQUESTS
+    assert engine.pages.pages_in_use() == 0, "ownership must reclaim all pages"
+    assert max(active_trace or [0]) > 0, "pages were actually used"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""1000-Genomes analogue: a staged scientific workflow pipelined with
+ProxyFutures (paper §VI, Fig 8).
+
+Five stages mirroring the paper's bioinformatics pipeline, with the same
+data-flow topology (fan-out → merge → score → pairwise overlap → frequency),
+each task having a startup-overhead phase that ProxyFutures overlap across
+stage boundaries:
+
+  stage 1  (fan-out): N "chromosome chunk" tasks extract variants
+  stage 2  (merge):   combine per-individual results
+  stage 3  (score):   select variants by phenotypic effect
+  stage 4  (overlap): pairwise-overlap tasks (no intra-stage deps)
+  stage 5  (freq):    final frequency computation
+
+Baseline submits each stage when the previous stage's results arrive
+(control-flow order); the ProxyFutures version submits ALL stages up front
+with future-proxies as inputs (data-flow order).  The paper reports 36%
+makespan reduction; the scaled-down topology here shows the same effect.
+
+    PYTHONPATH=src python examples/pipelined_workflow.py
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core import Store
+from repro.core.proxy import Proxy, extract
+
+N_CHUNKS = 4
+N_PAIRS = 4
+OVERHEAD_S = 0.15  # library-import / model-load phase per task
+COMPUTE_S = 0.10
+
+
+def _work(inputs, out_future=None, seed=0):
+    """Generic task: overhead → resolve inputs → compute → produce."""
+    time.sleep(OVERHEAD_S)  # overlappable startup
+    vals = [extract(x) if isinstance(x, Proxy) else x for x in inputs]
+    time.sleep(COMPUTE_S)
+    rng = np.random.default_rng(seed)
+    out = np.concatenate([np.atleast_1d(v).ravel()[:64] for v in vals] or [rng.integers(0, 9, 64)])
+    if out_future is not None:
+        out_future.set_result(out)
+    return out
+
+
+def run_baseline(pool: ThreadPoolExecutor) -> float:
+    t0 = time.perf_counter()
+    raw = [np.arange(64) + i for i in range(N_CHUNKS)]
+    # stage 1 — wait for all chunks, then 2, then 3 ... (control flow)
+    s1 = [f.result() for f in [pool.submit(_work, [r], None, i) for i, r in enumerate(raw)]]
+    s2 = pool.submit(_work, s1, None, 10).result()
+    s3 = pool.submit(_work, [s2], None, 20).result()
+    s4 = [f.result() for f in [pool.submit(_work, [s3], None, 30 + i) for i in range(N_PAIRS)]]
+    pool.submit(_work, s4, None, 40).result()
+    return time.perf_counter() - t0
+
+
+def run_proxyfutures(pool: ThreadPoolExecutor, store: Store) -> float:
+    t0 = time.perf_counter()
+    raw = [np.arange(64) + i for i in range(N_CHUNKS)]
+    f1 = [store.future() for _ in range(N_CHUNKS)]
+    f2, f3 = store.future(), store.future()
+    f4 = [store.future() for _ in range(N_PAIRS)]
+    f5 = store.future()
+    # submit EVERY stage immediately; inputs are future-proxies (data flow)
+    handles = [pool.submit(_work, [r], f1[i], i) for i, r in enumerate(raw)]
+    handles.append(pool.submit(_work, [f.proxy() for f in f1], f2, 10))
+    handles.append(pool.submit(_work, [f2.proxy()], f3, 20))
+    handles += [pool.submit(_work, [f3.proxy()], f4[i], 30 + i) for i in range(N_PAIRS)]
+    handles.append(pool.submit(_work, [f.proxy() for f in f4], f5, 40))
+    f5.result()
+    for h in handles:
+        h.result()
+    return time.perf_counter() - t0
+
+
+def main():
+    workers = N_CHUNKS + N_PAIRS + 3
+    with Store("genomes") as store, ThreadPoolExecutor(workers) as pool:
+        t_base = run_baseline(pool)
+        t_pf = run_proxyfutures(pool, store)
+    reduction = 1 - t_pf / t_base
+    print(
+        f"pipelined_workflow (1000-Genomes analogue):\n"
+        f"  control-flow baseline : {t_base:.2f}s\n"
+        f"  ProxyFutures pipelined: {t_pf:.2f}s\n"
+        f"  makespan reduction    : {reduction:.1%} (paper: 36%)"
+    )
+    assert reduction > 0.10, "pipelining must reduce makespan"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Generate EXPERIMENTS.md tables from dry-run result JSONs.
+
+    PYTHONPATH=src python -m repro.analysis.report_md results/dryrun_baseline.json
+
+Emits §Dry-run and §Roofline markdown tables (stdout) from the records
+written by ``repro.launch.dryrun --out``.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.analysis.roofline import fmt_seconds
+
+
+def _gb(b: float) -> str:
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    """§Dry-run: compile proof + memory_analysis + collective schedule."""
+    out = [
+        "| arch | shape | mesh | status | compile s | bytes/device GB | "
+        "collectives (count × kind) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skip":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r.get('mesh_kind','-')} | "
+                f"SKIP ({r['reason'].split(':')[0]}) | – | – | – |"
+            )
+            continue
+        if r["status"] == "error":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r.get('mesh_kind','-')} | "
+                f"ERROR | – | – | {r['error'][:60]} |"
+            )
+            continue
+        ma = r.get("memory_analysis", {})
+        gb = (
+            ma.get("argument_size_in_bytes", 0)
+            + ma.get("output_size_in_bytes", 0)
+            + ma.get("temp_size_in_bytes", 0)
+        )
+        rl = r["roofline"]
+        colls = ", ".join(
+            f"{int(v['count'])}×{k}" for k, v in sorted(rl["collective_ops"].items())
+            if v["count"]
+        ) or "none"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('mesh_kind','-')} | OK | "
+            f"{r['compile_s']} | {_gb(gb)} | {colls} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(recs: list[dict], mesh_kind: str = "pod") -> str:
+    """§Roofline: three terms + dominant + useful ratio + MFU bound."""
+    out = [
+        "| arch | shape | compute | memory (min…hlo) | collective | DCN | "
+        "dominant (hlo / fused) | useful 6ND/HLO | MFU≤ (hlo / fused) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok" or r.get("mesh_kind") != mesh_kind:
+            continue
+        rl = r["roofline"]
+        # fused view: memory at its lower bound (what XLA:TPU fusion pays)
+        fused = {
+            "compute": rl["t_compute"],
+            "memory": rl.get("t_memory_min", 0.0),
+            "collective": rl["t_collective"],
+        }
+        fdom = max(fused, key=fused.get)
+        fstep = max(max(fused.values()), rl["t_dcn"])
+        fmfu = rl["model_flops"] / (r["chips"] * 197e12 * fstep) if fstep else 0.0
+        out.append(
+            "| {arch} | {shape} | {c} | {mn}…{m} | {co} | {d} | "
+            "**{dom}** / {fdom} | {u:.2f} | {mfu:.1%} / {fmfu:.1%} |".format(
+                arch=r["arch"], shape=r["shape"],
+                c=fmt_seconds(rl["t_compute"]),
+                mn=fmt_seconds(rl.get("t_memory_min", 0.0)),
+                m=fmt_seconds(rl["t_memory"]),
+                co=fmt_seconds(rl["t_collective"]),
+                d=fmt_seconds(rl["t_dcn"]),
+                dom=rl["dominant"], fdom=fdom,
+                u=rl["useful_ratio"], mfu=rl["mfu_bound"], fmfu=fmfu,
+            )
+        )
+    return "\n".join(out)
+
+
+def summary_counts(recs: list[dict]) -> str:
+    ok = sum(r["status"] == "ok" for r in recs)
+    skip = sum(r["status"] == "skip" for r in recs)
+    err = sum(r["status"] == "error" for r in recs)
+    return f"{ok} ok / {skip} skip / {err} error"
+
+
+def main(argv=None) -> int:
+    paths = (argv or sys.argv[1:]) or ["results/dryrun_baseline.json"]
+    for p in paths:
+        with open(p) as f:
+            recs = json.load(f)
+        print(f"## {p} — {summary_counts(recs)}\n")
+        print("### Dry-run\n")
+        print(dryrun_table(recs))
+        print("\n### Roofline (single-pod; multipod records are the "
+              "compile/sharding proof only — no probe extrapolation)\n")
+        print(roofline_table(recs, "pod"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,169 @@
+"""Checkpointing through the proxy substrate.
+
+The paper's three patterns each carry a piece of this subsystem:
+
+- **Async save (ProxyFutures, §IV-A):** ``save_async`` snapshots device
+  arrays to host, hands the writer thread a ProxyFuture, and returns
+  immediately — training's next step overlaps the serialization/write
+  (startup-overhead pipelining, applied to the save path).  ``wait()`` or a
+  later save joins the future.
+- **Bulk via Store (§III):** every leaf is written through a Store/
+  Connector (filesystem connector in this container; object stores on a
+  real cluster), so checkpoints inherit the mediated-channel property —
+  writer and restorer need not coexist.
+- **Retention via ownership (§IV-C):** each checkpoint is an OwnedProxy of
+  its manifest; keep-last-k drops old owners, which frees every leaf
+  deterministically — no leaked shards (the paper's Fig 10 behaviour).
+
+Restore is *elastic*: leaves are written mesh-agnostic (full logical
+arrays, chunked along axis 0) and re-device_put with the target mesh's
+NamedShardings, so a checkpoint saved on one mesh restores onto any other
+(node-failure → re-mesh → resume).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.core.connectors import FileConnector
+from repro.core.futures import ProxyFuture
+from repro.core.ownership import OwnedProxy, free, owned_proxy
+from repro.core.store import Store
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat], treedef
+
+
+@dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    _store: Store = field(init=False)
+    _owners: dict[int, OwnedProxy] = field(default_factory=dict)
+    _pending: ProxyFuture | None = None
+    _thread: threading.Thread | None = None
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._store = Store(
+            f"ckpt-{os.path.basename(self.directory)}-{id(self)}",
+            FileConnector(os.path.join(self.directory, "objects")),
+        )
+
+    # -- save ------------------------------------------------------------------
+    def save_async(self, state, step: int) -> ProxyFuture:
+        """Snapshot to host, then write in a background thread.
+
+        Returns the ProxyFuture of the manifest; resolution ⇒ durable.
+        """
+        self.wait()  # at most one in-flight save
+        flat, _ = _flatten_with_paths(state)
+        # device→host snapshot happens NOW (consistent point-in-time copy)
+        host_leaves = [(p, np.asarray(leaf)) for p, leaf in flat]
+        fut: ProxyFuture = self._store.future()
+
+        def writer():
+            manifest = {"step": step, "leaves": {}, "time": time.time()}
+            for path, arr in host_leaves:
+                key = f"s{step}-{abs(hash(path)) % 10**12}"
+                self._store.put(arr, key=key)
+                manifest["leaves"][path] = {
+                    "key": key,
+                    "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                }
+            with open(self._manifest_path(step), "w") as f:
+                json.dump(manifest, f)
+            fut.set_result(manifest)
+
+        self._thread = threading.Thread(target=writer, daemon=True)
+        self._thread.start()
+        self._pending = fut
+        return fut
+
+    def save(self, state, step: int) -> None:
+        self.save_async(state, step)
+        self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._pending is not None and self._pending.done():
+            manifest = self._pending.result()
+            step = manifest["step"]
+            # ownership: the manifest proxy owns its checkpoint's lifetime
+            self._owners[step] = owned_proxy(
+                self._store, manifest, key=f"manifest-{step}"
+            )
+            self._pending = None
+            self._enforce_retention()
+
+    def _enforce_retention(self):
+        steps = sorted(self._owners)
+        while len(steps) > self.keep:
+            victim = steps.pop(0)
+            owner = self._owners.pop(victim)
+            manifest = dict(owner)  # resolve before freeing
+            for meta in manifest["leaves"].values():
+                self._store.evict(meta["key"])
+            free(owner)
+            try:
+                os.remove(self._manifest_path(victim))
+            except FileNotFoundError:
+                pass
+
+    def _manifest_path(self, step: int) -> str:
+        return os.path.join(self.directory, f"manifest-{step}.json")
+
+    # -- restore -----------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        steps = [
+            int(f.split("-")[1].split(".")[0])
+            for f in os.listdir(self.directory)
+            if f.startswith("manifest-")
+        ]
+        return max(steps) if steps else None
+
+    def restore(self, state_template, step: int | None = None, shardings=None):
+        """Restore into the template's structure.
+
+        ``state_template``: pytree of arrays or ShapeDtypeStructs.
+        ``shardings``: optional matching pytree of NamedShardings → elastic
+        re-device_put onto the current mesh.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        with open(self._manifest_path(step)) as f:
+            manifest = json.load(f)
+        flat, treedef = _flatten_with_paths(state_template)
+        sh_flat = (
+            jax.tree.leaves(shardings) if shardings is not None else [None] * len(flat)
+        )
+        leaves = []
+        for (path, tmpl), sh in zip(flat, sh_flat):
+            meta = manifest["leaves"][path]
+            arr = self._store.get(meta["key"])
+            if arr is None:
+                raise KeyError(f"checkpoint leaf missing: {path} ({meta['key']})")
+            arr = np.asarray(arr).astype(meta["dtype"]).reshape(meta["shape"])
+            if sh is not None:
+                leaves.append(jax.device_put(arr, sh))
+            else:
+                leaves.append(jax.device_put(arr))
+        import jax.tree_util as jtu
+
+        return jtu.tree_unflatten(treedef, leaves), step
+
+    def close(self):
+        self.wait()
+        self._store.close()

@@ -1,0 +1,54 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8, MTP.
+
+61L d_model=7168 128H d_ff=2048(expert) vocab=129280, MoE 256e top-8.
+[arXiv:2412.19437; hf]  First 3 layers dense (d_ff 18432, per the HF config);
+the assigned d_ff=2048 is the routed-expert intermediate size.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v3-671b",
+    family="mla_moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=18432,  # dense-layer FFN (first_k_dense layers)
+    vocab=129_280,
+    n_experts=256,
+    top_k=8,
+    n_shared_experts=1,
+    moe_d_ff=2048,
+    first_k_dense=3,
+    use_mla=True,
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    use_mtp=True,
+    rope_theta=10_000.0,
+)
+
+SMOKE_CONFIG = ArchConfig(
+    name="deepseek-v3-671b-smoke",
+    family="mla_moe",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=512,
+    n_experts=8,
+    top_k=2,
+    n_shared_experts=1,
+    moe_d_ff=32,
+    first_k_dense=1,
+    use_mla=True,
+    q_lora_rank=32,
+    kv_lora_rank=16,
+    qk_nope_dim=16,
+    qk_rope_dim=8,
+    v_head_dim=16,
+    use_mtp=True,
+)

@@ -1,0 +1,28 @@
+"""paper-synthetic — tiny dense LM used by the paper-pattern examples and
+benchmarks (the paper itself has no model; this exercises the framework's
+own end-to-end path at ~100M scale for the quickstart driver)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="paper-synthetic",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab=32_000,
+    tie_embeddings=True,
+)
+
+SMOKE_CONFIG = ArchConfig(
+    name="paper-synthetic-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=256,
+    tie_embeddings=True,
+)

@@ -1,0 +1,37 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution (vision frontend STUB).
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064. [arXiv:2409.12191]
+input_specs() provides precomputed patch embeddings; M-RoPE uses
+(temporal, height, width) position ids with sections (16, 24, 24) over the
+128-dim rotary half (matching the HF config's mrope_section).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-72b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29_568,
+    vocab=152_064,
+    rope_theta=1_000_000.0,
+    use_mrope=True,
+    mrope_sections=(16, 24, 24),
+    vision_embeds=256,  # stub: 256 precomputed patch embeddings per sample
+)
+
+SMOKE_CONFIG = ArchConfig(
+    name="qwen2-vl-72b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=256,
+    use_mrope=True,
+    mrope_sections=(2, 3, 3),
+    vision_embeds=8,
+)

@@ -1,0 +1,30 @@
+"""rwkv6-7b [ssm] — Finch: attention-free, data-dependent decay.
+
+32L d_model=4096 d_ff=14336 vocab=65536. [arXiv:2404.05892]
+64 WKV heads of dim 64; decode state is O(1) per layer.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-7b",
+    family="rwkv",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,  # d_model / rwkv_head_dim
+    n_kv_heads=64,
+    d_ff=14_336,
+    vocab=65_536,
+    rwkv_head_dim=64,
+)
+
+SMOKE_CONFIG = ArchConfig(
+    name="rwkv6-7b-smoke",
+    family="rwkv",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=256,
+    rwkv_head_dim=16,
+)

@@ -1,0 +1,29 @@
+"""stablelm-1.6b [dense] — 24L d_model=2048 32H d_ff=5632 vocab=100352.
+[hf:stabilityai/stablelm-2-1_6b]  Partial rotary (25%) + LayerNorm."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-1.6b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=5632,
+    vocab=100_352,
+    rotary_pct=0.25,
+    norm="layernorm",
+)
+
+SMOKE_CONFIG = ArchConfig(
+    name="stablelm-1.6b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=256,
+    rotary_pct=0.25,
+    norm="layernorm",
+)

@@ -1,0 +1,37 @@
+"""whisper-medium [audio] — enc-dec, conv frontend STUB.
+
+24L (decoder; +24L encoder) d_model=1024 16H d_ff=4096 vocab=51865.
+[arXiv:2212.04356]  input_specs() provides precomputed frame embeddings
+(B, 1500, d_model) per the assignment's stub-frontend rule.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=51_865,
+    encoder_layers=24,
+    encoder_frames=1500,
+    norm="layernorm",
+    rotary_pct=0.0,  # whisper uses learned/sinusoidal positions, not rope
+)
+
+SMOKE_CONFIG = ArchConfig(
+    name="whisper-medium-smoke",
+    family="encdec",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=256,
+    encoder_layers=2,
+    encoder_frames=32,
+    norm="layernorm",
+    rotary_pct=0.0,
+)

@@ -1,0 +1,39 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention block.
+
+38L d_model=2048 32H d_ff=8192 vocab=32000, ssm_state=64. [arXiv:2411.15242]
+One shared attention+MLP block is reused every ``shared_attn_every`` mamba
+layers (per-invocation LoRA omitted — see DESIGN.md §7).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32_000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv=4,
+    shared_attn_every=6,
+)
+
+SMOKE_CONFIG = ArchConfig(
+    name="zamba2-1.2b-smoke",
+    family="hybrid",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=256,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=16,
+    ssm_conv=4,
+    shared_attn_every=2,
+)

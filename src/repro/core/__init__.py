@@ -1,0 +1,85 @@
+"""The paper's contribution: transparent object proxies + three patterns.
+
+- Proxy / Store / Connector: the low-level proxy model (paper §III).
+- ProxyFuture: distributed futures for pipelining (paper §IV-A).
+- StreamProducer/StreamConsumer: metadata/bulk-decoupled streaming (§IV-B).
+- OwnedProxy/RefProxy/RefMutProxy + Lifetimes: ownership model (§IV-C).
+"""
+from repro.core.connectors import (
+    Connector,
+    FileConnector,
+    InMemoryConnector,
+    SharedMemoryConnector,
+)
+from repro.core.executor import ProxyPolicy, StoreExecutor
+from repro.core.futures import ProxyFuture, wait_all
+from repro.core.lifetimes import (
+    ContextLifetime,
+    LeaseLifetime,
+    Lifetime,
+    StaticLifetime,
+)
+from repro.core.ownership import (
+    OwnedProxy,
+    OwnershipError,
+    RefMutProxy,
+    RefProxy,
+    borrow,
+    clone,
+    free,
+    into_owned,
+    mut_borrow,
+    owned_proxy,
+    release,
+    update,
+)
+from repro.core.proxy import Proxy, extract, get_factory, is_resolved, reset
+from repro.core.store import Store, StoreFactory
+from repro.core.streaming import (
+    FileLogPublisher,
+    FileLogSubscriber,
+    QueuePublisher,
+    QueueSubscriber,
+    StreamConsumer,
+    StreamProducer,
+)
+
+__all__ = [
+    "Connector",
+    "ContextLifetime",
+    "FileConnector",
+    "FileLogPublisher",
+    "FileLogSubscriber",
+    "InMemoryConnector",
+    "LeaseLifetime",
+    "Lifetime",
+    "OwnedProxy",
+    "OwnershipError",
+    "Proxy",
+    "ProxyFuture",
+    "ProxyPolicy",
+    "QueuePublisher",
+    "QueueSubscriber",
+    "RefMutProxy",
+    "RefProxy",
+    "SharedMemoryConnector",
+    "StaticLifetime",
+    "Store",
+    "StoreExecutor",
+    "StoreFactory",
+    "StreamConsumer",
+    "StreamProducer",
+    "borrow",
+    "clone",
+    "extract",
+    "free",
+    "get_factory",
+    "into_owned",
+    "is_resolved",
+    "mut_borrow",
+    "owned_proxy",
+    "release",
+    "reset",
+    "update",
+    "wait_all",
+]

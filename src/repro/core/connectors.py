@@ -1,0 +1,234 @@
+"""Mediated communication channels (paper §III: *connector* protocol).
+
+A connector is the low-level interface to a mediated channel — producer and
+consumer communicate indirectly through it, so they need not be alive at the
+same time.  The paper ships Redis/KeyDB/Globus/UCX/Margo connectors; on this
+single-node container we provide:
+
+- :class:`InMemoryConnector` — dict-backed, zero-copy, thread-shared.
+- :class:`FileConnector`     — directory-backed, cross-process, persistent.
+- :class:`SharedMemoryConnector` — POSIX shm backed, cross-process, fast.
+
+All satisfy the :class:`Connector` protocol so higher layers (Store, streams,
+futures, ownership) are transport-agnostic, exactly as in the paper.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+import uuid
+from typing import Iterable, Protocol, runtime_checkable
+
+
+def new_key() -> str:
+    return uuid.uuid4().hex
+
+
+@runtime_checkable
+class Connector(Protocol):
+    """Low-level mediated-channel interface."""
+
+    def put(self, key: str, data: bytes) -> None: ...
+
+    def get(self, key: str) -> bytes | None: ...
+
+    def exists(self, key: str) -> bool: ...
+
+    def evict(self, key: str) -> None: ...
+
+    def close(self) -> None: ...
+
+
+class InMemoryConnector:
+    """Thread-shared in-process object store (the 'Redis' of one process).
+
+    Class-level registry keyed by namespace so that factories reconstructed
+    from pickles within the same process find the same storage.
+    """
+
+    _registry: dict[str, dict[str, bytes]] = {}
+    _lock = threading.Lock()
+
+    def __init__(self, namespace: str | None = None):
+        self.namespace = namespace or new_key()
+        with InMemoryConnector._lock:
+            InMemoryConnector._registry.setdefault(self.namespace, {})
+
+    @property
+    def _store(self) -> dict[str, bytes]:
+        return InMemoryConnector._registry.setdefault(self.namespace, {})
+
+    def put(self, key: str, data: bytes) -> None:
+        self._store[key] = data
+
+    def get(self, key: str) -> bytes | None:
+        return self._store.get(key)
+
+    def exists(self, key: str) -> bool:
+        return key in self._store
+
+    def evict(self, key: str) -> None:
+        self._store.pop(key, None)
+
+    def keys(self) -> Iterable[str]:
+        return list(self._store.keys())
+
+    def close(self) -> None:
+        with InMemoryConnector._lock:
+            InMemoryConnector._registry.pop(self.namespace, None)
+
+    # picklable: same namespace reattaches in-process; this mirrors the
+    # paper's connectors whose pickled form carries server address info.
+    def __reduce__(self):
+        return (InMemoryConnector, (self.namespace,))
+
+
+class FileConnector:
+    """Filesystem-mediated channel (cross-process, survives restarts).
+
+    Writes are atomic (tmp + rename) so a concurrent ``get``/``exists``
+    never observes a partial object — required by the polling resolution
+    of distributed futures.
+    """
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.directory, key)
+
+    def put(self, key: str, data: bytes) -> None:
+        tmp = self._path(key) + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._path(key))
+
+    def get(self, key: str) -> bytes | None:
+        try:
+            with open(self._path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            return None
+
+    def exists(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def evict(self, key: str) -> None:
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def keys(self) -> Iterable[str]:
+        return [k for k in os.listdir(self.directory) if ".tmp." not in k]
+
+    def close(self) -> None:
+        pass
+
+    def __reduce__(self):
+        return (FileConnector, (self.directory,))
+
+
+class SharedMemoryConnector:
+    """POSIX shared-memory channel: cross-process without filesystem I/O.
+
+    Each object gets its own ``multiprocessing.shared_memory`` segment named
+    ``psx_<namespace>_<key>``; an index is not needed because keys are
+    content-addressed by the caller (Store).  This is the high-bandwidth
+    'UCX-like' transport of the single-node setting.
+    """
+
+    def __init__(self, namespace: str | None = None):
+        self.namespace = (namespace or new_key())[:12]
+
+    def _name(self, key: str) -> str:
+        # shm names have tight length limits on some platforms
+        return f"psx{self.namespace}{key[:32]}"
+
+    def put(self, key: str, data: bytes) -> None:
+        from multiprocessing import shared_memory
+
+        name = self._name(key)
+        try:
+            seg = shared_memory.SharedMemory(name=name, create=True, size=max(len(data), 1) + 8)
+        except FileExistsError:
+            old = shared_memory.SharedMemory(name=name)
+            old.close()
+            old.unlink()
+            seg = shared_memory.SharedMemory(name=name, create=True, size=max(len(data), 1) + 8)
+        try:
+            seg.buf[:8] = len(data).to_bytes(8, "little")
+            seg.buf[8 : 8 + len(data)] = data
+        finally:
+            seg.close()
+
+    def get(self, key: str) -> bytes | None:
+        from multiprocessing import shared_memory
+
+        try:
+            seg = shared_memory.SharedMemory(name=self._name(key))
+        except FileNotFoundError:
+            return None
+        try:
+            n = int.from_bytes(bytes(seg.buf[:8]), "little")
+            return bytes(seg.buf[8 : 8 + n])
+        finally:
+            seg.close()
+
+    def exists(self, key: str) -> bool:
+        from multiprocessing import shared_memory
+
+        try:
+            seg = shared_memory.SharedMemory(name=self._name(key))
+        except FileNotFoundError:
+            return False
+        seg.close()
+        return True
+
+    def evict(self, key: str) -> None:
+        from multiprocessing import shared_memory
+
+        try:
+            seg = shared_memory.SharedMemory(name=self._name(key))
+        except FileNotFoundError:
+            return
+        seg.close()
+        try:
+            seg.unlink()
+        except FileNotFoundError:
+            pass
+
+    def close(self) -> None:
+        pass
+
+    def __reduce__(self):
+        return (SharedMemoryConnector, (self.namespace,))
+
+
+def wait_for_key(
+    connector: Connector,
+    key: str,
+    timeout: float | None = None,
+    poll_min: float = 1e-4,
+    poll_max: float = 0.01,
+) -> bytes:
+    """Block until ``key`` exists in the channel, with exponential backoff.
+
+    This is the mediated-channel analogue of `Future.result()` used by
+    ProxyFuture resolution (paper §IV-A): producer and consumer synchronize
+    *through the store*, never through engine-specific primitives.
+    """
+    deadline = None if timeout is None else time.monotonic() + timeout
+    delay = poll_min
+    while True:
+        data = connector.get(key)
+        if data is not None:
+            return data
+        if deadline is not None and time.monotonic() > deadline:
+            raise TimeoutError(f"future target {key!r} not set within {timeout}s")
+        time.sleep(delay)
+        delay = min(delay * 2.0, poll_max)

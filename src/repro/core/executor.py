@@ -1,0 +1,114 @@
+"""StoreExecutor — engine shim that auto-proxies task I/O (paper §IV-C).
+
+Wraps any ``concurrent.futures``-style executor (thread/process pools here;
+Dask/Parsl/Globus Compute in the paper) and:
+
+1. auto-proxies task arguments/results larger than a policy threshold,
+2. tracks Ref/RefMut borrows passed into a task and releases them via a
+   done-callback on the task's future — "a reference passed to a task goes
+   out of scope when the task completes".
+"""
+from __future__ import annotations
+
+import pickle
+import sys
+from concurrent.futures import Executor, Future
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.core.ownership import (
+    OwnedProxy,
+    RefMutProxy,
+    RefProxy,
+    _state,
+    release_by_token,
+)
+from repro.core.proxy import Proxy
+from repro.core.store import Store
+
+
+@dataclass
+class ProxyPolicy:
+    """When to proxy task inputs/outputs (paper §VI: >1 kB for MOF-gen)."""
+
+    min_bytes: int = 1024
+    proxy_args: bool = True
+    proxy_results: bool = True
+
+    def should_proxy(self, obj: Any) -> bool:
+        if isinstance(obj, Proxy):
+            return False
+        try:
+            size = len(pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL))
+        except Exception:
+            return False
+        return size >= self.min_bytes
+
+
+def _proxy_result_wrapper(fn: Callable, store: Store, policy: ProxyPolicy):
+    def wrapped(*args, **kwargs):
+        out = fn(*args, **kwargs)
+        if policy.proxy_results and policy.should_proxy(out):
+            return store.proxy(out, evict_on_resolve=True)
+        return out
+
+    return wrapped
+
+
+class StoreExecutor:
+    """Engine-agnostic executor wrapper with proxy + ownership integration."""
+
+    def __init__(
+        self,
+        engine: Executor,
+        store: Store,
+        *,
+        policy: ProxyPolicy | None = None,
+    ):
+        self.engine = engine
+        self.store = store
+        self.policy = policy or ProxyPolicy()
+
+    def submit(self, fn: Callable, *args, **kwargs) -> Future:
+        borrows: list[tuple[Any, str]] = []  # (_RefState, token)
+
+        def xform(obj):
+            if isinstance(obj, (RefProxy, RefMutProxy)):
+                meta = object.__getattribute__(obj, "__proxy_metadata__")
+                borrows.append((_state(obj), meta["token"]))
+                return obj
+            if isinstance(obj, (OwnedProxy, Proxy)):
+                return obj
+            if self.policy.proxy_args and self.policy.should_proxy(obj):
+                return self.store.proxy(obj, evict_on_resolve=True)
+            return obj
+
+        args = tuple(xform(a) for a in args)
+        kwargs = {k: xform(v) for k, v in kwargs.items()}
+
+        fut = self.engine.submit(
+            _proxy_result_wrapper(fn, self.store, self.policy), *args, **kwargs
+        )
+
+        if borrows:
+
+            def _release(_f: Future, borrows=borrows):
+                for st, token in borrows:
+                    release_by_token(st, token)
+
+            fut.add_done_callback(_release)
+        return fut
+
+    def map(self, fn: Callable, *iterables):
+        futs = [self.submit(fn, *xs) for xs in zip(*iterables)]
+        for f in futs:
+            yield f.result()
+
+    def shutdown(self, wait: bool = True) -> None:
+        self.engine.shutdown(wait=wait)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()

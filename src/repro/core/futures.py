@@ -1,0 +1,80 @@
+"""ProxyFutures — distributed futures over mediated channels (paper §IV-A).
+
+A :class:`ProxyFuture` is created for an eventual value ``x``; any number of
+proxies can be minted from it *before* ``x`` exists.  A consumer resolving
+such a proxy blocks (in the store, with backoff polling — engine-agnostic)
+until the producer calls :meth:`set_result`.  Both the future and its
+proxies are picklable and self-contained, so they cross process/engine
+boundaries freely — the key property distinguishing them from
+``concurrent.futures`` / Dask / Ray futures (paper §VII).
+"""
+from __future__ import annotations
+
+import time
+from typing import Generic, TypeVar
+
+from repro.core.connectors import wait_for_key
+from repro.core.proxy import Proxy
+from repro.core.store import Store, StoreFactory
+
+T = TypeVar("T")
+
+
+class ProxyFuture(Generic[T]):
+    """Future whose result is communicated through a Store."""
+
+    def __init__(self, store: Store, key: str, *, timeout: float | None = None):
+        self.store = store
+        self.key = key
+        self.timeout = timeout
+
+    # -- producer side ---------------------------------------------------------
+    def set_result(self, obj: T) -> None:
+        if self.done():
+            raise RuntimeError(f"future {self.key!r} already set")
+        self.store.put(obj, key=self.key)
+
+    # -- consumer side (explicit) ------------------------------------------------
+    def done(self) -> bool:
+        return self.store.exists(self.key)
+
+    def result(self, timeout: float | None = None) -> T:
+        data = wait_for_key(
+            self.store.connector, self.key, timeout=timeout or self.timeout
+        )
+        return self.store.deserializer(data)
+
+    # -- consumer side (implicit: the paper's contribution) ------------------------
+    def proxy(self) -> Proxy[T]:
+        """Mint a transparent proxy that blocks just-in-time on first use."""
+        factory = StoreFactory(
+            self.key,
+            self.store.name,
+            self.store.connector,
+            block=True,
+            timeout=self.timeout,
+        )
+        return Proxy(factory, metadata={"key": self.key, "store": self.store.name,
+                                        "future": True})
+
+    def cancel(self) -> None:
+        self.store.evict(self.key)
+
+    def __reduce__(self):
+        return (_rebuild_future, (self.store, self.key, self.timeout))
+
+    def __repr__(self):
+        state = "done" if self.done() else "pending"
+        return f"ProxyFuture(key={self.key!r}, {state})"
+
+
+def _rebuild_future(store, key, timeout):
+    return ProxyFuture(store, key, timeout=timeout)
+
+
+def wait_all(futures: list[ProxyFuture], timeout: float | None = None) -> None:
+    """Block until every future is set (barrier over the mediated channel)."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    for f in futures:
+        remaining = None if deadline is None else max(0.0, deadline - time.monotonic())
+        wait_for_key(f.store.connector, f.key, timeout=remaining if timeout else None)

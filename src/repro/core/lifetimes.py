@@ -1,0 +1,119 @@
+"""Lifetimes — scoped cleanup of proxied objects (paper §IV-C, Listing 4).
+
+A :class:`Lifetime` is attached to proxies/keys at creation time and evicts
+all associated objects when it ends.  Three concrete types, as in the paper:
+
+- :class:`ContextLifetime` — ends when the ``with`` block exits.
+- :class:`LeaseLifetime`   — ends when a (extendable) time lease expires.
+- :class:`StaticLifetime`  — ends at interpreter exit.
+"""
+from __future__ import annotations
+
+import atexit
+import threading
+import time
+from typing import Iterable
+
+from repro.core.proxy import Proxy
+from repro.core.store import Store
+
+
+class Lifetime:
+    """Base lifetime: a named scope owning a set of (store, key) pairs."""
+
+    def __init__(self) -> None:
+        self._entries: list[tuple[Store, str]] = []
+        self._done = False
+        self._lock = threading.Lock()
+
+    def add(self, store: Store, key: str) -> None:
+        with self._lock:
+            if self._done:
+                raise RuntimeError("cannot associate object with ended lifetime")
+            self._entries.append((store, key))
+
+    def add_proxy(self, proxy: Proxy) -> None:
+        meta = object.__getattribute__(proxy, "__proxy_metadata__")
+        store = Store.get_or_reattach(
+            meta["store"], object.__getattribute__(proxy, "__factory__").connector
+        )
+        self.add(store, meta["key"])
+
+    def done(self) -> bool:
+        return self._done
+
+    def close(self) -> None:
+        with self._lock:
+            if self._done:
+                return
+            self._done = True
+            entries, self._entries = self._entries, []
+        for store, key in entries:
+            store.evict(key)
+
+    def keys(self) -> Iterable[str]:
+        return [k for _, k in self._entries]
+
+
+class ContextLifetime(Lifetime):
+    """Maps proxy lifetimes to a discrete code block."""
+
+    def __enter__(self) -> "ContextLifetime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class LeaseLifetime(Lifetime):
+    """Time-leased lifetime: evicts objects when the lease expires.
+
+    Decentralized (no shared state): cleanup runs from a local timer thread,
+    mirroring the lease mechanism of Gray & Cheriton the paper cites.
+    """
+
+    def __init__(self, store: Store | None = None, *, expiry: float = 10.0):
+        super().__init__()
+        self._default_store = store
+        self._expires_at = time.monotonic() + expiry
+        self._timer_lock = threading.Lock()
+        self._timer: threading.Timer | None = None
+        self._arm()
+
+    def _arm(self) -> None:
+        with self._timer_lock:
+            if self._timer is not None:
+                self._timer.cancel()
+            delay = max(0.0, self._expires_at - time.monotonic())
+            self._timer = threading.Timer(delay, self._maybe_expire)
+            self._timer.daemon = True
+            self._timer.start()
+
+    def _maybe_expire(self) -> None:
+        if time.monotonic() >= self._expires_at:
+            self.close()
+        else:  # lease was extended since this timer was armed
+            self._arm()
+
+    def extend(self, seconds: float) -> None:
+        if self._done:
+            raise RuntimeError("cannot extend an expired lease")
+        self._expires_at += seconds
+        self._arm()
+
+    def remaining(self) -> float:
+        return max(0.0, self._expires_at - time.monotonic())
+
+    def close(self) -> None:
+        with self._timer_lock:
+            if self._timer is not None:
+                self._timer.cancel()
+        super().close()
+
+
+class StaticLifetime(Lifetime):
+    """Objects persist for the remainder of the program."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        atexit.register(self.close)

@@ -1,0 +1,309 @@
+"""Ownership pattern — Rust-style borrowing for proxies (paper §IV-C).
+
+Three proxy reference types with runtime-enforced rules:
+
+- :class:`OwnedProxy` — sole owner; target evicted when it goes out of scope.
+- :class:`RefProxy` — immutable borrow; any number may exist at a time.
+- :class:`RefMutProxy` — mutable borrow; at most one, and never alongside
+  RefProxies.
+
+Rules (c.f. Rust): one owner per global object; a value is deleted when its
+owner goes out of scope; borrows must not outlive the owner.  Violations
+raise :class:`OwnershipError` at runtime.
+
+Free functions (paper Listing 3 prefers functions over methods so target
+attributes are never clobbered): ``owned_proxy``, ``into_owned``, ``borrow``,
+``mut_borrow``, ``clone``, ``update``, ``release``, ``free``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, TypeVar
+
+from repro.core.connectors import new_key
+from repro.core.proxy import Proxy, _resolve, is_resolved
+from repro.core.store import Store, StoreFactory
+
+T = TypeVar("T")
+
+
+class OwnershipError(RuntimeError):
+    """Violation of ownership/borrowing rules."""
+
+
+class _RefState:
+    """Client-side bookkeeping shared by an owner and its borrows."""
+
+    __slots__ = (
+        "store_name",
+        "connector",
+        "key",
+        "lock",
+        "refs",
+        "mut_ref",
+        "valid",
+        "moved",
+    )
+
+    def __init__(self, store_name: str, connector, key: str):
+        self.store_name = store_name
+        self.connector = connector
+        self.key = key
+        self.lock = threading.Lock()
+        self.refs: set[str] = set()  # outstanding immutable borrow tokens
+        self.mut_ref: str | None = None  # outstanding mutable borrow token
+        self.valid = True  # False once freed
+        self.moved = False  # True once ownership yielded elsewhere
+
+
+def _state(p: Proxy) -> _RefState:
+    st = object.__getattribute__(p, "__owner_state__")
+    if st is None:
+        raise OwnershipError("proxy has no ownership state")
+    return st
+
+
+def _mk(cls, state: _RefState, *, token: str | None = None, remote: bool = False) -> Proxy:
+    factory = StoreFactory(state.key, state.store_name, state.connector)
+    p = Proxy.__new__(cls)
+    object.__setattr__(p, "__factory__", factory)
+    from repro.core.proxy import _UNRESOLVED
+
+    object.__setattr__(p, "__target_cache__", _UNRESOLVED)
+    object.__setattr__(
+        p,
+        "__proxy_metadata__",
+        {"key": state.key, "store": state.store_name, "token": token, "remote": remote},
+    )
+    object.__setattr__(p, "__owner_state__", state)
+    return p
+
+
+class OwnedProxy(Proxy[T]):
+    """Owning reference: exactly one per global object; frees on del."""
+
+    def __del__(self):
+        try:
+            st = object.__getattribute__(self, "__owner_state__")
+        except Exception:
+            return
+        if st is None or st.moved or not st.valid:
+            return
+        if st.refs or st.mut_ref:
+            # Out-of-scope owner with live borrows: rule violation.  __del__
+            # exceptions don't propagate, so record + raise for visibility.
+            st.valid = False
+            raise OwnershipError(
+                f"OwnedProxy({st.key}) destroyed while borrows outstanding: "
+                f"{len(st.refs)} refs, mut={st.mut_ref is not None}"
+            )
+        st.valid = False
+        try:
+            st.connector.evict(st.key)
+        except Exception:
+            pass
+
+    def __reduce__(self):
+        # Pickling an OwnedProxy transfers ownership: the local copy is
+        # marked moved (its __del__ becomes a no-op) and the remote side
+        # reconstructs a full owner.
+        st = _state(self)
+        with st.lock:
+            if st.refs or st.mut_ref:
+                raise OwnershipError(
+                    f"cannot move OwnedProxy({st.key}) while borrows outstanding"
+                )
+            if not st.valid:
+                raise OwnershipError(f"use of freed OwnedProxy({st.key})")
+            st.moved = True
+        return (_rebuild_owned, (st.store_name, st.connector, st.key))
+
+
+class RefProxy(Proxy[T]):
+    """Immutable borrow: read-only view; release on del / task completion."""
+
+    def __del__(self):
+        try:
+            st = object.__getattribute__(self, "__owner_state__")
+            meta = object.__getattribute__(self, "__proxy_metadata__")
+        except Exception:
+            return
+        if st is None or meta.get("remote"):
+            return
+        with st.lock:
+            st.refs.discard(meta.get("token"))
+
+    def __reduce__(self):
+        # A pickled borrow is detached: the remote copy does not decrement
+        # on deletion — the client-side executor releases via callback when
+        # the task completes (paper: "a reference passed to a task goes out
+        # of scope when the task completes").
+        st = _state(self)
+        meta = object.__getattribute__(self, "__proxy_metadata__")
+        return (
+            _rebuild_borrow,
+            (type(self), st.store_name, st.connector, st.key, meta.get("token")),
+        )
+
+
+class RefMutProxy(Proxy[T]):
+    """Mutable borrow: sole writer; must be released (or task-completed)."""
+
+    def __del__(self):
+        try:
+            st = object.__getattribute__(self, "__owner_state__")
+            meta = object.__getattribute__(self, "__proxy_metadata__")
+        except Exception:
+            return
+        if st is None or meta.get("remote"):
+            return
+        with st.lock:
+            if st.mut_ref == meta.get("token"):
+                st.mut_ref = None
+
+    __reduce__ = RefProxy.__reduce__
+
+
+def _rebuild_owned(store_name, connector, key):
+    st = _RefState(store_name, connector, key)
+    return _mk(OwnedProxy, st)
+
+
+def _rebuild_borrow(cls, store_name, connector, key, token):
+    st = _RefState(store_name, connector, key)
+    return _mk(cls, st, token=token, remote=True)
+
+
+# ---------------------------------------------------------------------------
+# Free functions (paper Listing 3)
+# ---------------------------------------------------------------------------
+
+
+def owned_proxy(store: Store, obj: T, *, key: str | None = None) -> OwnedProxy[T]:
+    """Serialize ``obj`` into the store and return its (sole) owner proxy."""
+    key = store.put(obj, key=key)
+    st = _RefState(store.name, store.connector, key)
+    return _mk(OwnedProxy, st)
+
+
+def into_owned(proxy: Proxy[T]) -> OwnedProxy[T]:
+    """Promote a plain proxy to an owned one (caller asserts uniqueness)."""
+    if isinstance(proxy, (OwnedProxy, RefProxy, RefMutProxy)):
+        raise OwnershipError("proxy already participates in ownership")
+    meta = object.__getattribute__(proxy, "__proxy_metadata__")
+    factory = object.__getattribute__(proxy, "__factory__")
+    if not isinstance(factory, StoreFactory):
+        raise OwnershipError("only store-backed proxies can become owned")
+    st = _RefState(meta["store"], factory.connector, meta["key"])
+    return _mk(OwnedProxy, st)
+
+
+def borrow(owner: OwnedProxy[T]) -> RefProxy[T]:
+    st = _state(owner)
+    with st.lock:
+        if not st.valid or st.moved:
+            raise OwnershipError(f"borrow of invalid/moved OwnedProxy({st.key})")
+        if st.mut_ref is not None:
+            raise OwnershipError(
+                f"cannot borrow OwnedProxy({st.key}): mutable borrow outstanding"
+            )
+        token = new_key()
+        st.refs.add(token)
+    return _mk(RefProxy, st, token=token)
+
+
+def mut_borrow(owner: OwnedProxy[T]) -> RefMutProxy[T]:
+    st = _state(owner)
+    with st.lock:
+        if not st.valid or st.moved:
+            raise OwnershipError(f"mut_borrow of invalid/moved OwnedProxy({st.key})")
+        if st.mut_ref is not None or st.refs:
+            raise OwnershipError(
+                f"cannot mut_borrow OwnedProxy({st.key}): borrows outstanding "
+                f"({len(st.refs)} refs, mut={st.mut_ref is not None})"
+            )
+        token = new_key()
+        st.mut_ref = token
+    return _mk(RefMutProxy, st, token=token)
+
+
+def clone(owner: OwnedProxy[T]) -> OwnedProxy[T]:
+    """Deep-copy the global object under a fresh key with a fresh owner."""
+    st = _state(owner)
+    if not st.valid:
+        raise OwnershipError(f"clone of freed OwnedProxy({st.key})")
+    data = st.connector.get(st.key)
+    if data is None:
+        raise OwnershipError(f"target of OwnedProxy({st.key}) missing")
+    nk = new_key()
+    st.connector.put(nk, data)
+    return _mk(OwnedProxy, _RefState(st.store_name, st.connector, nk))
+
+
+def update(proxy: Proxy[T]) -> None:
+    """Write the locally-mutated resolved copy back to the global store.
+
+    Allowed for owners (no outstanding borrows) and mutable borrows only.
+    """
+    st = _state(proxy)
+    if isinstance(proxy, RefProxy):
+        raise OwnershipError("cannot update through an immutable RefProxy")
+    if isinstance(proxy, OwnedProxy):
+        with st.lock:
+            if st.mut_ref is not None:
+                raise OwnershipError(
+                    "owner cannot update while a mutable borrow is outstanding"
+                )
+    if not is_resolved(proxy):
+        raise OwnershipError("nothing to update: proxy never resolved/mutated")
+    store = Store.get_or_reattach(st.store_name, st.connector)
+    store.put(_resolve(proxy), key=st.key)
+
+
+def release(ref: RefProxy | RefMutProxy) -> None:
+    """Explicitly end a borrow (idempotent)."""
+    st = _state(ref)
+    meta = object.__getattribute__(ref, "__proxy_metadata__")
+    token = meta.get("token")
+    with st.lock:
+        st.refs.discard(token)
+        if st.mut_ref == token:
+            st.mut_ref = None
+    meta["remote"] = True  # disarm __del__
+
+
+def release_by_token(st: _RefState, token: str) -> None:
+    with st.lock:
+        st.refs.discard(token)
+        if st.mut_ref == token:
+            st.mut_ref = None
+
+
+def free(owner: OwnedProxy) -> None:
+    """Explicitly free the owned object (what going out of scope does)."""
+    st = _state(owner)
+    with st.lock:
+        if not st.valid:
+            return
+        if st.moved:
+            raise OwnershipError(f"free of moved OwnedProxy({st.key})")
+        if st.refs or st.mut_ref:
+            raise OwnershipError(
+                f"free of OwnedProxy({st.key}) while borrows outstanding"
+            )
+        st.valid = False
+    st.connector.evict(st.key)
+
+
+def is_valid(p: Proxy) -> bool:
+    try:
+        st = _state(p)
+    except OwnershipError:
+        return False
+    return st.valid and not st.moved
+
+
+def num_borrows(owner: OwnedProxy) -> tuple[int, bool]:
+    st = _state(owner)
+    with st.lock:
+        return len(st.refs), st.mut_ref is not None

@@ -1,0 +1,318 @@
+"""Transparent lazy object proxy (paper §III).
+
+A :class:`Proxy` wraps a *factory* — a zero-argument callable returning the
+target object.  The proxy forwards every operation to the target, resolving
+it just-in-time on first use and caching it locally.  Transparency means
+``isinstance(p, type(target))`` is true because ``__class__`` is forwarded.
+
+This is the low-level building block on which the three paper patterns
+(futures, streaming, ownership) are built.
+"""
+from __future__ import annotations
+
+import operator
+from typing import Any, Callable, Generic, TypeVar
+
+T = TypeVar("T")
+
+_UNRESOLVED = object()
+
+# Attributes that live on the proxy itself, never forwarded.
+_PROXY_SLOTS = frozenset(
+    (
+        "__factory__",
+        "__target_cache__",
+        "__proxy_metadata__",
+        "__owner_state__",  # used by the ownership pattern (ownership.py)
+    )
+)
+
+
+class Factory(Generic[T]):
+    """Base factory: callable that materializes the target object.
+
+    Factories must be serializable (picklable) so proxies can travel across
+    process/machine boundaries and still resolve (paper §III: "no external
+    information is required to resolve a proxy").
+    """
+
+    def __call__(self) -> T:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class SimpleFactory(Factory[T]):
+    """Factory wrapping an already-available object (eager proxy)."""
+
+    def __init__(self, obj: T):
+        self.obj = obj
+
+    def __call__(self) -> T:
+        return self.obj
+
+
+def _resolve(proxy: "Proxy") -> Any:
+    tgt = object.__getattribute__(proxy, "__target_cache__")
+    if tgt is _UNRESOLVED:
+        factory = object.__getattribute__(proxy, "__factory__")
+        tgt = factory()
+        object.__setattr__(proxy, "__target_cache__", tgt)
+    return tgt
+
+
+def is_resolved(proxy: "Proxy") -> bool:
+    return object.__getattribute__(proxy, "__target_cache__") is not _UNRESOLVED
+
+
+def extract(proxy: "Proxy") -> Any:
+    """Return the resolved target object (resolving if needed)."""
+    return _resolve(proxy)
+
+
+def get_factory(proxy: "Proxy") -> Factory:
+    return object.__getattribute__(proxy, "__factory__")
+
+
+def reset(proxy: "Proxy") -> None:
+    """Drop the locally cached target so the next use re-resolves."""
+    object.__setattr__(proxy, "__target_cache__", _UNRESOLVED)
+
+
+class Proxy(Generic[T]):
+    """Lazy transparent object proxy.
+
+    ``Proxy(factory)`` defers ``factory()`` until the first operation on the
+    proxy.  All dunder/attribute/operator traffic forwards to the target.
+    """
+
+    def __init__(self, factory: Callable[[], T], *, metadata: dict | None = None):
+        object.__setattr__(self, "__factory__", factory)
+        object.__setattr__(self, "__target_cache__", _UNRESOLVED)
+        object.__setattr__(self, "__proxy_metadata__", metadata or {})
+
+    # -- pickling: a proxy serializes as (factory, metadata); the cached
+    # target is intentionally dropped (pass-by-reference semantics).
+    def __reduce__(self):
+        return (
+            _reconstruct_proxy,
+            (
+                object.__getattribute__(self, "__factory__"),
+                object.__getattribute__(self, "__proxy_metadata__"),
+                type(self),
+            ),
+        )
+
+    def __reduce_ex__(self, protocol):
+        return self.__reduce__()
+
+    # -- attribute protocol ------------------------------------------------
+    def __getattribute__(self, name):
+        if name in _PROXY_SLOTS or name in ("__reduce__", "__reduce_ex__", "__init__"):
+            return object.__getattribute__(self, name)
+        if name == "__class__":
+            return type(_resolve(self))
+        return getattr(_resolve(self), name)
+
+    def __setattr__(self, name, value):
+        if name in _PROXY_SLOTS:
+            object.__setattr__(self, name, value)
+        else:
+            setattr(_resolve(self), name, value)
+
+    def __delattr__(self, name):
+        delattr(_resolve(self), name)
+
+    # -- repr / str ---------------------------------------------------------
+    def __repr__(self):
+        if is_resolved(self):
+            return repr(_resolve(self))
+        return f"<Proxy unresolved factory={object.__getattribute__(self, '__factory__')!r}>"
+
+    def __str__(self):
+        return str(_resolve(self))
+
+    def __format__(self, spec):
+        return format(_resolve(self), spec)
+
+    # -- comparison / hashing ------------------------------------------------
+    def __eq__(self, other):
+        return _resolve(self) == other
+
+    def __ne__(self, other):
+        return _resolve(self) != other
+
+    def __lt__(self, other):
+        return _resolve(self) < other
+
+    def __le__(self, other):
+        return _resolve(self) <= other
+
+    def __gt__(self, other):
+        return _resolve(self) > other
+
+    def __ge__(self, other):
+        return _resolve(self) >= other
+
+    def __hash__(self):
+        return hash(_resolve(self))
+
+    def __bool__(self):
+        return bool(_resolve(self))
+
+    # -- containers -----------------------------------------------------------
+    def __len__(self):
+        return len(_resolve(self))
+
+    def __getitem__(self, k):
+        return _resolve(self)[k]
+
+    def __setitem__(self, k, v):
+        _resolve(self)[k] = v
+
+    def __delitem__(self, k):
+        del _resolve(self)[k]
+
+    def __iter__(self):
+        return iter(_resolve(self))
+
+    def __contains__(self, item):
+        return item in _resolve(self)
+
+    def __next__(self):
+        return next(_resolve(self))
+
+    # -- callables -------------------------------------------------------------
+    def __call__(self, *args, **kwargs):
+        return _resolve(self)(*args, **kwargs)
+
+    # -- numeric protocol --------------------------------------------------------
+    def __add__(self, o):
+        return _resolve(self) + o
+
+    def __radd__(self, o):
+        return o + _resolve(self)
+
+    def __sub__(self, o):
+        return _resolve(self) - o
+
+    def __rsub__(self, o):
+        return o - _resolve(self)
+
+    def __mul__(self, o):
+        return _resolve(self) * o
+
+    def __rmul__(self, o):
+        return o * _resolve(self)
+
+    def __truediv__(self, o):
+        return _resolve(self) / o
+
+    def __rtruediv__(self, o):
+        return o / _resolve(self)
+
+    def __floordiv__(self, o):
+        return _resolve(self) // o
+
+    def __rfloordiv__(self, o):
+        return o // _resolve(self)
+
+    def __mod__(self, o):
+        return _resolve(self) % o
+
+    def __rmod__(self, o):
+        return o % _resolve(self)
+
+    def __pow__(self, o):
+        return _resolve(self) ** o
+
+    def __rpow__(self, o):
+        return o ** _resolve(self)
+
+    def __matmul__(self, o):
+        return operator.matmul(_resolve(self), o)
+
+    def __rmatmul__(self, o):
+        return operator.matmul(o, _resolve(self))
+
+    def __neg__(self):
+        return -_resolve(self)
+
+    def __pos__(self):
+        return +_resolve(self)
+
+    def __abs__(self):
+        return abs(_resolve(self))
+
+    def __invert__(self):
+        return ~_resolve(self)
+
+    def __and__(self, o):
+        return _resolve(self) & o
+
+    def __rand__(self, o):
+        return o & _resolve(self)
+
+    def __or__(self, o):
+        return _resolve(self) | o
+
+    def __ror__(self, o):
+        return o | _resolve(self)
+
+    def __xor__(self, o):
+        return _resolve(self) ^ o
+
+    def __rxor__(self, o):
+        return o ^ _resolve(self)
+
+    def __lshift__(self, o):
+        return _resolve(self) << o
+
+    def __rshift__(self, o):
+        return _resolve(self) >> o
+
+    def __int__(self):
+        return int(_resolve(self))
+
+    def __float__(self):
+        return float(_resolve(self))
+
+    def __index__(self):
+        return operator.index(_resolve(self))
+
+    def __round__(self, n=None):
+        return round(_resolve(self), n) if n is not None else round(_resolve(self))
+
+    # -- numpy/jax interop: forward the array protocol so a Proxy of an
+    # ndarray can be consumed by jnp/np functions directly.
+    def __array__(self, dtype=None, copy=None):
+        import numpy as np
+
+        tgt = _resolve(self)
+        arr = np.asarray(tgt)
+        if dtype is not None:
+            arr = arr.astype(dtype, copy=False)
+        return arr
+
+    @property
+    def __array_interface__(self):  # pragma: no cover - numpy internal path
+        return _resolve(self).__array_interface__
+
+    def __jax_array__(self):
+        import jax.numpy as jnp
+
+        return jnp.asarray(_resolve(self))
+
+    # -- context manager --------------------------------------------------------
+    def __enter__(self):
+        return _resolve(self).__enter__()
+
+    def __exit__(self, *exc):
+        return _resolve(self).__exit__(*exc)
+
+
+def _reconstruct_proxy(factory, metadata, cls):
+    # Ownership proxies override pickling; plain proxies rebuild lazily.
+    p = Proxy.__new__(cls)
+    object.__setattr__(p, "__factory__", factory)
+    object.__setattr__(p, "__target_cache__", _UNRESOLVED)
+    object.__setattr__(p, "__proxy_metadata__", metadata or {})
+    return p

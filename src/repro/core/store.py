@@ -1,0 +1,250 @@
+"""High-level Store interface (paper §III).
+
+``Store.proxy(obj)`` serializes the target, puts it in the mediated channel
+via the connector, builds a :class:`StoreFactory` with the metadata needed
+for just-in-time retrieval, and returns a transparent :class:`Proxy`.
+
+The store also exposes the three pattern entry points:
+``future()`` (§IV-A), stream producers/consumers consume stores directly
+(§IV-B), and ``owned_proxy()`` (§IV-C).
+"""
+from __future__ import annotations
+
+import io
+import pickle
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Generic, TypeVar
+
+from repro.core.connectors import Connector, InMemoryConnector, new_key, wait_for_key
+from repro.core.proxy import Factory, Proxy
+
+T = TypeVar("T")
+
+# ---------------------------------------------------------------------------
+# Serialization: pickle with a jax-array-aware path.  jax.Array does not
+# pickle across processes reliably; convert to numpy on the way in and let
+# consumers re-device_put (just-in-time resolution does this lazily).
+# ---------------------------------------------------------------------------
+
+
+class _JaxAwarePickler(pickle.Pickler):
+    """Pickler that converts jax arrays to numpy on the way into the store.
+
+    Consumers re-``device_put`` lazily on resolution — the proxy's
+    just-in-time semantics make this transparent.
+    """
+
+    def reducer_override(self, o):
+        import sys
+
+        # sys.modules check, NOT an import: if jax was never imported, ``o``
+        # cannot be a jax array, and a lazy ``import jax`` here would inject
+        # a ~1.5 s GIL-holding import into the first put() of a process that
+        # never touches jax (observed in the Fig-5 benchmark).
+        jax = sys.modules.get("jax")
+        if jax is None:
+            return NotImplemented
+        import numpy as np
+
+        if isinstance(o, jax.Array):
+            return (np.asarray, (np.asarray(o),))
+        return NotImplemented
+
+
+def default_serializer(obj: Any) -> bytes:
+    buf = io.BytesIO()
+    _JaxAwarePickler(buf, protocol=pickle.HIGHEST_PROTOCOL).dump(obj)
+    return buf.getvalue()
+
+
+def default_deserializer(data: bytes) -> Any:
+    return pickle.loads(data)
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StoreMetrics:
+    """Instrumentation used by the paper-style benchmarks."""
+
+    put_count: int = 0
+    put_bytes: int = 0
+    put_time: float = 0.0
+    get_count: int = 0
+    get_bytes: int = 0
+    get_time: float = 0.0
+    evict_count: int = 0
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+_STORE_REGISTRY: dict[str, "Store"] = {}
+_REGISTRY_LOCK = threading.Lock()
+
+
+class StoreFactory(Factory[T]):
+    """Factory that retrieves a serialized target from a mediated channel.
+
+    Self-contained: carries the store name + connector (picklable), so a
+    proxy can resolve anywhere with "no external information" (paper §III).
+    """
+
+    def __init__(
+        self,
+        key: str,
+        store_name: str,
+        connector: Connector,
+        *,
+        evict_on_resolve: bool = False,
+        block: bool = False,
+        timeout: float | None = None,
+    ):
+        self.key = key
+        self.store_name = store_name
+        self.connector = connector
+        self.evict_on_resolve = evict_on_resolve
+        self.block = block
+        self.timeout = timeout
+
+    def __call__(self) -> T:
+        store = Store.get_or_reattach(self.store_name, self.connector)
+        if self.block:
+            data = wait_for_key(self.connector, self.key, timeout=self.timeout)
+            t0 = time.perf_counter()
+        else:
+            t0 = time.perf_counter()
+            data = self.connector.get(self.key)
+            if data is None:
+                raise KeyError(
+                    f"proxy target {self.key!r} missing from store "
+                    f"{self.store_name!r} (freed early? see ownership rules)"
+                )
+        obj = store.deserializer(data)
+        store.metrics.get_count += 1
+        store.metrics.get_bytes += len(data)
+        store.metrics.get_time += time.perf_counter() - t0
+        if self.evict_on_resolve:
+            self.connector.evict(self.key)
+        return obj
+
+    def __repr__(self):
+        return f"StoreFactory(key={self.key!r}, store={self.store_name!r})"
+
+
+class Store(Generic[T]):
+    """High-level interface for creating proxies of objects."""
+
+    def __init__(
+        self,
+        name: str,
+        connector: Connector | None = None,
+        *,
+        serializer: Callable[[Any], bytes] = default_serializer,
+        deserializer: Callable[[bytes], Any] = default_deserializer,
+        cache_size: int = 16,
+        register: bool = True,
+    ):
+        self.name = name
+        self.connector = connector if connector is not None else InMemoryConnector(name)
+        self.serializer = serializer
+        self.deserializer = deserializer
+        self.metrics = StoreMetrics()
+        self._closed = False
+        if register:
+            with _REGISTRY_LOCK:
+                _STORE_REGISTRY[name] = self
+
+    # -- registry ------------------------------------------------------------
+    @classmethod
+    def get_or_reattach(cls, name: str, connector: Connector) -> "Store":
+        with _REGISTRY_LOCK:
+            st = _STORE_REGISTRY.get(name)
+        if st is None:
+            st = Store(name, connector)
+        return st
+
+    # -- raw k/v --------------------------------------------------------------
+    def put(self, obj: Any, key: str | None = None) -> str:
+        key = key or new_key()
+        data = self.serializer(obj)
+        t0 = time.perf_counter()
+        self.connector.put(key, data)
+        self.metrics.put_time += time.perf_counter() - t0
+        self.metrics.put_count += 1
+        self.metrics.put_bytes += len(data)
+        return key
+
+    def get(self, key: str, default: Any = None) -> Any:
+        data = self.connector.get(key)
+        if data is None:
+            return default
+        self.metrics.get_count += 1
+        self.metrics.get_bytes += len(data)
+        return self.deserializer(data)
+
+    def exists(self, key: str) -> bool:
+        return self.connector.exists(key)
+
+    def evict(self, key: str) -> None:
+        self.connector.evict(key)
+        self.metrics.evict_count += 1
+
+    # -- proxies ---------------------------------------------------------------
+    def proxy(
+        self,
+        obj: T,
+        *,
+        evict_on_resolve: bool = False,
+        lifetime: "Lifetime | None" = None,
+        key: str | None = None,
+    ) -> Proxy[T]:
+        """Serialize ``obj`` into the channel and return a lazy proxy of it."""
+        key = self.put(obj, key=key)
+        factory = StoreFactory(
+            key, self.name, self.connector, evict_on_resolve=evict_on_resolve
+        )
+        p = Proxy(factory, metadata={"key": key, "store": self.name})
+        if lifetime is not None:
+            lifetime.add(self, key)
+        return p
+
+    def proxy_from_key(self, key: str, *, block: bool = False) -> Proxy[T]:
+        """Build a proxy for an object already (or eventually) in the channel."""
+        factory = StoreFactory(key, self.name, self.connector, block=block)
+        return Proxy(factory, metadata={"key": key, "store": self.name})
+
+    # -- pattern entry points ----------------------------------------------------
+    def future(self, *, timeout: float | None = None) -> "ProxyFuture[T]":
+        from repro.core.futures import ProxyFuture
+
+        return ProxyFuture(self, key=new_key(), timeout=timeout)
+
+    def owned_proxy(self, obj: T, **kw) -> "OwnedProxy[T]":
+        from repro.core.ownership import owned_proxy
+
+        return owned_proxy(self, obj, **kw)
+
+    # -- lifecycle ---------------------------------------------------------------
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            with _REGISTRY_LOCK:
+                _STORE_REGISTRY.pop(self.name, None)
+            self.connector.close()
+
+    def __enter__(self) -> "Store":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __reduce__(self):
+        # Reattach by (name, connector) on the far side.
+        return (Store.get_or_reattach, (self.name, self.connector))
+
+    def __repr__(self):
+        return f"Store(name={self.name!r}, connector={type(self.connector).__name__})"

@@ -1,0 +1,354 @@
+"""ProxyStream — object streaming with metadata/bulk decoupling (paper §IV-B).
+
+``StreamProducer.send(topic, obj)`` (1) puts ``obj`` in the topic's Store,
+(2) builds a small *event* carrying user metadata + object location, and
+(3) publishes the event via a :class:`Publisher`.  A ``StreamConsumer``
+iterates events from a :class:`Subscriber` and yields *proxies*: the bulk
+bytes move only between the producer's store and whichever process finally
+resolves the proxy — a dispatcher in between touches metadata only.
+
+Brokers provided: in-process queue (Redis-pub/sub stand-in) and append-only
+file log (Kafka stand-in, cross-process).  The Publisher/Subscriber
+protocols mirror the paper so real Kafka/Redis/ZeroMQ shims would slot in.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Iterator, Protocol, runtime_checkable
+
+from repro.core.proxy import Proxy
+from repro.core.store import Store, StoreFactory
+
+_END = "__stream_end__"
+
+
+@runtime_checkable
+class Publisher(Protocol):
+    def send_event(self, topic: str, event: bytes) -> None: ...
+
+    def close(self) -> None: ...
+
+
+@runtime_checkable
+class Subscriber(Protocol):
+    def next_event(self, timeout: float | None = None) -> bytes: ...
+
+    def close(self) -> None: ...
+
+
+# ---------------------------------------------------------------------------
+# In-process queue broker (fanout pub/sub)
+# ---------------------------------------------------------------------------
+
+
+class _QueueBroker:
+    _registry: dict[str, "_QueueBroker"] = {}
+    _lock = threading.Lock()
+
+    def __init__(self):
+        self.cond = threading.Condition()
+        self.subscribers: dict[str, list[deque]] = {}
+
+    @classmethod
+    def instance(cls, namespace: str) -> "_QueueBroker":
+        with cls._lock:
+            if namespace not in cls._registry:
+                cls._registry[namespace] = _QueueBroker()
+            return cls._registry[namespace]
+
+    def publish(self, topic: str, event: bytes) -> None:
+        with self.cond:
+            for q in self.subscribers.get(topic, []):
+                q.append(event)
+            self.cond.notify_all()
+
+    def subscribe(self, topic: str) -> deque:
+        q: deque = deque()
+        with self.cond:
+            self.subscribers.setdefault(topic, []).append(q)
+        return q
+
+    def pop(self, q: deque, timeout: float | None) -> bytes:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self.cond:
+            while not q:
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError("no stream event within timeout")
+                self.cond.wait(remaining if remaining is not None else None)
+            return q.popleft()
+
+
+class QueuePublisher:
+    """In-process pub/sub publisher (single-process benchmarks, threads)."""
+
+    def __init__(self, namespace: str = "default"):
+        self.namespace = namespace
+
+    def send_event(self, topic: str, event: bytes) -> None:
+        _QueueBroker.instance(self.namespace).publish(topic, event)
+
+    def close(self) -> None:
+        pass
+
+
+class QueueSubscriber:
+    def __init__(self, topic: str, namespace: str = "default"):
+        self.namespace = namespace
+        self.topic = topic
+        self._broker = _QueueBroker.instance(namespace)
+        self._q = self._broker.subscribe(topic)
+
+    def next_event(self, timeout: float | None = None) -> bytes:
+        return self._broker.pop(self._q, timeout)
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# File log broker (cross-process; Kafka stand-in)
+# ---------------------------------------------------------------------------
+
+
+class FileLogPublisher:
+    """Append-only length-prefixed event log, one file per topic."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        self._locks: dict[str, threading.Lock] = {}
+
+    def _path(self, topic: str) -> str:
+        return os.path.join(self.directory, f"{topic}.log")
+
+    def send_event(self, topic: str, event: bytes) -> None:
+        frame = len(event).to_bytes(8, "little") + event
+        # O_APPEND single-write frames are atomic enough for our single-node
+        # multi-producer case (frames ≪ typical atomic append sizes); a real
+        # deployment uses Kafka.
+        fd = os.open(self._path(topic), os.O_WRONLY | os.O_CREAT | os.O_APPEND)
+        try:
+            os.write(fd, frame)
+        finally:
+            os.close(fd)
+
+    def close(self) -> None:
+        pass
+
+    def __reduce__(self):
+        return (FileLogPublisher, (self.directory,))
+
+
+class FileLogSubscriber:
+    """Tails a topic log from a given offset (default: beginning)."""
+
+    def __init__(self, topic: str, directory: str, poll: float = 0.002):
+        self.topic = topic
+        self.directory = directory
+        self.offset = 0
+        self.poll = poll
+
+    def _path(self) -> str:
+        return os.path.join(self.directory, f"{self.topic}.log")
+
+    def next_event(self, timeout: float | None = None) -> bytes:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            try:
+                with open(self._path(), "rb") as f:
+                    f.seek(self.offset)
+                    header = f.read(8)
+                    if len(header) == 8:
+                        n = int.from_bytes(header, "little")
+                        payload = f.read(n)
+                        if len(payload) == n:
+                            self.offset += 8 + n
+                            return payload
+            except FileNotFoundError:
+                pass
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError("no stream event within timeout")
+            time.sleep(self.poll)
+
+    def close(self) -> None:
+        pass
+
+    def __reduce__(self):
+        return (FileLogSubscriber, (self.topic, self.directory, self.poll))
+
+
+# ---------------------------------------------------------------------------
+# StreamProducer / StreamConsumer
+# ---------------------------------------------------------------------------
+
+
+class StreamProducer:
+    """Publishes objects to topics: bulk → Store, event → Publisher.
+
+    ``stores`` maps topic → Store, letting different topics use different
+    mediated channels (paper: "mapping different stream topics to Store
+    instances").  Supports batching and filter/aggregation plugins.
+    """
+
+    def __init__(
+        self,
+        publisher: Publisher,
+        stores: dict[str, Store] | Store,
+        *,
+        batch_size: int = 1,
+        filter_: Callable[[Any, dict], bool] | None = None,
+        aggregator: Callable[[list[Any]], Any] | None = None,
+        evict_on_resolve: bool = True,
+    ):
+        self.publisher = publisher
+        self._stores = stores
+        self.batch_size = batch_size
+        self.filter = filter_
+        self.aggregator = aggregator
+        self.evict_on_resolve = evict_on_resolve
+        self._buffers: dict[str, list[tuple[Any, dict]]] = {}
+        self._seq: dict[str, int] = {}
+
+    def store_for(self, topic: str) -> Store:
+        if isinstance(self._stores, Store):
+            return self._stores
+        if topic in self._stores:
+            return self._stores[topic]
+        if "*" in self._stores:
+            return self._stores["*"]
+        raise KeyError(f"no store mapped for topic {topic!r}")
+
+    def send(self, topic: str, obj: Any, *, metadata: dict | None = None) -> None:
+        metadata = metadata or {}
+        if self.filter is not None and not self.filter(obj, metadata):
+            return
+        buf = self._buffers.setdefault(topic, [])
+        buf.append((obj, metadata))
+        if len(buf) >= self.batch_size:
+            self.flush_topic(topic)
+
+    def flush_topic(self, topic: str) -> None:
+        buf = self._buffers.get(topic, [])
+        if not buf:
+            return
+        store = self.store_for(topic)
+        if self.aggregator is not None and len(buf) > 1:
+            objs = [o for o, _ in buf]
+            merged_meta: dict = {}
+            for _, m in buf:
+                merged_meta.update(m)
+            buf = [(self.aggregator(objs), merged_meta)]
+        for obj, metadata in buf:
+            key = store.put(obj)
+            seq = self._seq.get(topic, 0)
+            self._seq[topic] = seq + 1
+            event = {
+                "topic": topic,
+                "key": key,
+                "store": store.name,
+                "connector": store.connector,
+                "metadata": metadata,
+                "seq": seq,
+                "evict_on_resolve": self.evict_on_resolve,
+            }
+            self.publisher.send_event(topic, pickle.dumps(event))
+        self._buffers[topic] = []
+
+    def flush(self) -> None:
+        for topic in list(self._buffers):
+            self.flush_topic(topic)
+
+    def close_topic(self, topic: str) -> None:
+        self.flush_topic(topic)
+        self.publisher.send_event(topic, pickle.dumps({_END: True, "topic": topic}))
+
+    def close(self, *, close_topics: bool = True) -> None:
+        self.flush()
+        if close_topics:
+            for topic in set(self._buffers) | set(self._seq):
+                self.publisher.send_event(
+                    topic, pickle.dumps({_END: True, "topic": topic})
+                )
+        self.publisher.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class StreamConsumer:
+    """Iterates a topic, yielding lazy proxies of streamed objects.
+
+    ``next()`` waits only for *metadata*; the bulk object is fetched where —
+    and only if — the proxy is resolved.
+    """
+
+    def __init__(
+        self,
+        subscriber: Subscriber,
+        *,
+        filter_: Callable[[dict], bool] | None = None,
+        timeout: float | None = None,
+    ):
+        self.subscriber = subscriber
+        self.filter = filter_
+        self.timeout = timeout
+        self._closed = False
+
+    def _next_event(self) -> dict:
+        while True:
+            event = pickle.loads(self.subscriber.next_event(timeout=self.timeout))
+            if event.get(_END):
+                self._closed = True
+                raise StopIteration
+            if self.filter is not None and not self.filter(event.get("metadata", {})):
+                # skipped events still evict their payload to avoid leaks
+                if event.get("evict_on_resolve"):
+                    event["connector"].evict(event["key"])
+                continue
+            return event
+
+    def next_with_metadata(self) -> tuple[Proxy, dict]:
+        event = self._next_event()
+        factory = StoreFactory(
+            event["key"],
+            event["store"],
+            event["connector"],
+            evict_on_resolve=event.get("evict_on_resolve", False),
+            block=True,
+        )
+        proxy = Proxy(
+            factory,
+            metadata=dict(
+                event["metadata"],
+                seq=event["seq"],
+                key=event["key"],
+                store=event["store"],
+            ),
+        )
+        return proxy, event["metadata"]
+
+    def __iter__(self) -> Iterator[Proxy]:
+        return self
+
+    def __next__(self) -> Proxy:
+        if self._closed:
+            raise StopIteration
+        proxy, _ = self.next_with_metadata()
+        return proxy
+
+    def close(self) -> None:
+        self.subscriber.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

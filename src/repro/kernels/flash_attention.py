@@ -1,0 +1,141 @@
+"""Pallas TPU flash attention (GQA-aware, causal) — the perf-critical
+attention hot spot for the dense/MoE/VLM families.
+
+TPU adaptation (vs. the CUDA flash-attention algorithm): tiling is chosen
+for VMEM residency and MXU alignment — block_q × head_dim and
+block_k × head_dim tiles live in VMEM, the (block_q × block_k) score tile
+feeds the 128×128 MXU, and the online-softmax running stats (m, l, acc) sit
+in VMEM scratch that persists across the sequential kv grid dimension
+(TPU grids are sequential, so no atomics / split-k reduction are needed —
+the scratch *is* the accumulator).  Causal blocks entirely above the
+diagonal are skipped with ``pl.when`` predication.
+
+Layout: q (BH, Sq, D), k/v (BHkv, Sk, D) — the wrapper (ops.py) folds
+batch×heads and maps each q-head group to its kv head via the BlockSpec
+index_map (no materialized KV repetition).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, block_q, D)
+    k_ref,  # (1, block_k, D)
+    v_ref,  # (1, block_k, D)
+    o_ref,  # (1, block_q, D)
+    m_scr,  # (block_q, 1) f32
+    l_scr,  # (block_q, 1) f32
+    acc_scr,  # (block_q, D) f32
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    causal: bool,
+    num_k_blocks: int,
+    q_offset: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    q_start = qi * block_q + q_offset
+    k_start = ki * block_k
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (block_q, block_k)
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_scr[...]  # (block_q, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)  # (block_q, 1)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    if causal:
+        # skip kv blocks entirely above the causal diagonal of this q block
+        pl.when(k_start <= q_start + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bh(
+    q: jax.Array,  # (BH, Sq, D)
+    k: jax.Array,  # (BHkv, Sk, D)
+    v: jax.Array,  # (BHkv, Sk, D)
+    *,
+    group: int,  # q heads per kv head (BH = BHkv * group)
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, D = q.shape
+    BHkv, Sk, _ = k.shape
+    assert BH == BHkv * group, (BH, BHkv, group)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        causal=causal,
+        num_k_blocks=nk,
+        q_offset=q_offset,
+    )
+    grid = (BH, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(q, k, v)

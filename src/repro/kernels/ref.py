@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the *semantic definitions*: naive, numerically-straightforward
+implementations that the kernels must match (assert_allclose in
+tests/test_kernels.py across shape/dtype sweeps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, H, D)   (kv heads already expanded)
+    v: jax.Array,  # (B, Sk, H, Dv)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    import math
+
+    D = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] + (Sk - Sq) >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(v.dtype)
+
+
+def wkv6_ref(
+    r: jax.Array,  # (B, S, H, K)
+    k: jax.Array,
+    v: jax.Array,  # (B, S, H, V)
+    lw: jax.Array,  # (B, S, H, K) log decay (≤0)
+    u: jax.Array,  # (H, K)
+    state: jax.Array | None = None,  # (B, H, K, V)
+):
+    """Step-by-step WKV6 recurrence (the paper's eq., O(S) sequential):
+    o_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t);  S_t = diag(w_t) S_{t-1} + k_tᵀv_t.
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+    s0 = state.astype(f32) if state is not None else jnp.zeros((B, H, K, V), f32)
+
+    def step(s, xs):
+        rt, kt, vt, lwt = (x.astype(f32) for x in xs)  # (B,H,K/V)
+        kv = kt[..., None] * vt[..., None, :]  # (B,H,K,V)
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, s + u.astype(f32)[None, :, :, None] * kv)
+        s_new = jnp.exp(lwt)[..., None] * s + kv
+        return s_new, ot
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, lw))
+    sF, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3).astype(v.dtype), sF
+
+
+def ssd_ref(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  (≥0, already softplus'd)
+    a_log: jax.Array,  # (B, S, H) log decay per step (≤0)
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    D: jax.Array,  # (H,)
+    state: jax.Array | None = None,  # (B, H, P, N)
+):
+    """Step-by-step SSD recurrence: h_t = a_t h_{t-1} + (Δ_t x_t)⊗B_t;
+    y_t = C_t·h_t + D x_t."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    s0 = state.astype(f32) if state is not None else jnp.zeros((B, H, P, N), f32)
+
+    def step(s, xs):
+        xt, dtt, lat, Bt, Ct = xs
+        xt, dtt, lat = xt.astype(f32), dtt.astype(f32), lat.astype(f32)
+        s_new = s * jnp.exp(lat)[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, Bt.astype(f32)
+        )
+        yt = jnp.einsum("bn,bhpn->bhp", Ct.astype(f32), s_new)
+        yt = yt + xt * D.astype(f32)[None, :, None]
+        return s_new, yt
+
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        a_log.transpose(1, 0, 2),
+        Bm.transpose(1, 0, 2),
+        Cm.transpose(1, 0, 2),
+    )
+    sF, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3).astype(x.dtype), sF

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked recurrence.
+
+Same chunked-sequential pattern as wkv6.py but with *scalar* per-head decay:
+the (P×N) state is carried in VMEM scratch across the sequential chunk grid
+dimension; intra-chunk work is two MXU matmuls ((C×N)·(N×C) score tile and
+(C×C)·(C×P) combine).
+
+Layouts: x (BH, S, P), dt/la (BH, S), B/C (BH, S, N) (pre-broadcast per
+head by ops.py), D (BH, 1), out (BH, S, P).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # (1, C, P)
+    dt_ref,  # (1, C)
+    la_ref,  # (1, C)
+    b_ref,  # (1, C, N)
+    c_ref,  # (1, C, N)
+    d_ref,  # (1, 1)
+    o_ref,  # (1, C, P)
+    state_scr,  # (P, N) f32
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # (C, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (C,)
+    la_step = la_ref[0].astype(jnp.float32)  # (C,)
+    Bm = b_ref[0].astype(jnp.float32)  # (C, N)
+    Cm = c_ref[0].astype(jnp.float32)
+    Dh = d_ref[0, 0].astype(jnp.float32)
+    s = state_scr[...]  # (P, N)
+
+    la = jnp.cumsum(la_step)  # (C,) inclusive cumulative log decay
+    # inter-chunk: y_t += exp(la_t) · (C_t · s)
+    cs = jax.lax.dot_general(
+        Cm, s, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, P)
+    y_inter = jnp.exp(la)[:, None] * cs
+    # intra-chunk: y_t += Σ_{s≤t} exp(la_t - la_s) (C_t·B_s) Δ_s x_s
+    cb = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, C) [t, s]
+    ti = jax.lax.broadcasted_iota(jnp.int32, cb.shape, 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, cb.shape, 1)
+    causal = ti >= si
+    # decay diff masked BEFORE exp (≤0 in causal region → overflow-safe)
+    dec = jnp.exp(jnp.where(causal, la[:, None] - la[None, :], -jnp.inf))
+    m = dec * cb * dt[None, :]
+    y_intra = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[0, :, :] = (y_inter + y_intra + Dh * x).astype(o_ref.dtype)
+
+    # state update: s' = s·exp(la_C) + Σ_s exp(la_C - la_s) Δ_s x_s ⊗ B_s
+    laC = la[-1]
+    w = jnp.exp(laC - la) * dt  # (C,)
+    state_scr[...] = s * jnp.exp(laC) + jax.lax.dot_general(
+        x * w[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def ssd_bh(
+    x: jax.Array,  # (BH, S, P)
+    dt: jax.Array,  # (BH, S)
+    la: jax.Array,  # (BH, S) log decay per step
+    Bm: jax.Array,  # (BH, S, N)
+    Cm: jax.Array,  # (BH, S, N)
+    D: jax.Array,  # (BH, 1)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n = S // chunk
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x, dt, la, Bm, Cm, D)

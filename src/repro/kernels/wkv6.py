@@ -1,0 +1,116 @@
+"""Pallas TPU kernel for the RWKV6 (WKV6) chunked recurrence.
+
+The sequence is processed in chunks along a *sequential* grid dimension; the
+per-(batch·head) recurrent state S (K×V, f32) lives in VMEM scratch and is
+carried across chunk iterations — the TPU-native replacement for the CUDA
+kernel's per-thread registers.  Within a chunk everything is parallel
+matmul work for the MXU (intra-chunk scores (C×C), inter-chunk reads
+against the carried state), with the log-space decay algebra of
+models/rwkv.py::wkv6_chunked.
+
+Layouts: r/k/lw (BH, S, K), v (BH, S, V), u (BH, K) (pre-broadcast per
+head), out (BH, S, V).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(
+    r_ref,  # (1, C, K)
+    k_ref,  # (1, C, K)
+    v_ref,  # (1, C, V)
+    lw_ref,  # (1, C, K)
+    u_ref,  # (1, K)
+    o_ref,  # (1, C, V)
+    state_scr,  # (K, V) f32
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0].astype(jnp.float32)  # (C, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)  # (C, V)
+    lw = lw_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)  # (K,)
+    s = state_scr[...]
+
+    la = jnp.cumsum(lw, axis=0)  # (C, K) cumulative log decay
+    lam = la - lw  # exclusive cumulative decay, ≤ 0
+    # inter-chunk: o_t += (r_t * exp(lam_t)) @ S_prev
+    o_inter = jax.lax.dot_general(
+        r * jnp.exp(lam), s, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # intra-chunk (strictly below diagonal): decay differences are masked
+    # BEFORE exp (≤0 in the causal region → overflow-safe; the factored
+    # exp(lam)·exp(-la) matmul form overflows once |la| ≳ 88).  This keeps
+    # the (C,C,K) tile in VMEM on the VPU; the combine below is MXU work.
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = (ti > si)[:, :, None]  # (C, C, 1)
+    diff = lam[:, None, :] - la[None, :, :]  # (C, C, K) [t, s, k]
+    pk = jnp.where(causal, jnp.exp(jnp.where(causal, diff, 0.0)), 0.0)
+    scores = jnp.einsum(
+        "tk,sk,tsk->ts", r, k, pk, preferred_element_type=jnp.float32
+    )
+    o_intra = jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    # current-token bonus: (r_t · (u * k_t)) v_t
+    bonus = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True)  # (C, 1)
+    o_cur = bonus * v
+    o_ref[0, :, :] = (o_inter + o_intra + o_cur).astype(o_ref.dtype)
+
+    # state update: S' = S * exp(la_C) + Σ_s (k_s exp(la_C - la_s))ᵀ v_s
+    laC = la[-1:, :]  # (1, K)
+    k_dec = k * jnp.exp(laC - la)  # (C, K)
+    state_scr[...] = s * jnp.exp(laC).T + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def wkv6_bh(
+    r: jax.Array,  # (BH, S, K)
+    k: jax.Array,
+    v: jax.Array,  # (BH, S, V)
+    lw: jax.Array,  # (BH, S, K)
+    u: jax.Array,  # (BH, K)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, S, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n = S // chunk
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n),
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, K), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, V), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, K), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, K), lambda bh, ci: (bh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, V), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, V), v.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(r, k, v, lw, u)

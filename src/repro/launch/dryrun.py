@@ -1,0 +1,544 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count on first init): the dry-run — and only the dry-run — needs 512
+placeholder host devices so ``jax.make_mesh`` can build the production
+meshes (16×16 single-pod, 2×16×16 multi-pod).
+
+For each cell we AOT-lower the appropriate step (train_step for ``train_*``,
+prefill for ``prefill_*``, serve_step for ``decode_*``/``long_*``) with
+ShapeDtypeStruct stand-ins carrying the production NamedShardings, compile
+it, and record ``memory_analysis()`` + ``cost_analysis()`` + the collective
+schedule parsed from the post-optimization HLO — the inputs to
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.analysis import roofline as RL
+from repro.configs import SHAPES, arch_names, cell_applicable, get_config
+from repro.dist.sharding import sharding_tree
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.models.api import param_counts, train_input_specs
+from repro.models.layers import ModelContext
+from repro.train.step import (
+    abstract_decode_args,
+    abstract_prefill_args,
+    abstract_train_args,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results")
+
+
+def _with_sharding(abs_tree, shard_tree):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree (AOT in_shardings)."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abs_tree,
+        shard_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Probe-and-extrapolate cost accounting.
+#
+# XLA's cost_analysis visits a while-loop body ONCE — it does not multiply by
+# the trip count — so the scanned production program under-reports FLOPs,
+# bytes, and collectives by ~n_layers×, and chunked attention/SSM scans over
+# the sequence under-report by another ~n_chunks×.  Unrolling the full
+# program instead is exact but compiles for hours on this box for the
+# 60–80-layer archs at 32k sequence.
+#
+# We therefore lower a small design of FULLY-UNROLLED probe variants per
+# cell — reduced depth (1–4 layers) × reduced sequence (256–1024, at which
+# every chunk loop has trip count small enough to unroll in Python; see
+# ``scan_stack`` / ``blockwise_attention(unroll=)``) — and fit, per metric,
+# the exact polynomial
+#
+#   cost(L_t, S) = α0 + α1·s + Σ_type L_t·(β0_t + β1_t·s + β2_t·s²),  s=S/1024
+#
+# (embedding/head terms are affine in S; per-layer terms are quadratic in S
+# because of attention; SSM/RWKV chunked forms are linear in S so their β2
+# fits ≈0).  Full cost is the reconstruction at the production depth and
+# sequence.  cost_analysis is deterministic arithmetic, so the fit is exact
+# up to cross-compile optimization differences; the reconstruction is
+# sanity-checked against the analytic 6·N·D bound (``useful_ratio``).
+# Decode cells have no sequence loops (single-token flash-decode over the
+# full cache), so they keep a depth-only design at the production cache
+# length.  The scanned production program is still what we compile for the
+# fits-in-memory proof and the multi-pod check.
+# ---------------------------------------------------------------------------
+
+# Probe window: XLA:CPU flop counts at S=256 are anomalously low for the
+# very-wide archs (measured 256→512 growth of 2.37× for a token-linear
+# layer), so the window starts at 512; verified 512→1024→2048 doublings are
+# clean (2.03×, 2.05×).
+PROBE_SEQS = (512, 1024, 2048)
+
+
+def _layer_variants(cfg):
+    """Per-family (variant-config, layer-count dict) pairs at reduced depth."""
+    base = dict(scan_layers=False)
+    fam = cfg.family
+    if fam == "mla_moe" and cfg.first_k_dense:
+        variants = [
+            (cfg.with_(n_layers=2, first_k_dense=1, **base), {"dense": 1, "moe": 1}),
+            (cfg.with_(n_layers=3, first_k_dense=2, **base), {"dense": 2, "moe": 1}),
+            (cfg.with_(n_layers=3, first_k_dense=1, **base), {"dense": 1, "moe": 2}),
+        ]
+        full = {"dense": cfg.first_k_dense, "moe": cfg.n_layers - cfg.first_k_dense}
+    elif fam == "moe":
+        variants = [
+            (cfg.with_(n_layers=1, **base), {"moe": 1}),
+            (cfg.with_(n_layers=2, **base), {"moe": 2}),
+        ]
+        full = {"moe": cfg.n_layers}
+    elif fam == "encdec":
+        # encoder and decoder scale together (both 24 in whisper-medium)
+        assert cfg.encoder_layers == cfg.n_layers
+        variants = [
+            (cfg.with_(n_layers=1, encoder_layers=1, **base), {"pair": 1}),
+            (cfg.with_(n_layers=2, encoder_layers=2, **base), {"pair": 2}),
+        ]
+        full = {"pair": cfg.n_layers}
+    elif fam == "hybrid":
+        e = cfg.shared_attn_every
+        variants = [
+            (cfg.with_(n_layers=2, shared_attn_every=0, **base), {"mamba": 2}),
+            (cfg.with_(n_layers=4, shared_attn_every=0, **base), {"mamba": 4}),
+            (cfg.with_(n_layers=2, shared_attn_every=2, **base),
+             {"mamba": 2, "attn": 1}),
+        ]
+        n_attn = len([i for i in range(cfg.n_layers) if e and i % e == e - 1])
+        full = {"mamba": cfg.n_layers, "attn": n_attn}
+    else:  # dense / rwkv / vlm — homogeneous stack
+        variants = [
+            (cfg.with_(n_layers=1, **base), {"layer": 1}),
+            (cfg.with_(n_layers=2, **base), {"layer": 2}),
+        ]
+        full = {"layer": cfg.n_layers}
+    return variants, full
+
+
+def _design_row(layers: dict, seq: int | None) -> dict:
+    """Feature row: const/S affine + per-layer-type quadratic in s=S/1024."""
+    if seq is None:  # decode cells: depth-only design
+        return {"const": 1.0, **{t: float(n) for t, n in layers.items()}}
+    s = seq / 1024.0
+    row = {"const": 1.0, "S": s}
+    for t, n in layers.items():
+        row[t] = float(n)
+        row[f"{t}*S"] = n * s
+        row[f"{t}*S2"] = n * s * s
+    return row
+
+
+def _probe_plan(cfg, shape):
+    """(probe list [(cfg, shape, design-row)], full-reconstruction row)."""
+    import dataclasses
+
+    variants, full_layers = _layer_variants(cfg)
+    if shape.kind == "decode":
+        probes = [(v, shape, _design_row(lay, None)) for v, lay in variants]
+        return probes, _design_row(full_layers, None)
+
+    # Larger probe seqs for long cells: the S² coefficient is extrapolated
+    # by (S_full/S_probe)², so cap the amplification at ~64× while keeping
+    # every chunk loop small enough to unroll (≤4096 → ≤4×4 attention
+    # chunks, ≤32 rwkv/ssd chunks per layer).
+    if shape.seq_len > 8192:
+        seqs = [1024, 2048, 4096]
+    else:
+        seqs = [s for s in PROBE_SEQS if s < shape.seq_len] or [shape.seq_len]
+    if len(seqs) < 3 and shape.seq_len not in seqs:
+        seqs = sorted(set(seqs) | {shape.seq_len})  # e.g. train at seq 1024
+    probes = [
+        (v, dataclasses.replace(shape, seq_len=s), _design_row(lay, s))
+        for s in seqs
+        for v, lay in variants
+    ]
+    return probes, _design_row(full_layers, shape.seq_len)
+
+
+def _measure(compiled, chips: int, pod_group: int) -> dict:
+    """Flat metric dict for one compiled program."""
+    cost = RL.cost_analysis_dict(compiled)
+    coll = RL.parse_collectives(
+        compiled.as_text(), n_devices=chips, pod_group=pod_group
+    )
+    out = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire": coll.total_wire_bytes,
+        "operand": float(coll.total_operand_bytes),
+        "dcn": coll.dcn_wire_bytes,
+    }
+    for op, rec in coll.ops.items():
+        out[f"op:{op}:count"] = float(rec["count"])
+        out[f"op:{op}:wire"] = float(rec["wire_bytes"])
+    return out
+
+
+def _nnls(A, y):
+    """Non-negative least squares via a simple active-set heuristic.
+
+    Every physical cost coefficient (per-layer FLOPs, bytes, wire …) is
+    ≥ 0; an unconstrained OLS fit can return sign-oscillating coefficients
+    whose errors are amplified ~(S_full/S_probe)² ≈ 64× by the sequence
+    extrapolation.  Solve OLS on a shrinking support, zeroing the most
+    negative coordinate until all remaining coefficients are non-negative.
+    """
+    import numpy as np
+
+    n = A.shape[1]
+    support = list(range(n))
+    beta = np.zeros(n)
+    while support:
+        b, *_ = np.linalg.lstsq(A[:, support], y, rcond=None)
+        if (b >= -1e-12).all():
+            beta[:] = 0.0
+            beta[support] = np.maximum(b, 0.0)
+            return beta
+        support.pop(int(np.argmin(b)))
+    return beta
+
+
+def _extrapolate(measures: list[dict], design: list[dict], full: dict) -> dict:
+    """Fit the cost polynomial per metric (NNLS) and reconstruct full size."""
+    import numpy as np
+
+    comps = sorted({c for row in design for c in row})
+    A = np.array([[row.get(c, 0.0) for c in comps] for row in design], float)
+    keys = sorted({k for m in measures for k in m})
+    fvec = np.array([full.get(c, 0.0) for c in comps], float)
+    out = {}
+    for k in keys:
+        y = np.array([m.get(k, 0.0) for m in measures], float)
+        beta = _nnls(A, y)
+        out[k] = float(max(fvec @ beta, 0.0))
+    return out
+
+
+def _lower_one(cfg, shape, mesh, rules, *, microbatch: int = 0):
+    """Lower+compile one config/shape; returns (compiled, model, lower_s, compile_s)."""
+    ctx = ModelContext(cfg, mesh, rules)
+    t0 = time.perf_counter()
+    if shape.kind == "train":
+        bundle = make_train_step(ctx, microbatch=microbatch)
+        state_abs, batch_abs, state_sh, batch_sh = abstract_train_args(
+            ctx, bundle, shape.global_batch, shape.seq_len
+        )
+        lowered = bundle.fn.lower(
+            _with_sharding(state_abs, state_sh), _with_sharding(batch_abs, batch_sh)
+        )
+    elif shape.kind == "prefill":
+        bundle = make_prefill_step(ctx, max_len=shape.seq_len)
+        args_abs, args_sh = abstract_prefill_args(
+            ctx, bundle, shape.global_batch, shape.seq_len
+        )
+        lowered = bundle.fn.lower(*_with_sharding(args_abs, args_sh))
+    else:
+        bundle = make_decode_step(ctx)
+        args_abs, args_sh = abstract_decode_args(
+            ctx, bundle, shape.global_batch, shape.seq_len
+        )
+        lowered = bundle.fn.lower(*_with_sharding(args_abs, args_sh))
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    return compiled, bundle.model, t1 - t0, t2 - t1
+
+
+def _roofline_from_est(arch, shape_name, mesh_desc, chips, pod_group, est,
+                       model_flops, mem, extra_notes=""):
+    """Assemble the RooflineReport from an (extrapolated) metric dict."""
+    collective_ops = {
+        op: {
+            "count": est.get(f"op:{op}:count", 0.0),
+            "wire_bytes": est.get(f"op:{op}:wire", 0.0),
+        }
+        for op in sorted(
+            {k.split(":")[1] for k in est if k.startswith("op:")}
+        )
+    }
+    report = RL.analyze(
+        arch=arch,
+        shape=shape_name,
+        mesh_desc=mesh_desc,
+        chips=chips,
+        cost={"flops": est["flops"], "bytes accessed": est["bytes"]},
+        hlo_text="",  # collectives already extrapolated below
+        model_flops=model_flops,
+        memory_stats=mem,
+        pod_group=pod_group,
+        notes=extra_notes,
+    )
+    # overwrite collective fields with the extrapolated values
+    report.collective_wire_bytes = est["wire"]
+    report.collective_operand_bytes = int(est["operand"])
+    report.collective_ops = collective_ops
+    report.t_collective = est["wire"] / RL.LINK_BW
+    report.t_dcn = est["dcn"] / RL.DCN_BW
+    terms = {
+        "compute": report.t_compute,
+        "memory": report.t_memory,
+        "collective": report.t_collective,
+    }
+    report.dominant = max(terms, key=terms.get)
+    report.step_time = max(max(terms.values()), report.t_dcn)
+    report.mfu_bound = (
+        model_flops / (chips * RL.PEAK_FLOPS * report.step_time)
+        if report.step_time else 0.0
+    )
+    report.useful_ratio = (
+        model_flops / (est["flops"] * chips) if est["flops"] else 0.0
+    )
+    return report
+
+
+def refit_results(path: str) -> int:
+    """Re-derive every roofline from the stored probe measures (no compiles).
+
+    Used after improving the extrapolation (e.g. the NNLS change): the
+    probes in the JSON are raw per-variant cost_analysis measures, so the
+    fit can be redone offline.
+    """
+    with open(path) as f:
+        recs = json.load(f)
+    n = 0
+    for rec in recs:
+        if rec.get("status") != "ok" or not rec.get("probes"):
+            continue
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        _, full = _probe_plan(cfg, shape)
+        design = [p["design"] for p in rec["probes"]]
+        measures = [p["measure"] for p in rec["probes"]]
+        est = _extrapolate(measures, design, full)
+        rl = rec["roofline"]
+        chips = rec["chips"]
+        pod_group = 0  # probe records exist only for the single-pod mesh
+        report = _roofline_from_est(
+            rec["arch"], rec["shape"], rl["mesh"], chips, pod_group, est,
+            rl["model_flops"], rec.get("memory_analysis"), rl.get("notes", ""),
+        )
+        rec["roofline"] = report.to_json()
+        rec["cost_flops_per_device"] = report.flops_per_device
+        rec["cost_bytes_per_device"] = report.bytes_per_device
+        n += 1
+    with open(path, "w") as f:
+        json.dump(recs, f, indent=1)
+    print(f"[dryrun] refit {n} records in {path}")
+    return 0
+
+
+def lower_cell(arch: str, shape_name: str, mesh, rules, *, microbatch: int = 0,
+               extra_notes: str = "", probe: bool = True, cfg=None):
+    """Lower + compile one (arch × shape) on a mesh; return result record."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, skip = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skip", "reason": skip}
+
+    chips = mesh.size
+    pod_group = chips // mesh.shape["pod"] if "pod" in mesh.shape else 0
+    mesh_desc = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+
+    # 1) the PRODUCTION (scanned) program: the compile/fits proof
+    compiled, model, t_lower, t_compile = _lower_one(
+        cfg, shape, mesh, rules, microbatch=microbatch
+    )
+    mem = RL.memory_analysis_dict(compiled)
+    n_total, n_active = param_counts(model, cfg)
+    if shape.kind == "train":
+        model_flops = RL.model_flops_train(
+            n_active, shape.global_batch * shape.seq_len
+        )
+    elif shape.kind == "prefill":
+        model_flops = RL.model_flops_decode(
+            n_active, shape.global_batch * shape.seq_len
+        )
+    else:
+        model_flops = RL.model_flops_decode(n_active, shape.global_batch)
+
+    # 2) probe variants → extrapolated full-depth/full-seq cost (see header)
+    probes = []
+    if probe:
+        plan, full = _probe_plan(cfg, shape)
+        design, measures = [], []
+        for v, vshape, row in plan:
+            c, _, _, p_compile = _lower_one(v, vshape, mesh, rules,
+                                            microbatch=microbatch)
+            m = _measure(c, chips, pod_group)
+            m["compile_s"] = round(p_compile, 2)
+            design.append(row)
+            measures.append(m)
+            del c
+        est = _extrapolate(measures, design, full)
+        probes = [
+            {"design": d, "measure": m} for d, m in zip(design, measures)
+        ]
+    else:
+        est = _measure(compiled, chips, pod_group)
+        est["extrapolated"] = False
+
+    report = _roofline_from_est(
+        arch, shape_name, mesh_desc, chips, pod_group, est, model_flops, mem,
+        extra_notes,
+    )
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_desc,
+        "status": "ok",
+        "chips": chips,
+        "params_total": n_total,
+        "params_active": n_active,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_flops_per_device": report.flops_per_device,
+        "cost_bytes_per_device": report.bytes_per_device,
+        "probes": probes,
+        "roofline": report.to_json(),
+    }
+
+
+def run_cells(archs, shapes, meshes, *, microbatch: int = 0, out_path: str | None = None,
+              verbose: bool = True, rules_profile: str = "default",
+              cfg_overrides: dict | None = None, probe: bool = True):
+    results = []
+    for mesh_kind in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+        rules = rules_for(mesh, rules_profile)
+        with mesh:
+            for arch in archs:
+                for shape_name in shapes:
+                    key = f"{arch} × {shape_name} × {mesh_kind}"
+                    try:
+                        cfg = get_config(arch)
+                        if cfg_overrides:
+                            cfg = cfg.with_(**cfg_overrides)
+                        # roofline table is single-pod; multipod pass is the
+                        # sharding-coherence proof → skip the probe compiles
+                        rec = lower_cell(arch, shape_name, mesh, rules,
+                                         microbatch=microbatch,
+                                         probe=probe and (mesh_kind == "pod"),
+                                         cfg=cfg)
+                        rec["mesh_kind"] = mesh_kind
+                        rec["rules_profile"] = rules_profile
+                        if cfg_overrides:
+                            rec["cfg_overrides"] = cfg_overrides
+                        if verbose:
+                            if rec["status"] == "skip":
+                                print(f"[dryrun] SKIP {key}: {rec['reason']}")
+                            else:
+                                r = rec["roofline"]
+                                print(
+                                    f"[dryrun] OK   {key}: compile {rec['compile_s']}s "
+                                    f"compute {RL.fmt_seconds(r['t_compute'])} "
+                                    f"memory {RL.fmt_seconds(r['t_memory'])} "
+                                    f"collective {RL.fmt_seconds(r['t_collective'])} "
+                                    f"dominant={r['dominant']} MFU≤{r['mfu_bound']:.1%}"
+                                )
+                                ma = rec["memory_analysis"]
+                                if ma:
+                                    gb = (
+                                        ma.get("argument_size_in_bytes", 0)
+                                        + ma.get("output_size_in_bytes", 0)
+                                        + ma.get("temp_size_in_bytes", 0)
+                                    ) / 1e9
+                                    print(f"         bytes/device {gb:.2f} GB "
+                                          f"(args+out+temp; v5e HBM = 16 GB)")
+                    except Exception as e:  # noqa: BLE001 — record, keep going
+                        rec = {
+                            "arch": arch, "shape": shape_name, "mesh_kind": mesh_kind,
+                            "status": "error", "error": repr(e),
+                            "traceback": traceback.format_exc(),
+                        }
+                        if verbose:
+                            print(f"[dryrun] FAIL {key}: {e!r}")
+                    results.append(rec)
+                    if out_path:
+                        with open(out_path, "w") as f:
+                            json.dump(results, f, indent=1)
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", action="append", help="arch id (repeatable); default all")
+    ap.add_argument("--shape", action="append", choices=sorted(SHAPES),
+                    help="shape cell (repeatable); default all")
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"), default="both")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--out", default=None, help="JSON results path")
+    ap.add_argument("--list", action="store_true")
+    # hillclimb levers (EXPERIMENTS.md §Perf); defaults = paper-faithful
+    ap.add_argument("--rules", choices=("default", "flat_dp", "sp", "serve"),
+                    default="default", help="sharding rule profile")
+    ap.add_argument("--causal-skip", action="store_true",
+                    help="enable attn_causal_skip (skip masked KV chunks)")
+    ap.add_argument("--remat", choices=("none", "full", "dots"), default=None,
+                    help="override activation-checkpoint policy")
+    ap.add_argument("--refit", metavar="JSON",
+                    help="re-derive rooflines from stored probes (no compiles)")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="production compile only (memory_analysis evidence; "
+                         "roofline terms from the scanned program are "
+                         "under-counted — use for fit checks, not §Roofline)")
+    args = ap.parse_args(argv)
+
+    if args.refit:
+        return refit_results(args.refit)
+
+    archs = args.arch or arch_names()
+    shapes = args.shape or list(SHAPES)
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    if args.list:
+        for a in archs:
+            cfg = get_config(a)
+            for s in shapes:
+                ok, why = cell_applicable(cfg, SHAPES[s])
+                print(f"{a:<24}{s:<14}{'RUN' if ok else 'SKIP: ' + why}")
+        return 0
+
+    overrides = {}
+    if args.causal_skip:
+        overrides["attn_causal_skip"] = True
+    if args.remat:
+        overrides["remat"] = args.remat
+    results = run_cells(archs, shapes, meshes, microbatch=args.microbatch,
+                        out_path=args.out, rules_profile=args.rules,
+                        cfg_overrides=overrides or None,
+                        probe=not args.no_probe)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_err} error")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""Production mesh factories.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init, while smoke tests and benchmarks must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.dist.sharding import AxisRules, DEFAULT_RULES, MULTIPOD_RULES, RULE_PROFILES
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single-pod (16 data × 16 model) = 256 chips or 2-pod = 512 chips."""
+    import math
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    devices = jax.devices()[: math.prod(shape)]
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def rules_for(mesh: Mesh, profile: str = "default") -> AxisRules:
+    pod_rules, multipod_rules = RULE_PROFILES[profile]
+    return multipod_rules if "pod" in mesh.shape else pod_rules
+
+
+def make_host_mesh() -> Mesh:
+    """1-device mesh for smoke tests / CPU examples (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,203 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, frames, d_model).  Encoder = bidirectional
+self-attention; decoder = causal self-attention + cross-attention.
+Sinusoidal positions (whisper uses no rope).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import ParamSpec
+from repro.models import layers as L
+from repro.models.layers import ModelContext
+from repro.models.transformer import _remat, stack_specs
+
+
+def _sinusoid(S: int, E: int) -> np.ndarray:
+    pos = np.arange(S)[:, None]
+    dim = np.arange(E // 2)[None]
+    ang = pos / np.power(10_000.0, 2 * dim / E)
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(np.float32)
+
+
+def enc_block_specs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": L.norm_specs(cfg, cfg.d_model),
+        "attn": L.attention_specs(cfg),
+        "ln2": L.norm_specs(cfg, cfg.d_model),
+        "ffn": L.mlp_specs(cfg, gated=False),
+    }
+
+
+def dec_block_specs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": L.norm_specs(cfg, cfg.d_model),
+        "self_attn": L.attention_specs(cfg),
+        "ln_x": L.norm_specs(cfg, cfg.d_model),
+        "cross_attn": L.attention_specs(cfg, cross=True),
+        "ln2": L.norm_specs(cfg, cfg.d_model),
+        "ffn": L.mlp_specs(cfg, gated=False),
+    }
+
+
+class EncDecLM:
+    def __init__(self, ctx: ModelContext):
+        self.ctx = ctx
+        self.cfg = ctx.cfg
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": L.embed_specs(cfg),
+            "enc_layers": stack_specs(enc_block_specs(cfg), cfg.encoder_layers),
+            "enc_norm": L.norm_specs(cfg, cfg.d_model),
+            "dec_layers": stack_specs(dec_block_specs(cfg), cfg.n_layers),
+            "final_norm": L.norm_specs(cfg, cfg.d_model),
+        }
+
+    # -- encoder --------------------------------------------------------------
+    def encode(self, params, frames):
+        """frames (B, F, E): precomputed frame embeddings (stub frontend)."""
+        cfg, ctx = self.cfg, self.ctx
+        F = frames.shape[1]
+        pos = jnp.asarray(_sinusoid(F, cfg.d_model))
+        x = frames.astype(ctx.compute_dtype) + pos.astype(ctx.compute_dtype)
+        x = ctx.constrain(x, ("batch", None, None))
+
+        def body(x, p):
+            h = L.apply_norm(cfg, p["ln1"], x)
+            att, _ = L.apply_attention(ctx, p["attn"], h, rope=None, causal=False)
+            x = x + att
+            h = L.apply_norm(cfg, p["ln2"], x)
+            return x + L.apply_mlp(ctx, p["ffn"], h), None
+
+        x, _ = L.scan_stack(cfg, _remat(cfg, body), x, params["enc_layers"])
+        return L.apply_norm(cfg, params["enc_norm"], x)
+
+    # -- decoder ----------------------------------------------------------------
+    def _dec_body(self, enc_out, *, cache_mode: str, cache_index=None):
+        cfg, ctx = self.cfg, self.ctx
+
+        def body(x, xs):
+            if cache_mode == "none":
+                p = xs
+                self_cache = cross_cache = None
+            else:
+                p, (self_cache, cross_cache) = xs
+            h = L.apply_norm(cfg, p["ln1"], x)
+            if cache_mode == "decode":
+                att, new_self = L.apply_attention(
+                    ctx, p["self_attn"], h, rope=None,
+                    cache=self_cache, cache_index=cache_index,
+                )
+            else:
+                att, new_self = L.apply_attention(
+                    ctx, p["self_attn"], h, rope=None,
+                    cache={} if cache_mode == "prefill" else None,
+                )
+            x = x + att
+            h = L.apply_norm(cfg, p["ln_x"], x)
+            if cache_mode == "decode":
+                # cross K/V precomputed at prefill: plain decode attention
+                o = L.decode_attention(
+                    jnp.einsum("bse,ehd->bshd", h, p["cross_attn"]["wq"]),
+                    cross_cache["k"], cross_cache["v"],
+                    jnp.int32(cross_cache["k"].shape[1]),
+                )
+                att = jnp.einsum("bshd,hde->bse", o, p["cross_attn"]["wo"])
+                new_cross = cross_cache
+            else:
+                att, new_cross = L.apply_attention(
+                    ctx, p["cross_attn"], h, rope=None, kv=enc_out, causal=False,
+                    cache={} if cache_mode == "prefill" else None,
+                )
+            x = x + att
+            h = L.apply_norm(cfg, p["ln2"], x)
+            x = x + L.apply_mlp(ctx, p["ffn"], h)
+            if cache_mode == "none":
+                return x, None
+            return x, (new_self, new_cross)
+
+        return body
+
+    def _decode_positions(self, x, offset=0):
+        cfg = self.cfg
+        S = x.shape[1]
+        pos_table = jnp.asarray(_sinusoid(max(S, 1), cfg.d_model))
+        return x + pos_table[:S].astype(x.dtype)
+
+    def loss(self, params, batch):
+        cfg, ctx = self.cfg, self.ctx
+        enc_out = self.encode(params, batch["frames"])
+        x = L.apply_embed(ctx, params["embed"], batch["tokens"])
+        x = self._decode_positions(x)
+        body = self._dec_body(enc_out, cache_mode="none")
+        x, _ = L.scan_stack(cfg, _remat(cfg, body), x, params["dec_layers"])
+        hn = L.apply_norm(cfg, params["final_norm"], x)
+        logits = L.apply_unembed(ctx, params["embed"], hn)
+        loss = L.cross_entropy(ctx, logits, batch["labels"])
+        return loss, {"ce": loss}
+
+    # -- serving -------------------------------------------------------------
+    def cache_specs(self, batch_size: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        kv = lambda S: {
+            "k": ParamSpec((batch_size, S, cfg.n_kv_heads, cfg.head_dim_),
+                           ("batch", "kv_seq", "kv_heads", None), dt, 0.0),
+            "v": ParamSpec((batch_size, S, cfg.n_kv_heads, cfg.head_dim_),
+                           ("batch", "kv_seq", "kv_heads", None), dt, 0.0),
+        }
+        return (
+            stack_specs(kv(max_len), cfg.n_layers),
+            stack_specs(kv(cfg.encoder_frames), cfg.n_layers),
+        )
+
+    def prefill(self, params, tokens, max_len: int, frames=None):
+        cfg, ctx = self.cfg, self.ctx
+        B, S = tokens.shape
+        if frames is None:
+            frames = jnp.zeros((B, cfg.encoder_frames, cfg.d_model), ctx.compute_dtype)
+        enc_out = self.encode(params, frames)
+        x = L.apply_embed(ctx, params["embed"], tokens)
+        x = self._decode_positions(x)
+        body = self._dec_body(enc_out, cache_mode="prefill")
+
+        # prefill has no incoming cache: xs = params only; adapt body
+        def body2(x, p):
+            return self._dec_body(enc_out, cache_mode="prefill")(x, (p, (None, None)))
+
+        x, (self_c, cross_c) = L.scan_stack(cfg, body2, x, params["dec_layers"])
+
+        def pad(c):
+            pad_len = max_len - c.shape[2]
+            if pad_len <= 0:
+                return c
+            w = [(0, 0)] * c.ndim
+            w[2] = (0, pad_len)
+            return jnp.pad(c, w)
+
+        self_c = jax.tree.map(pad, self_c)
+        hn = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+        logits = L.apply_unembed(ctx, params["embed"], hn)
+        return logits[:, 0], (self_c, cross_c)
+
+    def decode_step(self, params, cache, tokens, index):
+        cfg, ctx = self.cfg, self.ctx
+        self_c, cross_c = cache
+        x = L.apply_embed(ctx, params["embed"], tokens)
+        S_table = jnp.asarray(_sinusoid(self_c["k"].shape[2], cfg.d_model))
+        x = x + jax.lax.dynamic_slice_in_dim(S_table, index, 1, 0)[None].astype(x.dtype)
+        body = self._dec_body(None, cache_mode="decode", cache_index=index)
+        x, (new_self, new_cross) = L.scan_stack(
+            cfg, body, x, (params["dec_layers"], (self_c, cross_c))
+        )
+        hn = L.apply_norm(cfg, params["final_norm"], x)
+        logits = L.apply_unembed(ctx, params["embed"], hn)
+        return logits[:, 0], (new_self, new_cross)

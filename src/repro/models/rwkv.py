@@ -1,0 +1,324 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent decay.
+
+Time-mix uses the WKV6 recurrence  S_t = diag(w_t)·S_{t-1} + k_tᵀv_t,
+o_t = r_t·(S_{t-1} + diag(u)·k_tᵀv_t), computed *chunkwise-parallel* in log
+space for stability (see kernels/wkv6_ref.py for the oracle form; the
+Pallas kernel implements the same chunking for TPU).  Decode carries an
+O(1) state per layer — no KV cache — which is why this arch runs the
+``long_500k`` cell.
+
+Simplified vs. the full release: the data-dependent token-shift (ddlerp)
+uses a single learned mix per stream instead of the 5×LoRA stack, and the
+decay LoRA is kept (it is the paper's headline feature).  Recorded in
+DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import ParamSpec
+from repro.models import layers as L
+from repro.models.layers import ModelContext
+
+
+def _chunk_size(S: int, target: int = 128) -> int:
+    for c in (target, 64, 32, 16, 8, 4, 2, 1):
+        if S % c == 0:
+            return c
+    return 1
+
+
+def wkv6_chunked(
+    r: jax.Array,  # (B, S, H, K)
+    k: jax.Array,  # (B, S, H, K)
+    v: jax.Array,  # (B, S, H, V)
+    lw: jax.Array,  # (B, S, H, K) log-decay per step (≤ 0)
+    u: jax.Array,  # (H, K) bonus for the current token
+    state: jax.Array | None = None,  # (B, H, K, V)
+    chunk: int = 128,
+    unroll: bool = False,
+):
+    """Chunkwise-parallel WKV6.  Returns (out (B,S,H,V), final state).
+
+    ``unroll=True`` runs the chunk loop as Python (same math) so the
+    dry-run's roofline probes see every chunk in cost_analysis.
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    C = _chunk_size(S, chunk)
+    N = S // C
+    f32 = jnp.float32
+
+    rc = r.reshape(B, N, C, H, K).astype(f32)
+    kc = k.reshape(B, N, C, H, K).astype(f32)
+    vc = v.reshape(B, N, C, H, V).astype(f32)
+    lwc = lw.reshape(B, N, C, H, K).astype(f32)
+
+    s0 = (
+        state.astype(f32)
+        if state is not None
+        else jnp.zeros((B, H, K, V), f32)
+    )
+
+    def chunk_step(s, xs):
+        rj, kj, vj, lwj = xs  # (B, C, H, K/V)
+        la = jnp.cumsum(lwj, axis=1)  # log cumulative decay within chunk
+        lam = la - lwj  # exclusive cumulative decay (up to t-1), ≤ 0
+        # inter-chunk: o_t += (r_t * exp(lam_t)) @ s
+        o_inter = jnp.einsum("bchk,bhkv->bchv", rj * jnp.exp(lam), s)
+        # intra-chunk: scores_ts = Σ_k r_t k_s exp(lam_{t,k} - la_{s,k}), s<t.
+        # The decay difference is masked BEFORE exp: it is ≤0 in the causal
+        # region, so this is overflow-safe for arbitrarily strong decays
+        # (a factored exp(lam)·exp(-la) dot-product overflows when |la|≳88).
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)  # (t, s), strict
+        diff = lam[:, :, None] - la[:, None]  # (B, C, C, H, K) [t, s]
+        diff = jnp.where(mask[None, :, :, None, None], diff, -jnp.inf)
+        scores = jnp.einsum("bchk,bshk,bcshk->bhcs", rj, kj, jnp.exp(diff))
+        o_intra = jnp.einsum("bhcs,bshv->bchv", scores, vj)
+        # current-token bonus: r_t · (u * k_t) v_t
+        bonus = jnp.einsum("bchk,hk,bchk->bch", rj, u.astype(f32), kj)
+        o_cur = bonus[..., None] * vj
+        # state update: s' = s * exp(la_C) + Σ_s (k_s exp(la_C - la_s)) v_s
+        laC = la[:, -1:]  # (B,1,H,K)
+        k_dec = kj * jnp.exp(laC - la)
+        s_new = s * jnp.exp(laC[:, 0])[..., None] + jnp.einsum(
+            "bchk,bchv->bhkv", k_dec, vj
+        )
+        return s_new, o_inter + o_intra + o_cur
+
+    if unroll:
+        s, outs_l = s0, []
+        for j in range(N):
+            s, oj = chunk_step(s, (rc[:, j], kc[:, j], vc[:, j], lwc[:, j]))
+            outs_l.append(oj)
+        sF = s
+        out = jnp.concatenate(outs_l, axis=1)
+    else:
+        sF, outs = jax.lax.scan(chunk_step, s0, (
+            rc.transpose(1, 0, 2, 3, 4),
+            kc.transpose(1, 0, 2, 3, 4),
+            vc.transpose(1, 0, 2, 3, 4),
+            lwc.transpose(1, 0, 2, 3, 4),
+        ))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, V)
+    return out.astype(v.dtype), sF
+
+
+def wkv6_step(r, k, v, lw, u, state):
+    """Single-token recurrence for decode.  r,k,lw: (B,H,K); v: (B,H,V);
+    state: (B,H,K,V) → (out (B,H,V), new state)."""
+    f32 = jnp.float32
+    out_dtype = v.dtype
+    r, k, v, lw = (x.astype(f32) for x in (r, k, v, lw))
+    kv = k[..., None] * v[..., None, :]  # (B,H,K,V)
+    s_att = state + u.astype(f32)[None, :, :, None] * kv
+    out = jnp.einsum("bhk,bhkv->bhv", r, s_att)
+    new_state = jnp.exp(lw)[..., None] * state + kv
+    return out.astype(out_dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 blocks
+# ---------------------------------------------------------------------------
+
+
+def timemix_specs(cfg: ArchConfig) -> dict:
+    E = cfg.d_model
+    H = E // cfg.rwkv_head_dim
+    K = cfg.rwkv_head_dim
+    dd = 64  # decay LoRA rank (time_decay_extra_dim)
+    return {
+        "mix_r": ParamSpec((E,), (None,), jnp.float32, 0.0),
+        "mix_k": ParamSpec((E,), (None,), jnp.float32, 0.0),
+        "mix_v": ParamSpec((E,), (None,), jnp.float32, 0.0),
+        "mix_w": ParamSpec((E,), (None,), jnp.float32, 0.0),
+        "mix_g": ParamSpec((E,), (None,), jnp.float32, 0.0),
+        "wr": ParamSpec((E, H, K), ("embed", "heads", None)),
+        "wk": ParamSpec((E, H, K), ("embed", "heads", None)),
+        "wv": ParamSpec((E, H, K), ("embed", "heads", None)),
+        "wg": ParamSpec((E, H, K), ("embed", "heads", None)),
+        "wo": ParamSpec((H, K, E), ("heads", None, "embed")),
+        "decay_base": ParamSpec((H, K), ("heads", None), jnp.float32, 0.02),
+        "decay_lora_a": ParamSpec((E, dd), ("embed", None), jnp.float32),
+        "decay_lora_b": ParamSpec((dd, H, K), (None, "heads", None), jnp.float32),
+        "bonus_u": ParamSpec((H, K), ("heads", None), jnp.float32),
+        "ln_x": ParamSpec((E,), (None,), jnp.float32, 1.0),
+    }
+
+
+def channelmix_specs(cfg: ArchConfig) -> dict:
+    E, F = cfg.d_model, cfg.d_ff
+    return {
+        "mix_k": ParamSpec((E,), (None,), jnp.float32, 0.0),
+        "wk": ParamSpec((E, F), ("embed", "mlp")),
+        "wv": ParamSpec((F, E), ("mlp", "embed")),
+        "wr": ParamSpec((E, E), ("embed", "embed2")),
+    }
+
+
+def _shift(x, last):
+    """Token shift: x_{t-1} with ``last`` filling position 0.
+    x (B,S,E); last (B,1,E)."""
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def apply_timemix(ctx, p, x, last, wkv_state, *, decode: bool):
+    cfg = ctx.cfg
+    E = cfg.d_model
+    H, K = E // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    B, S, _ = x.shape
+    xs = _shift(x, last)
+
+    def lerp(mix):
+        m = mix.astype(x.dtype)
+        return x + (xs - x) * m
+
+    xr, xk, xv, xw, xg = (lerp(p[f"mix_{n}"]) for n in ("r", "k", "v", "w", "g"))
+    r = jnp.einsum("bse,ehk->bshk", xr, p["wr"])
+    k = jnp.einsum("bse,ehk->bshk", xk, p["wk"])
+    v = jnp.einsum("bse,ehk->bshk", xv, p["wv"])
+    g = jnp.einsum("bse,ehk->bshk", xg, p["wg"])
+    # data-dependent decay (the Finch feature): w = exp(-exp(base + lora(xw)))
+    dd = jnp.einsum(
+        "bse,ed->bsd", xw.astype(jnp.float32), p["decay_lora_a"]
+    )
+    dd = jnp.einsum("bsd,dhk->bshk", jnp.tanh(dd), p["decay_lora_b"])
+    lw = -jnp.exp(jnp.clip(p["decay_base"] + dd, -8.0, 4.0))  # log decay ≤ 0
+
+    if decode:
+        o, new_state = wkv6_step(
+            r[:, 0], k[:, 0], v[:, 0], lw[:, 0], p["bonus_u"], wkv_state
+        )
+        o = o[:, None]  # (B,1,H,V)
+    else:
+        o, new_state = wkv6_chunked(r, k, v, lw, p["bonus_u"], wkv_state,
+                                    unroll=not ctx.cfg.scan_layers)
+
+    # group-norm over heads (ln_x), then output gate
+    o = o.reshape(B, S, H, K)
+    o = L.rmsnorm_nogain(o) * p["ln_x"].reshape(H, K).astype(o.dtype)
+    o = o * jax.nn.silu(g)
+    out = jnp.einsum("bshk,hke->bse", o, p["wo"])
+    new_last = x[:, -1:]
+    return ctx.constrain(out, ("batch", None, None)), new_last, new_state
+
+
+def apply_channelmix(ctx, p, x, last):
+    xs = _shift(x, last)
+    xk = x + (xs - x) * p["mix_k"].astype(x.dtype)
+    kk = jnp.einsum("bse,ef->bsf", xk, p["wk"])
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fe->bse", kk, p["wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bse,ee->bse", x, p["wr"]))
+    return ctx.constrain(rr * vv, ("batch", None, None)), x[:, -1:]
+
+
+def rwkv_block_specs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": L.norm_specs(cfg, cfg.d_model),
+        "att": timemix_specs(cfg),
+        "ln2": L.norm_specs(cfg, cfg.d_model),
+        "ffn": channelmix_specs(cfg),
+    }
+
+
+def apply_rwkv_block(ctx, p, x, state, *, decode: bool):
+    """state: {"att_last", "ffn_last", "wkv"}."""
+    cfg = ctx.cfg
+    h = L.apply_norm(cfg, p["ln1"], x)
+    att, att_last, wkv = apply_timemix(
+        ctx, p["att"], h, state["att_last"], state["wkv"], decode=decode
+    )
+    x = x + att
+    h = L.apply_norm(cfg, p["ln2"], x)
+    ffn, ffn_last = apply_channelmix(ctx, p["ffn"], h, state["ffn_last"])
+    x = x + ffn
+    return x, {"att_last": att_last, "ffn_last": ffn_last, "wkv": wkv}
+
+
+class RWKV6LM:
+    """Attention-free LM; state (not KV) carries decode context."""
+
+    def __init__(self, ctx: ModelContext):
+        self.ctx = ctx
+        self.cfg = ctx.cfg
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        from repro.models.transformer import stack_specs
+
+        return {
+            "embed": L.embed_specs(cfg),
+            "layers": stack_specs(rwkv_block_specs(cfg), cfg.n_layers),
+            "final_norm": L.norm_specs(cfg, cfg.d_model),
+        }
+
+    def state_specs(self, batch_size: int) -> dict:
+        cfg = self.cfg
+        E = cfg.d_model
+        H, K = E // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+        dt = jnp.dtype(cfg.dtype)
+        per = {
+            "att_last": ParamSpec((batch_size, 1, E), ("batch", None, None), dt, 0.0),
+            "ffn_last": ParamSpec((batch_size, 1, E), ("batch", None, None), dt, 0.0),
+            "wkv": ParamSpec(
+                (batch_size, H, K, K), ("batch", "heads", None, None), jnp.float32, 0.0
+            ),
+        }
+        from repro.models.transformer import stack_specs
+
+        return stack_specs(per, cfg.n_layers)
+
+    def _zero_state(self, B):
+        from repro.dist.sharding import materialize_params
+
+        return materialize_params(self.state_specs(B), jax.random.PRNGKey(0))
+
+    def _run(self, params, x, state, *, decode: bool):
+        ctx = self.ctx
+
+        def body(x, xs):
+            p, st = xs
+            out, new_st = apply_rwkv_block(ctx, p, x, st, decode=decode)
+            return out, new_st
+
+        from repro.models.transformer import _remat
+
+        x, new_state = L.scan_stack(
+            self.cfg, _remat(self.cfg, body), x, (params["layers"], state)
+        )
+        return x, new_state
+
+    def loss(self, params, batch):
+        cfg, ctx = self.cfg, self.ctx
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = L.apply_embed(ctx, params["embed"], tokens)
+        state = self._zero_state(tokens.shape[0])
+        h, _ = self._run(params, x, state, decode=False)
+        hn = L.apply_norm(cfg, params["final_norm"], h)
+        logits = L.apply_unembed(ctx, params["embed"], hn)
+        loss = L.cross_entropy(ctx, logits, labels)
+        return loss, {"ce": loss}
+
+    def prefill(self, params, tokens, max_len: int = 0):
+        cfg, ctx = self.cfg, self.ctx
+        x = L.apply_embed(ctx, params["embed"], tokens)
+        state = self._zero_state(tokens.shape[0])
+        h, state = self._run(params, x, state, decode=False)
+        hn = L.apply_norm(cfg, params["final_norm"], h[:, -1:])
+        logits = L.apply_unembed(ctx, params["embed"], hn)
+        return logits[:, 0], state
+
+    def decode_step(self, params, state, tokens, index=None):
+        cfg, ctx = self.cfg, self.ctx
+        x = L.apply_embed(ctx, params["embed"], tokens)
+        h, new_state = self._run(params, x, state, decode=True)
+        hn = L.apply_norm(cfg, params["final_norm"], h)
+        logits = L.apply_unembed(ctx, params["embed"], hn)
+        return logits[:, 0], new_state
+
+    cache_specs = None  # uses state_specs instead (O(1) decode state)

@@ -1,0 +1,326 @@
+"""Decoder-only LM covering the dense / moe / mla_moe families.
+
+Layers are ``lax.scan``-stacked (one compiled body, small HLO) with a
+selectable remat policy.  deepseek-v3's ``first_k_dense`` leading layers are
+unrolled separately (heterogeneous vs. the MoE stack), and its MTP head
+(depth 1) adds a weighted auxiliary next-next-token loss.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import ParamSpec
+from repro.models import layers as L
+from repro.models.layers import ModelContext
+from repro.models.moe import apply_moe, moe_specs
+
+
+def stack_specs(specs, n: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (None,) + s.axes, s.dtype, s.init_scale),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)  # "full"
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def block_specs(cfg: ArchConfig, *, moe: bool) -> dict:
+    s = {
+        "ln1": L.norm_specs(cfg, cfg.d_model),
+        "ln2": L.norm_specs(cfg, cfg.d_model),
+    }
+    s["attn"] = L.mla_specs(cfg) if cfg.use_mla else L.attention_specs(cfg)
+    s["ffn"] = moe_specs(cfg) if moe else L.mlp_specs(cfg)
+    return s
+
+
+def apply_block(
+    ctx: ModelContext,
+    p: dict,
+    x: jax.Array,
+    rope,
+    *,
+    moe: bool,
+    cache: dict | None = None,
+    cache_index=None,
+):
+    cfg = ctx.cfg
+    h = L.apply_norm(cfg, p["ln1"], x)
+    if cfg.use_mla:
+        attn_out, new_cache = L.apply_mla(
+            ctx, p["attn"], h, rope=rope, cache=cache, cache_index=cache_index
+        )
+    else:
+        attn_out, new_cache = L.apply_attention(
+            ctx, p["attn"], h, rope=rope, cache=cache, cache_index=cache_index
+        )
+    x = x + attn_out
+    h = L.apply_norm(cfg, p["ln2"], x)
+    if moe:
+        ffn_out, aux = apply_moe(ctx, p["ffn"], h)
+    else:
+        ffn_out, aux = L.apply_mlp(ctx, p["ffn"], h), jnp.float32(0.0)
+    return x + ffn_out, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class DecoderLM:
+    def __init__(self, ctx: ModelContext):
+        self.ctx = ctx
+        self.cfg = ctx.cfg
+
+    # -- params -------------------------------------------------------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        is_moe = cfg.family in ("moe", "mla_moe")
+        n_moe = cfg.n_layers - cfg.first_k_dense if is_moe else 0
+        n_dense = cfg.first_k_dense if is_moe else cfg.n_layers
+        s: dict = {"embed": L.embed_specs(cfg), "final_norm": L.norm_specs(cfg, cfg.d_model)}
+        if n_dense:
+            s["dense_layers"] = stack_specs(block_specs(cfg, moe=False), n_dense)
+        if n_moe:
+            s["moe_layers"] = stack_specs(block_specs(cfg, moe=True), n_moe)
+        if cfg.use_mtp:
+            s["mtp"] = {
+                "proj": ParamSpec((2 * cfg.d_model, cfg.d_model), (None, "embed")),
+                "block": block_specs(cfg, moe=False),
+                "final_norm": L.norm_specs(cfg, cfg.d_model),
+            }
+        return s
+
+    # -- shared trunk ---------------------------------------------------------
+    def _rope(self, batch: dict, positions=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        if cfg.use_mrope:
+            pos = batch.get("positions")
+            if pos is None:
+                p1 = jnp.broadcast_to(
+                    positions if positions is not None else jnp.arange(S)[None], (B, S)
+                )
+                pos = jnp.stack([p1, p1, p1])
+            dim = cfg.qk_rope_dim if cfg.use_mla else int(cfg.rotary_pct * cfg.head_dim_)
+            return L.mrope_cos_sin(pos, dim, cfg.rope_theta, cfg.mrope_sections)
+        pos = positions if positions is not None else jnp.arange(S)[None]
+        pos = jnp.broadcast_to(pos, (B, S))
+        dim = cfg.qk_rope_dim if cfg.use_mla else int(cfg.rotary_pct * cfg.head_dim_)
+        dim -= dim % 2
+        if dim == 0:
+            return None
+        return L.rope_cos_sin(pos, dim, cfg.rope_theta)
+
+    def _embed_inputs(self, params, batch):
+        cfg, ctx = self.cfg, self.ctx
+        x = L.apply_embed(ctx, params["embed"], batch["tokens"])
+        if cfg.vision_embeds and "vision_embeds" in batch:
+            V = cfg.vision_embeds
+            ve = batch["vision_embeds"].astype(x.dtype)
+            x = jnp.concatenate([ve, x[:, V:]], axis=1)
+        return x
+
+    def _trunk(self, params, x, rope):
+        """Run all layers (train/scoring path: no cache)."""
+        cfg, ctx = self.cfg, self.ctx
+        aux_total = jnp.float32(0.0)
+
+        def dense_body(x, p):
+            out, _, aux = apply_block(ctx, p, x, rope, moe=False)
+            return out, aux
+
+        def moe_body(x, p):
+            out, _, aux = apply_block(ctx, p, x, rope, moe=True)
+            return out, aux
+
+        if "dense_layers" in params:
+            if cfg.scan_layers:
+                x, auxs = jax.lax.scan(_remat(cfg, dense_body), x, params["dense_layers"])
+                aux_total += auxs.sum()
+            else:
+                nd = jax.tree.leaves(params["dense_layers"])[0].shape[0]
+                for i in range(nd):
+                    p = jax.tree.map(lambda a: a[i], params["dense_layers"])
+                    x, aux = _remat(cfg, dense_body)(x, p)
+                    aux_total += aux
+        if "moe_layers" in params:
+            if cfg.scan_layers:
+                x, auxs = jax.lax.scan(_remat(cfg, moe_body), x, params["moe_layers"])
+                aux_total += auxs.sum()
+            else:
+                nm = jax.tree.leaves(params["moe_layers"])[0].shape[0]
+                for i in range(nm):
+                    p = jax.tree.map(lambda a: a[i], params["moe_layers"])
+                    x, aux = _remat(cfg, moe_body)(x, p)
+                    aux_total += aux
+        return x, aux_total
+
+    # -- training loss ----------------------------------------------------------
+    def loss(self, params, batch):
+        cfg, ctx = self.cfg, self.ctx
+        rope = self._rope(batch)
+        x = self._embed_inputs(params, batch)
+        h, aux = self._trunk(params, x, rope)
+        hn = L.apply_norm(cfg, params["final_norm"], h)
+        logits = L.apply_unembed(ctx, params["embed"], hn)
+        labels = batch["labels"]
+        loss = L.cross_entropy(ctx, logits, labels)
+        metrics = {"ce": loss, "aux": aux}
+        total = loss + cfg.router_aux_weight * aux
+
+        if cfg.use_mtp:
+            mtp_loss = self._mtp_loss(params, batch, h, rope)
+            metrics["mtp"] = mtp_loss
+            total = total + 0.3 * mtp_loss
+        return total, metrics
+
+    def _mtp_loss(self, params, batch, h, rope):
+        """deepseek-v3 MTP (depth 1): predict t+2 from h_t ++ emb(t+1)."""
+        cfg, ctx = self.cfg, self.ctx
+        p = params["mtp"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        nxt = jnp.roll(tokens, -1, axis=1)  # token t+1
+        emb_next = L.apply_embed(ctx, params["embed"], nxt)
+        hcat = jnp.concatenate(
+            [L.rmsnorm_nogain(h), L.rmsnorm_nogain(emb_next)], axis=-1
+        )
+        hp = jnp.einsum("bsf,fe->bse", hcat, p["proj"])
+        hp, _, _ = apply_block(ctx, p["block"], hp, rope, moe=False)
+        hp = L.apply_norm(cfg, p["final_norm"], hp)
+        logits = L.apply_unembed(ctx, params["embed"], hp)
+        # label for position t is tok_{t+2} ≡ labels shifted by 1; mask tail
+        lab2 = jnp.roll(labels, -1, axis=1).at[:, -1].set(-1).at[:, -2].set(-1)
+        return L.cross_entropy(ctx, logits, lab2)
+
+    # -- serving ------------------------------------------------------------------
+    def cache_specs(self, batch_size: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.use_mla:
+            per = {
+                "ckv": ParamSpec(
+                    (batch_size, max_len, cfg.kv_lora_rank),
+                    ("batch", "kv_seq", None), dt, 0.0,
+                ),
+                "kr": ParamSpec(
+                    (batch_size, max_len, 1, cfg.qk_rope_dim),
+                    ("batch", "kv_seq", None, None), dt, 0.0,
+                ),
+            }
+        else:
+            per = {
+                "k": ParamSpec(
+                    (batch_size, max_len, cfg.n_kv_heads, cfg.head_dim_),
+                    ("batch", "kv_seq", "kv_heads", None), dt, 0.0,
+                ),
+                "v": ParamSpec(
+                    (batch_size, max_len, cfg.n_kv_heads, cfg.head_dim_),
+                    ("batch", "kv_seq", "kv_heads", None), dt, 0.0,
+                ),
+            }
+        return stack_specs(per, cfg.n_layers)
+
+    def decode_step(self, params, cache, tokens, index):
+        """One decode step.  tokens (B, 1); cache stacked (L, ...);
+        index: scalar position of the new token."""
+        cfg, ctx = self.cfg, self.ctx
+        B = tokens.shape[0]
+        rope = self._rope({"tokens": tokens}, positions=jnp.full((1, 1), index))
+        x = L.apply_embed(ctx, params["embed"], tokens)
+
+        all_layers = []
+        if "dense_layers" in params:
+            all_layers.append((params["dense_layers"], False))
+        if "moe_layers" in params:
+            all_layers.append((params["moe_layers"], True))
+        # split the stacked cache to match the dense/moe partition
+        n_dense = (
+            jax.tree.leaves(params["dense_layers"])[0].shape[0]
+            if "dense_layers" in params else 0
+        )
+        caches = []
+        if n_dense:
+            caches.append(jax.tree.map(lambda c: c[:n_dense], cache))
+        if "moe_layers" in params:
+            caches.append(jax.tree.map(lambda c: c[n_dense:], cache))
+
+        new_caches = []
+        for (lp, is_moe), lc in zip(all_layers, caches):
+            def body(x, scanned, is_moe=is_moe):
+                p, c = scanned
+                out, nc, _ = apply_block(
+                    ctx, p, x, rope, moe=is_moe, cache=c, cache_index=index
+                )
+                return out, nc
+
+            x, nc = L.scan_stack(cfg, body, x, (lp, lc))
+            new_caches.append(nc)
+
+        new_cache = (
+            jax.tree.map(lambda *cs: jnp.concatenate(cs, 0), *new_caches)
+            if len(new_caches) > 1 else new_caches[0]
+        )
+        hn = L.apply_norm(cfg, params["final_norm"], x)
+        logits = L.apply_unembed(ctx, params["embed"], hn)
+        return logits[:, 0], new_cache
+
+    def prefill(self, params, tokens, max_len: int):
+        """Prefill: run the full prompt, return (last-token logits, cache)."""
+        cfg, ctx = self.cfg, self.ctx
+        B, S = tokens.shape
+        rope = self._rope({"tokens": tokens})
+        x = self._embed_inputs(params, {"tokens": tokens})
+
+        def mk_body(is_moe):
+            def body(x, p):
+                out, nc, _ = apply_block(
+                    ctx, p, x, rope, moe=is_moe, cache={}, cache_index=None
+                )
+                return out, nc
+            return body
+
+        new_caches = []
+        if "dense_layers" in params:
+            x, nc = L.scan_stack(cfg, mk_body(False), x, params["dense_layers"])
+            new_caches.append(nc)
+        if "moe_layers" in params:
+            x, nc = L.scan_stack(cfg, mk_body(True), x, params["moe_layers"])
+            new_caches.append(nc)
+        cache = (
+            jax.tree.map(lambda *cs: jnp.concatenate(cs, 0), *new_caches)
+            if len(new_caches) > 1 else new_caches[0]
+        )
+        # pad cache out to max_len along the sequence axis
+        def pad(c):
+            pad_len = max_len - c.shape[2]
+            if pad_len <= 0:
+                return c
+            pad_width = [(0, 0)] * c.ndim
+            pad_width[2] = (0, pad_len)
+            return jnp.pad(c, pad_width)
+
+        cache = jax.tree.map(pad, cache)
+        hn = L.apply_norm(cfg, params["final_norm"], x)
+        logits = L.apply_unembed(ctx, params["embed"], hn[:, -1:])
+        return logits[:, 0], cache

@@ -1,0 +1,8 @@
+from repro.optim.adamw import AdamW, AdamWConfig, Adafactor, build_optimizer, lr_at
+from repro.optim.grad_compress import (
+    compress_with_feedback,
+    compressed_psum,
+    dequantize_int8,
+    quantize_int8,
+    tree_compressed_pmean,
+)

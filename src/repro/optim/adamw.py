@@ -1,0 +1,195 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (sub-linear memory).
+
+Functional, pytree-based, sharding-transparent: optimizer state mirrors the
+parameter tree, so the same NamedShardings (plus ZeRO-style extra sharding
+for moments) apply leaf-wise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio·lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig):
+        self.cfg = cfg
+
+    def init(self, params):
+        f32zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(f32zeros, params),
+            "v": jax.tree.map(f32zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def state_specs(self, param_specs):
+        """ParamSpec tree for optimizer state (fp32 moments, same axes)."""
+        from repro.dist.sharding import ParamSpec
+
+        f32 = lambda s: ParamSpec(s.shape, s.axes, jnp.float32, 0.0)
+        mk = lambda: jax.tree.map(
+            f32, param_specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+        )
+        return {
+            "m": mk(),
+            "v": mk(),
+            "step": ParamSpec((), (), jnp.int32, 0.0),
+        }
+
+    def update(self, grads, state, params):
+        cfg = self.cfg
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = lr_at(cfg, step)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            # decoupled weight decay on matrices only (ndim ≥ 2)
+            if p.ndim >= 2:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": new_m, "v": new_v, "step": step}
+        return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+class Adafactor:
+    """Factored second moments (Shazeer & Stern) — sub-linear optimizer
+    memory for the 671B-scale cells; used by the memory hillclimb."""
+
+    def __init__(self, cfg: AdamWConfig):
+        self.cfg = cfg
+
+    def _factored(self, shape) -> bool:
+        return len(shape) >= 2
+
+    def init(self, params):
+        def leaf(p):
+            if self._factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree.map(leaf, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def state_specs(self, param_specs):
+        from repro.dist.sharding import ParamSpec
+
+        def leaf(s):
+            if self._factored(s.shape):
+                return {
+                    "vr": ParamSpec(s.shape[:-1], s.axes[:-1], jnp.float32, 0.0),
+                    "vc": ParamSpec(
+                        s.shape[:-2] + s.shape[-1:], s.axes[:-2] + s.axes[-1:],
+                        jnp.float32, 0.0,
+                    ),
+                }
+            return {"v": ParamSpec(s.shape, s.axes, jnp.float32, 0.0)}
+
+        return {
+            "v": jax.tree.map(
+                leaf, param_specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+            ),
+            "step": ParamSpec((), (), jnp.int32, 0.0),
+        }
+
+    def update(self, grads, state, params):
+        cfg = self.cfg
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = lr_at(cfg, step)
+        decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+        def upd(p, g, v):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + 1e-30
+            if self._factored(p.shape):
+                vr = decay * v["vr"] + (1 - decay) * g2.mean(-1)
+                vc = decay * v["vc"] + (1 - decay) * g2.mean(-2)
+                denom = (
+                    vr[..., None] * vc[..., None, :] / jnp.maximum(
+                        vr.mean(-1, keepdims=True)[..., None], 1e-30
+                    )
+                )
+                delta = g32 * jax.lax.rsqrt(denom + 1e-30)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nvv = decay * v["v"] + (1 - decay) * g2
+                delta = g32 * jax.lax.rsqrt(nvv + 1e-30)
+                nv = {"v": nvv}
+            # update clipping (RMS ≤ 1) per Adafactor
+            rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+            delta = delta / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), nv
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_v = tdef.unflatten([o[1] for o in outs])
+        return new_params, {"v": new_v, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+
+def build_optimizer(name: str, cfg: AdamWConfig):
+    return {"adamw": AdamW, "adafactor": Adafactor}[name](cfg)

@@ -1,0 +1,233 @@
+"""Continuous-batching serving engine on the proxy patterns.
+
+Architecture = the paper's Fig 4 applied to inference:
+
+- requests arrive on a **ProxyStream**: the scheduler (dispatcher) consumes
+  *metadata only* (request id, prompt length, max tokens); the prompt bulk
+  stays in the store until the engine actually admits the request.
+- each admitted sequence's control-plane state (pages, prompt) is
+  **ownership**-managed (kvcache.PageTable) — completion deterministically
+  frees everything.
+- results are published back on a response stream; the paper's persistent-
+  inference-task DeepDriveMD integration is exactly this loop (one
+  long-lived engine, streamed batches in/out, no per-task model reloads).
+
+Decode is a single jit'd batched step over slot-packed caches; slots admit
+new requests as others finish (continuous batching).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.proxy import Proxy, extract, is_resolved
+from repro.core.store import Store
+from repro.core.streaming import StreamConsumer, StreamProducer
+from repro.models.api import build_model
+from repro.models.layers import ModelContext
+from repro.serve.kvcache import PageTable
+
+
+@dataclass
+class Request:
+    req_id: str
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    arrived: float = field(default_factory=time.perf_counter)
+
+
+@dataclass
+class SlotState:
+    req: Request | None = None
+    pos: int = 0  # current length (prompt + generated)
+    generated: list[int] = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        ctx: ModelContext,
+        params,
+        *,
+        slots: int = 4,
+        max_len: int = 128,
+        page_size: int = 16,
+        eos_id: int = 0,
+    ):
+        self.ctx = ctx
+        self.cfg = ctx.cfg
+        self.model = build_model(ctx)
+        self.params = params
+        self.slots = [SlotState() for _ in range(slots)]
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.kv_store = Store(f"kv-{id(self)}")
+        self.pages = PageTable(
+            num_pages=slots * (max_len // page_size),
+            page_size=page_size,
+            store=self.kv_store,
+        )
+        self._decode = jax.jit(
+            lambda p, c, t, lens: self._decode_body(p, c, t, lens)
+        )
+        self._cache = None  # stacked (L, B, S, ...) pytree
+        self.completed: dict[str, dict] = {}
+        self.metrics = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+
+    # -- model glue ---------------------------------------------------------
+    def _decode_body(self, params, cache, tokens, lens):
+        """Per-slot positions: decode each slot at its own index.
+
+        The batched decode step uses a shared scalar index in the model API;
+        for continuous batching each slot has its own position, so we decode
+        with per-slot gather/scatter via vmap over the batch axis.
+        """
+        B = tokens.shape[0]
+
+        def one(cache_b, tok_b, len_b):
+            c = jax.tree.map(lambda x: x[:, None], cache_b)  # re-add batch dim
+            logits, nc = self.model.decode_step(params, c, tok_b[None], len_b)
+            return jax.tree.map(lambda x: x[:, 0], nc), logits[0]
+
+        new_cache, logits = jax.vmap(
+            one, in_axes=(1, 0, 0), out_axes=(1, 0)
+        )(cache, tokens, lens)
+        return new_cache, logits
+
+    def _ensure_cache(self):
+        if self._cache is None:
+            from repro.dist.sharding import materialize_params
+
+            specs = self.model.cache_specs(len(self.slots), self.max_len)
+            self._cache = materialize_params(specs, jax.random.PRNGKey(0))
+
+    # -- request admission ------------------------------------------------------
+    def admit(self, req: Request, slot_idx: int):
+        cfg = self.cfg
+        slot = self.slots[slot_idx]
+        prompt = jnp.asarray(req.prompt[None], jnp.int32)
+        self.pages.allocate(req.req_id, len(req.prompt))
+        _, cache1 = self.model.prefill(self.params, prompt, self.max_len)
+        self._ensure_cache()
+        # write this slot's prefill cache into the batched cache
+        self._cache = jax.tree.map(
+            lambda full, one: full.at[:, slot_idx].set(one[:, 0]), self._cache, cache1
+        )
+        slot.req = req
+        slot.pos = len(req.prompt)
+        slot.generated = []
+        self.metrics["prefills"] += 1
+
+    def _finish(self, slot_idx: int):
+        slot = self.slots[slot_idx]
+        req = slot.req
+        self.pages.free_sequence(req.req_id)  # ownership free → pages recycled
+        self.completed[req.req_id] = {
+            "tokens": list(slot.generated),
+            "latency": time.perf_counter() - req.arrived,
+        }
+        slot.req = None
+        slot.pos = 0
+        slot.generated = []
+
+    # -- main loop -----------------------------------------------------------------
+    def run(
+        self,
+        request_consumer: StreamConsumer,
+        response_producer: StreamProducer | None = None,
+        *,
+        max_requests: int | None = None,
+        greedy: bool = True,
+    ):
+        """Serve until the request stream closes and all slots drain."""
+        pending: list[Request] = []
+        stream_open = True
+        served = 0
+
+        def pull_requests():
+            nonlocal stream_open
+            while stream_open:
+                try:
+                    proxy, meta = request_consumer.next_with_metadata()
+                except StopIteration:
+                    stream_open = False
+                    break
+                except TimeoutError:
+                    break
+                # metadata-only dispatch: bulk prompt resolves here, in the
+                # engine, not in any intermediate scheduler
+                body = extract(proxy)
+                pending.append(
+                    Request(
+                        req_id=meta["req_id"],
+                        prompt=np.asarray(body["prompt"], np.int32),
+                        max_new_tokens=int(meta.get("max_new_tokens", 16)),
+                    )
+                )
+                if len(pending) >= len(self.slots):
+                    break
+
+        while True:
+            pull_requests()
+            # admit into free slots
+            for i, slot in enumerate(self.slots):
+                if slot.req is None and pending:
+                    self.admit(pending.pop(0), i)
+            active = [i for i, s in enumerate(self.slots) if s.req is not None]
+            if not active:
+                if not stream_open and not pending:
+                    break
+                if max_requests is not None and served >= max_requests:
+                    break
+                time.sleep(0.005)
+                continue
+            # batched decode step (idle slots decode garbage at pos 0 — masked)
+            tokens = np.zeros((len(self.slots),), np.int32)
+            lens = np.zeros((len(self.slots),), np.int32)
+            for i, s in enumerate(self.slots):
+                if s.req is not None:
+                    last = (
+                        s.generated[-1]
+                        if s.generated
+                        else int(s.req.prompt[-1])
+                    )
+                    tokens[i] = last
+                    lens[i] = s.pos
+            self._ensure_cache()
+            self._cache, logits = self._decode(
+                self.params, self._cache, jnp.asarray(tokens[:, None]),
+                jnp.asarray(lens),
+            )
+            self.metrics["decode_steps"] += 1
+            logits_np = np.asarray(logits, np.float32)
+            for i in active:
+                s = self.slots[i]
+                nxt = int(np.argmax(logits_np[i, : self.cfg.vocab]))
+                s.generated.append(nxt)
+                s.pos += 1
+                self.pages.extend(s.req.req_id, s.pos)
+                self.metrics["tokens"] += 1
+                done = (
+                    nxt == self.eos_id
+                    or len(s.generated) >= s.req.max_new_tokens
+                    or s.pos >= self.max_len - 1
+                )
+                if done:
+                    req_id = s.req.req_id
+                    self._finish(i)
+                    served += 1
+                    if response_producer is not None:
+                        response_producer.send(
+                            "responses",
+                            {"req_id": req_id, **self.completed[req_id]},
+                            metadata={"req_id": req_id},
+                        )
+                        response_producer.flush_topic("responses")
+        if response_producer is not None:
+            response_producer.close_topic("responses")
+        return self.completed

@@ -1,0 +1,89 @@
+"""Paged KV-cache bookkeeping under the ownership pattern (paper §IV-C).
+
+The device-side KV cache is a dense (L, B_slots, S_max, …) tensor managed by
+XLA; what leaks in real serving systems is the *control-plane* state — which
+sequence owns which pages, when they can be reused, and the host-side
+prompt/result payloads.  Here every sequence's page list is an
+:class:`OwnedProxy` in a Store: finishing a sequence frees the owner, which
+deterministically evicts the metadata and returns pages to the free pool —
+the MOF-generation behaviour from the paper's Fig 10 (no manual bookkeeping,
+no leaks), with runtime borrow rules protecting in-flight reads.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.ownership import OwnedProxy, borrow, free, owned_proxy, release
+from repro.core.store import Store
+
+
+@dataclass
+class PageTable:
+    """Free-list page allocator for one model's KV pool."""
+
+    num_pages: int
+    page_size: int
+    store: Store
+    _free: list[int] = field(default_factory=list)
+    _owners: dict[str, OwnedProxy] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self._free = list(range(self.num_pages))
+
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def pages_needed(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    def allocate(self, seq_id: str, tokens: int) -> list[int]:
+        n = self.pages_needed(tokens)
+        if n > len(self._free):
+            raise MemoryError(
+                f"KV pool exhausted: need {n} pages, {len(self._free)} free"
+            )
+        pages = [self._free.pop() for _ in range(n)]
+        self._owners[seq_id] = owned_proxy(
+            self.store, {"seq": seq_id, "pages": pages}, key=f"pages-{seq_id}"
+        )
+        return pages
+
+    def extend(self, seq_id: str, new_total_tokens: int) -> list[int]:
+        owner = self._owners[seq_id]
+        meta = dict(owner)
+        have = len(meta["pages"])
+        need = self.pages_needed(new_total_tokens)
+        added = []
+        if need > have:
+            if need - have > len(self._free):
+                raise MemoryError("KV pool exhausted on extend")
+            added = [self._free.pop() for _ in range(need - have)]
+            meta["pages"] = meta["pages"] + added
+            # write-back through the ownership API
+            from repro.core.ownership import update
+            from repro.core.proxy import extract
+
+            owner["pages"] = meta["pages"]
+            update(owner)
+        return added
+
+    def pages_of(self, seq_id: str) -> list[int]:
+        ref = borrow(self._owners[seq_id])
+        try:
+            return list(ref["pages"])
+        finally:
+            release(ref)
+
+    def free_sequence(self, seq_id: str) -> None:
+        """End of sequence: the owner frees; pages return to the pool."""
+        owner = self._owners.pop(seq_id)
+        pages = list(owner["pages"])
+        free(owner)  # raises OwnershipError if a borrow is still outstanding
+        self._free.extend(pages)
+
+    def live_sequences(self) -> list[str]:
+        return list(self._owners)

@@ -1,0 +1,204 @@
+"""Train/serve step factories: jit'd, sharded, donated.
+
+Buffer donation of the training state is the ownership pattern at the XLA
+level — the caller *yields ownership* of the previous state's buffers to the
+step (paper §IV-C maps directly onto ``donate_argnums``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import (
+    AxisRules,
+    ParamSpec,
+    abstract_params,
+    logical_to_spec,
+    sharding_tree,
+)
+from repro.models.api import (
+    build_model,
+    decode_cache_specs,
+    train_input_shardings,
+    train_input_specs,
+)
+from repro.models.layers import ModelContext
+from repro.optim.adamw import AdamWConfig, build_optimizer
+
+
+@dataclass
+class StepBundle:
+    """Everything needed to lower/compile/run one step kind."""
+
+    fn: Any  # the jit'd function
+    in_specs: Any  # abstract inputs (ShapeDtypeStructs) for AOT lowering
+    state_shardings: Any
+    model: Any
+    ctx: ModelContext
+
+
+def make_train_step(
+    ctx: ModelContext,
+    *,
+    optimizer: str = "adamw",
+    opt_cfg: AdamWConfig | None = None,
+    microbatch: int = 0,
+    donate: bool = True,
+) -> StepBundle:
+    """Build the jit'd train step for (cfg, mesh, rules).
+
+    ``microbatch > 0`` enables gradient accumulation: the global batch is
+    split into ``microbatch`` sequential slices scanned with accumulated
+    grads (activation memory ÷ microbatch; the FSDP all-gathers repeat).
+    """
+    cfg, mesh, rules = ctx.cfg, ctx.mesh, ctx.rules
+    model = build_model(ctx)
+    opt = build_optimizer(optimizer, opt_cfg or AdamWConfig())
+
+    pspecs = model.param_specs()
+    ospecs = opt.state_specs(pspecs)
+    param_sh = sharding_tree(pspecs, rules, mesh)
+    opt_sh = sharding_tree(ospecs, rules, mesh)
+    state_sh = {"params": param_sh, "opt": opt_sh}
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def step(state, batch):
+        params = state["params"]
+        if microbatch and microbatch > 1:
+            B = batch["tokens"].shape[0]
+
+            def micro(acc, mb):
+                (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return acc, (loss, metrics)
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def split(x):
+                if hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] == B:
+                    return x.reshape((microbatch, B // microbatch) + x.shape[1:])
+                if hasattr(x, "ndim") and x.ndim >= 2 and x.shape[1] == B:
+                    # (3, B, S) position ids: microbatch along axis 1
+                    y = x.reshape(
+                        (x.shape[0], microbatch, B // microbatch) + x.shape[2:]
+                    )
+                    return jnp.moveaxis(y, 1, 0)
+                return jnp.broadcast_to(x, (microbatch,) + x.shape)
+
+            mbs = jax.tree.map(split, batch)
+            grads, (losses, metricses) = jax.lax.scan(micro, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            metrics = jax.tree.map(lambda m: m.mean(0), metricses)
+            loss = losses.mean()
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        new_params, new_opt, opt_metrics = opt.update(grads, state["opt"], params)
+        new_state = {"params": new_params, "opt": new_opt}
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_state, metrics
+
+    batch_specs = train_input_specs(cfg, 0, 0)  # placeholder; caller sizes it
+    fn = jax.jit(
+        step,
+        donate_argnums=(0,) if donate else (),
+    )
+    return StepBundle(fn=fn, in_specs=None, state_shardings=state_sh, model=model, ctx=ctx)
+
+
+def abstract_train_args(ctx: ModelContext, bundle: StepBundle, batch: int, seq: int,
+                        optimizer: str = "adamw", opt_cfg: AdamWConfig | None = None):
+    """(state, batch) ShapeDtypeStructs + shardings for AOT lowering."""
+    cfg, mesh, rules = ctx.cfg, ctx.mesh, ctx.rules
+    model = bundle.model
+    opt = build_optimizer(optimizer, opt_cfg or AdamWConfig())
+    pspecs = model.param_specs()
+    ospecs = opt.state_specs(pspecs)
+    state_abs = {"params": abstract_params(pspecs), "opt": abstract_params(ospecs)}
+    batch_abs = train_input_specs(cfg, batch, seq)
+    state_sh = {
+        "params": sharding_tree(pspecs, rules, mesh),
+        "opt": sharding_tree(ospecs, rules, mesh),
+    }
+    batch_sh = train_input_shardings(cfg, batch_abs, rules, mesh)
+    return state_abs, batch_abs, state_sh, batch_sh
+
+
+def make_decode_step(ctx: ModelContext) -> StepBundle:
+    """jit'd single-token decode (serve_step) with donated cache."""
+    model = build_model(ctx)
+
+    def step(params, cache, tokens, index):
+        return model.decode_step(params, cache, tokens, index)
+
+    fn = jax.jit(step, donate_argnums=(1,))
+    return StepBundle(fn=fn, in_specs=None, state_shardings=None, model=model, ctx=ctx)
+
+
+def abstract_decode_args(ctx: ModelContext, bundle: StepBundle, batch: int, max_len: int):
+    cfg, mesh, rules = ctx.cfg, ctx.mesh, ctx.rules
+    model = bundle.model
+    pspecs = model.param_specs()
+    cspecs = decode_cache_specs(model, cfg, batch, max_len)
+    params_abs = abstract_params(pspecs)
+    cache_abs = abstract_params(cspecs)
+    tokens_abs = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    index_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    params_sh = sharding_tree(pspecs, rules, mesh)
+    cache_sh = sharding_tree(cspecs, rules, mesh)
+    tok_sh = NamedSharding(
+        mesh, logical_to_spec((batch, 1), ("batch", None), rules, mesh)
+    )
+    idx_sh = NamedSharding(mesh, P())
+    return (params_abs, cache_abs, tokens_abs, index_abs), (
+        params_sh, cache_sh, tok_sh, idx_sh,
+    )
+
+
+def make_prefill_step(ctx: ModelContext, max_len: int) -> StepBundle:
+    model = build_model(ctx)
+
+    if ctx.cfg.family == "encdec":
+        def step(params, tokens, frames):
+            return model.prefill(params, tokens, max_len, frames=frames)
+    else:
+        def step(params, tokens):
+            return model.prefill(params, tokens, max_len)
+
+    fn = jax.jit(step, static_argnums=())
+    return StepBundle(fn=fn, in_specs=None, state_shardings=None, model=model, ctx=ctx)
+
+
+def abstract_prefill_args(ctx: ModelContext, bundle: StepBundle, batch: int, seq: int):
+    """ShapeDtypeStructs + shardings for AOT-lowering the prefill step."""
+    cfg, mesh, rules = ctx.cfg, ctx.mesh, ctx.rules
+    model = bundle.model
+    pspecs = model.param_specs()
+    params_abs = abstract_params(pspecs)
+    params_sh = sharding_tree(pspecs, rules, mesh)
+    tokens_abs = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    tok_sh = NamedSharding(
+        mesh, logical_to_spec((batch, seq), ("batch", None), rules, mesh)
+    )
+    args_abs = [params_abs, tokens_abs]
+    args_sh = [params_sh, tok_sh]
+    if cfg.family == "encdec":
+        fshape = (batch, cfg.encoder_frames, cfg.d_model)
+        args_abs.append(jax.ShapeDtypeStruct(fshape, jnp.dtype(cfg.dtype)))
+        args_sh.append(
+            NamedSharding(
+                mesh, logical_to_spec(fshape, ("batch", None, None), rules, mesh)
+            )
+        )
+    return tuple(args_abs), tuple(args_sh)

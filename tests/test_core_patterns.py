@@ -1,0 +1,442 @@
+"""Tests for the three paper patterns: futures (§IV-A), streaming (§IV-B),
+ownership + lifetimes (§IV-C)."""
+import pickle
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ContextLifetime,
+    FileConnector,
+    FileLogPublisher,
+    FileLogSubscriber,
+    InMemoryConnector,
+    LeaseLifetime,
+    OwnershipError,
+    Proxy,
+    ProxyPolicy,
+    QueuePublisher,
+    QueueSubscriber,
+    StaticLifetime,
+    Store,
+    StoreExecutor,
+    StreamConsumer,
+    StreamProducer,
+    borrow,
+    clone,
+    extract,
+    free,
+    into_owned,
+    is_resolved,
+    mut_borrow,
+    owned_proxy,
+    release,
+    update,
+    wait_all,
+)
+from repro.core.ownership import is_valid, num_borrows
+
+
+@pytest.fixture()
+def store():
+    with Store(f"pat-{id(object())}", InMemoryConnector()) as s:
+        yield s
+
+
+# ---------------------------------------------------------------------------
+# ProxyFutures
+# ---------------------------------------------------------------------------
+
+
+class TestProxyFutures:
+    def test_explicit_set_result(self, store):
+        f = store.future()
+        assert not f.done()
+        f.set_result({"v": 1})
+        assert f.done()
+        assert f.result() == {"v": 1}
+
+    def test_double_set_raises(self, store):
+        f = store.future()
+        f.set_result(1)
+        with pytest.raises(RuntimeError):
+            f.set_result(2)
+
+    def test_proxy_created_before_target_exists(self, store):
+        """The core §IV-A property: proxy minted before set_result."""
+        f = store.future()
+        p = f.proxy()
+        assert not is_resolved(p)
+
+        def producer():
+            time.sleep(0.05)
+            f.set_result("value")
+
+        t = threading.Thread(target=producer)
+        t.start()
+        assert p == "value"  # blocks just-in-time
+        t.join()
+
+    def test_consumer_runs_before_producer(self, store):
+        """Listing 1 shape: consumer task dispatched before producer finishes."""
+        f = store.future()
+        p = f.proxy()
+        results = []
+
+        def consumer(data):
+            # implicit: code takes 'data' directly, proxy injected seamlessly
+            results.append(data * 2)
+
+        with ThreadPoolExecutor(2) as ex:
+            c = ex.submit(consumer, p)
+            time.sleep(0.02)
+            ex.submit(lambda: f.set_result(21)).result()
+            c.result(timeout=5)
+        assert results == [42]
+
+    def test_timeout(self, store):
+        f = store.future(timeout=0.05)
+        p = f.proxy()
+        with pytest.raises(TimeoutError):
+            extract(p)
+
+    def test_pickle_future_and_proxy(self, store):
+        f = store.future()
+        f2 = pickle.loads(pickle.dumps(f))
+        p = pickle.loads(pickle.dumps(f.proxy()))
+        f2.set_result([1, 2])
+        assert p == [1, 2]
+
+    def test_wait_all(self, store):
+        fs = [store.future() for _ in range(4)]
+
+        def setter():
+            for i, f in enumerate(fs):
+                time.sleep(0.01)
+                f.set_result(i)
+
+        t = threading.Thread(target=setter)
+        t.start()
+        wait_all(fs, timeout=5)
+        assert all(f.done() for f in fs)
+        t.join()
+
+    def test_cross_process_future_via_file_connector(self, tmp_path):
+        # file-backed channel: producer/consumer need not coexist (mediated)
+        with Store("xp-fut", FileConnector(str(tmp_path / "s"))) as s:
+            f = s.future()
+            p = f.proxy()
+            f.set_result(np.arange(5))
+            # simulate a different process: fresh objects from pickles
+            p2 = pickle.loads(pickle.dumps(p))
+            np.testing.assert_array_equal(extract(p2), np.arange(5))
+
+
+# ---------------------------------------------------------------------------
+# ProxyStream
+# ---------------------------------------------------------------------------
+
+
+class TestProxyStream:
+    def test_basic_stream(self, store):
+        ns = f"ns-{id(store)}"
+        sub = QueueSubscriber("t", ns)
+        with StreamProducer(QueuePublisher(ns), {"t": store}) as prod:
+            for i in range(5):
+                prod.send("t", {"i": i}, metadata={"idx": i})
+            prod.close_topic("t")
+            items = []
+            with StreamConsumer(sub, timeout=5) as cons:
+                for p in cons:
+                    assert isinstance(p, Proxy)
+                    items.append(extract(p)["i"])
+        assert items == list(range(5))
+
+    def test_metadata_without_bulk_resolution(self, store):
+        """Dispatcher consumes metadata only; bulk stays in the store."""
+        ns = f"ns2-{id(store)}"
+        sub = QueueSubscriber("t", ns)
+        prod = StreamProducer(QueuePublisher(ns), {"t": store}, evict_on_resolve=False)
+        big = np.zeros(100_000)
+        prod.send("t", big, metadata={"shape": big.shape})
+        prod.flush()
+        cons = StreamConsumer(sub, timeout=5)
+        proxy, meta = cons.next_with_metadata()
+        assert meta["shape"] == (100_000,)
+        assert not is_resolved(proxy)  # no bulk transfer happened
+        gets_before = store.metrics.get_count
+        assert store.metrics.get_count == gets_before  # still none
+        np.testing.assert_array_equal(extract(proxy), big)
+
+    def test_evict_on_resolve_single_consumption(self, store):
+        ns = f"ns3-{id(store)}"
+        sub = QueueSubscriber("t", ns)
+        prod = StreamProducer(QueuePublisher(ns), {"t": store}, evict_on_resolve=True)
+        prod.send("t", "payload")
+        prod.flush()
+        cons = StreamConsumer(sub, timeout=5)
+        p, _ = cons.next_with_metadata()
+        key = object.__getattribute__(p, "__proxy_metadata__")["key"]
+        assert store.exists(key)
+        assert p == "payload"
+        assert not store.exists(key)  # evicted after resolve
+
+    def test_filtering_producer_and_consumer(self, store):
+        ns = f"ns4-{id(store)}"
+        sub = QueueSubscriber("t", ns)
+        prod = StreamProducer(
+            QueuePublisher(ns), {"t": store}, filter_=lambda o, m: o % 2 == 0
+        )
+        for i in range(6):
+            prod.send("t", i, metadata={"i": i})
+        prod.flush()
+        prod.close_topic("t")
+        cons = StreamConsumer(sub, filter_=lambda m: m["i"] >= 2, timeout=5)
+        assert [extract(p) for p in cons] == [2, 4]
+
+    def test_batching_and_aggregation(self, store):
+        ns = f"ns5-{id(store)}"
+        sub = QueueSubscriber("t", ns)
+        prod = StreamProducer(
+            QueuePublisher(ns),
+            {"t": store},
+            batch_size=3,
+            aggregator=lambda objs: sum(objs),
+        )
+        for i in range(6):
+            prod.send("t", i)
+        prod.close_topic("t")
+        cons = StreamConsumer(sub, timeout=5)
+        assert [extract(p) for p in cons] == [0 + 1 + 2, 3 + 4 + 5]
+
+    def test_multi_consumer_fanout(self, store):
+        ns = f"ns6-{id(store)}"
+        subs = [QueueSubscriber("t", ns) for _ in range(2)]
+        prod = StreamProducer(
+            QueuePublisher(ns), {"t": store}, evict_on_resolve=False
+        )
+        prod.send("t", 7)
+        prod.flush()
+        for sub in subs:
+            p, _ = StreamConsumer(sub, timeout=5).next_with_metadata()
+            assert extract(p) == 7
+
+    def test_file_log_broker_cross_process_shape(self, tmp_path, store):
+        pub = FileLogPublisher(str(tmp_path / "broker"))
+        prod = StreamProducer(pub, {"t": store})
+        for i in range(3):
+            prod.send("t", i * 10)
+        prod.close_topic("t")
+        sub = FileLogSubscriber("t", str(tmp_path / "broker"))
+        cons = StreamConsumer(sub, timeout=5)
+        assert [extract(p) for p in cons] == [0, 10, 20]
+
+    def test_topic_store_mapping(self, store):
+        other = Store(f"other-{id(store)}", InMemoryConnector())
+        ns = f"ns7-{id(store)}"
+        suba, subb = QueueSubscriber("a", ns), QueueSubscriber("b", ns)
+        prod = StreamProducer(QueuePublisher(ns), {"a": store, "b": other})
+        prod.send("a", 1)
+        prod.send("b", 2)
+        prod.flush()
+        pa, _ = StreamConsumer(suba, timeout=5).next_with_metadata()
+        pb, _ = StreamConsumer(subb, timeout=5).next_with_metadata()
+        assert extract(pa) == 1 and extract(pb) == 2
+        assert store.metrics.put_count == 1 and other.metrics.put_count == 1
+        other.close()
+
+
+# ---------------------------------------------------------------------------
+# Ownership
+# ---------------------------------------------------------------------------
+
+
+class TestOwnership:
+    def test_owned_proxy_free_evicts(self, store):
+        o = owned_proxy(store, [1, 2, 3])
+        key = object.__getattribute__(o, "__proxy_metadata__")["key"]
+        assert store.exists(key)
+        assert o[0] == 1
+        free(o)
+        assert not store.exists(key)
+        assert not is_valid(o)
+
+    def test_many_immutable_borrows(self, store):
+        o = owned_proxy(store, {"v": 1})
+        refs = [borrow(o) for _ in range(5)]
+        assert num_borrows(o) == (5, False)
+        for r in refs:
+            assert r["v"] == 1
+            release(r)
+        assert num_borrows(o) == (0, False)
+        free(o)
+
+    def test_mut_borrow_exclusive(self, store):
+        o = owned_proxy(store, [0])
+        m = mut_borrow(o)
+        with pytest.raises(OwnershipError):
+            borrow(o)
+        with pytest.raises(OwnershipError):
+            mut_borrow(o)
+        release(m)
+        r = borrow(o)
+        with pytest.raises(OwnershipError):
+            mut_borrow(o)  # immutable borrow outstanding
+        release(r)
+        free(o)
+
+    def test_free_with_outstanding_borrow_raises(self, store):
+        o = owned_proxy(store, "x")
+        r = borrow(o)
+        with pytest.raises(OwnershipError):
+            free(o)
+        release(r)
+        free(o)
+
+    def test_mutation_via_refmut_update(self, store):
+        o = owned_proxy(store, {"n": 1})
+        m = mut_borrow(o)
+        m["n"] = 99  # mutate local copy
+        update(m)  # write back to global store
+        release(m)
+        from repro.core import reset
+
+        reset(o)
+        assert o["n"] == 99
+        free(o)
+
+    def test_update_through_ref_raises(self, store):
+        o = owned_proxy(store, [1])
+        r = borrow(o)
+        _ = r[0]
+        with pytest.raises(OwnershipError):
+            update(r)
+        release(r)
+        free(o)
+
+    def test_clone_independent(self, store):
+        o = owned_proxy(store, [1, 2])
+        c = clone(o)
+        free(o)
+        assert c == [1, 2]  # clone survives original free
+        free(c)
+
+    def test_move_semantics_via_pickle(self, store):
+        o = owned_proxy(store, "data")
+        blob = pickle.dumps(o)  # ownership moves
+        o2 = pickle.loads(blob)
+        assert extract(o2) == "data"
+        with pytest.raises(OwnershipError):
+            borrow(o)  # moved-from owner unusable
+        free(o2)
+
+    def test_cannot_move_with_borrows(self, store):
+        o = owned_proxy(store, "data")
+        r = borrow(o)
+        with pytest.raises(OwnershipError):
+            pickle.dumps(o)
+        release(r)
+        free(o)
+
+    def test_into_owned(self, store):
+        p = store.proxy([5])
+        o = into_owned(p)
+        assert o == [5]
+        free(o)
+
+    def test_borrow_after_free_raises(self, store):
+        o = owned_proxy(store, 1)
+        free(o)
+        with pytest.raises(OwnershipError):
+            borrow(o)
+
+    def test_use_after_free_keyerror(self, store):
+        o = owned_proxy(store, [1])
+        r = borrow(o)
+        release(r)
+        free(o)
+        with pytest.raises(KeyError):
+            extract(r)  # dangling reference: loud failure, not UB
+
+
+class TestStoreExecutor:
+    def test_borrow_released_on_task_completion(self, store):
+        o = owned_proxy(store, np.arange(10))
+        r = borrow(o)
+        with StoreExecutor(ThreadPoolExecutor(2), store) as ex:
+            fut = ex.submit(lambda a: int(np.asarray(a).sum()), r)
+            assert fut.result() == 45
+            for _ in range(100):
+                if num_borrows(o) == (0, False):
+                    break
+                time.sleep(0.01)
+        assert num_borrows(o) == (0, False)  # auto-released by callback
+        del r
+        free(o)
+
+    def test_auto_proxy_large_args_and_results(self, store):
+        policy = ProxyPolicy(min_bytes=100)
+        big = list(range(1000))
+
+        def fn(x):
+            assert isinstance(x, Proxy)  # auto-proxied on the way in
+            return list(x) + [1]  # big result → proxied on the way out
+
+        with StoreExecutor(ThreadPoolExecutor(1), store, policy=policy) as ex:
+            out = ex.submit(fn, big).result()
+            assert isinstance(out, Proxy)
+            assert len(out) == 1001
+
+    def test_small_args_not_proxied(self, store):
+        def fn(x):
+            assert not isinstance(x, Proxy)
+            return x + 1
+
+        with StoreExecutor(ThreadPoolExecutor(1), store) as ex:
+            assert ex.submit(fn, 1).result() == 2
+
+
+# ---------------------------------------------------------------------------
+# Lifetimes
+# ---------------------------------------------------------------------------
+
+
+class TestLifetimes:
+    def test_context_lifetime(self, store):
+        with ContextLifetime() as lt:
+            p = store.proxy("v", lifetime=lt)
+            key = object.__getattribute__(p, "__proxy_metadata__")["key"]
+            assert store.exists(key)
+        assert lt.done()
+        assert not store.exists(key)
+
+    def test_lease_lifetime_expiry_and_extend(self, store):
+        lease = LeaseLifetime(store, expiry=0.15)
+        p = store.proxy("v", lifetime=lease)
+        key = object.__getattribute__(p, "__proxy_metadata__")["key"]
+        lease.extend(0.15)
+        time.sleep(0.2)
+        assert not lease.done()  # extension kept it alive
+        assert store.exists(key)
+        time.sleep(0.25)
+        assert lease.done()
+        assert not store.exists(key)
+        with pytest.raises(RuntimeError):
+            lease.extend(1)
+
+    def test_static_lifetime_persists(self, store):
+        lt = StaticLifetime()
+        p = store.proxy("v", lifetime=lt)
+        key = object.__getattribute__(p, "__proxy_metadata__")["key"]
+        assert store.exists(key)  # still alive; cleaned at interpreter exit
+        lt.close()  # manual close for test hygiene
+        assert not store.exists(key)
+
+    def test_lifetime_after_close_raises(self, store):
+        lt = ContextLifetime()
+        lt.close()
+        with pytest.raises(RuntimeError):
+            store.proxy("v", lifetime=lt)

@@ -1,0 +1,207 @@
+"""Unit + property tests for the transparent lazy proxy and Store (paper §III)."""
+import pickle
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    InMemoryConnector,
+    Proxy,
+    Store,
+    extract,
+    is_resolved,
+    reset,
+)
+
+
+class _Obj:
+    def __init__(self):
+        self.val = 42
+
+    def double(self):
+        return self.val * 2
+
+
+@pytest.fixture()
+def store():
+    with Store(f"test-{id(object())}", InMemoryConnector()) as s:
+        yield s
+
+
+class TestProxyTransparency:
+    def test_lazy_resolution(self, store):
+        calls = []
+
+        def factory():
+            calls.append(1)
+            return [1, 2, 3]
+
+        p = Proxy(factory)
+        assert not is_resolved(p)
+        assert calls == []
+        assert len(p) == 3  # first op triggers resolution
+        assert is_resolved(p)
+        assert calls == [1]
+        assert p[0] == 1
+        assert calls == [1]  # cached
+
+    def test_isinstance_transparency(self, store):
+        p = store.proxy({"a": 1})
+        assert isinstance(p, dict)
+        p2 = store.proxy([1, 2])
+        assert isinstance(p2, list)
+
+    def test_operators(self, store):
+        p = store.proxy(10)
+        assert p + 5 == 15
+        assert 5 + p == 15
+        assert p * 2 == 20
+        assert p - 1 == 9
+        assert 21 - p == 11
+        assert p / 4 == 2.5
+        assert p // 3 == 3
+        assert p % 3 == 1
+        assert p**2 == 100
+        assert -p == -10
+        assert abs(store.proxy(-3)) == 3
+        assert int(p) == 10
+        assert float(p) == 10.0
+        assert p < 11 and p > 9 and p <= 10 and p >= 10
+        assert hash(p) == hash(10)
+
+    def test_container_protocol(self, store):
+        p = store.proxy({"x": 1, "y": 2})
+        assert "x" in p
+        assert sorted(p) == ["x", "y"]
+        assert p["y"] == 2
+        p["z"] = 3  # mutates local cached copy
+        assert p["z"] == 3
+
+    def test_attribute_forwarding(self, store):
+        p = store.proxy(_Obj())
+        assert p.val == 42
+        assert p.double() == 84
+        p.val = 7
+        assert p.double() == 14
+
+    def test_numpy_interop(self, store):
+        arr = np.arange(12, dtype=np.float32).reshape(3, 4)
+        p = store.proxy(arr)
+        np.testing.assert_array_equal(np.asarray(p), arr)
+        assert p.shape == (3, 4)
+        np.testing.assert_allclose(p.sum(), arr.sum())
+        # numpy functions accept the proxy directly
+        np.testing.assert_allclose(np.sum(p), arr.sum())
+
+    def test_jax_interop(self, store):
+        import jax.numpy as jnp
+
+        arr = np.ones((4, 4), np.float32)
+        p = store.proxy(arr)
+        # consumer code converts via the numpy array protocol (the proxy is
+        # transparent to np.asarray) and feeds jax just-in-time
+        out = jnp.asarray(np.asarray(p)) + 1
+        assert float(out.sum()) == 32.0
+        # a proxy of a *jax* array resolves to numpy (store serializer) and
+        # is consumable the same way
+        pj = store.proxy(jnp.ones((2, 2)))
+        assert float(np.asarray(pj).sum()) == 4.0
+
+    def test_reset_and_reresolve(self, store):
+        p = store.proxy([1, 2])
+        assert len(p) == 2
+        reset(p)
+        assert not is_resolved(p)
+        assert len(p) == 2
+
+    def test_pickle_roundtrip_pass_by_reference(self, store):
+        p = store.proxy({"big": list(range(100))})
+        _ = p["big"]  # resolve
+        data = pickle.dumps(p)
+        q = pickle.loads(data)
+        assert not is_resolved(q)  # cache dropped: pass-by-reference
+        assert q["big"][99] == 99
+
+    def test_missing_target_raises(self, store):
+        p = store.proxy("x")
+        meta = object.__getattribute__(p, "__proxy_metadata__")
+        store.evict(meta["key"])
+        with pytest.raises(KeyError):
+            extract(p)
+
+
+class TestStore:
+    def test_put_get_evict(self, store):
+        k = store.put([1, 2, 3])
+        assert store.exists(k)
+        assert store.get(k) == [1, 2, 3]
+        store.evict(k)
+        assert not store.exists(k)
+        assert store.get(k, "gone") == "gone"
+
+    def test_metrics(self, store):
+        p = store.proxy(np.zeros(1000))
+        extract(p)
+        m = store.metrics
+        assert m.put_count == 1 and m.get_count == 1
+        assert m.put_bytes > 1000
+
+    def test_store_pickle_reattach(self, store):
+        s2 = pickle.loads(pickle.dumps(store))
+        assert s2.name == store.name
+        k = s2.put("hello")
+        assert store.get(k) == "hello"
+
+    @given(st.one_of(st.integers(), st.text(), st.lists(st.integers(), max_size=20),
+                     st.dictionaries(st.text(max_size=5), st.integers(), max_size=8)))
+    @settings(max_examples=50, deadline=None)
+    def test_roundtrip_property(self, obj):
+        with Store(f"prop-{id(object())}", InMemoryConnector(), register=False) as s:
+            p = s.proxy(obj)
+            assert extract(p) == obj
+            # transparency: equal and same type
+            assert p == obj
+            if obj is not None:
+                assert isinstance(p, type(obj))
+
+
+class TestConnectors:
+    @pytest.mark.parametrize("conn_kind", ["memory", "file", "shm"])
+    def test_connector_contract(self, conn_kind, tmp_path):
+        from repro.core import FileConnector, SharedMemoryConnector
+
+        if conn_kind == "memory":
+            c = InMemoryConnector()
+        elif conn_kind == "file":
+            c = FileConnector(str(tmp_path / "store"))
+        else:
+            c = SharedMemoryConnector()
+        try:
+            assert c.get("nope") is None
+            assert not c.exists("nope")
+            c.put("k", b"hello world")
+            assert c.exists("k")
+            assert c.get("k") == b"hello world"
+            c.put("k", b"overwrite")
+            assert c.get("k") == b"overwrite"
+            c.evict("k")
+            assert not c.exists("k")
+            c.evict("k")  # idempotent
+        finally:
+            if conn_kind == "shm":
+                c.evict("k")
+            c.close()
+
+    @given(st.binary(min_size=0, max_size=4096))
+    @settings(max_examples=30, deadline=None)
+    def test_file_connector_bytes_property(self, payload):
+        import tempfile
+
+        from repro.core import FileConnector
+
+        with tempfile.TemporaryDirectory() as d:
+            c = FileConnector(d)
+            c.put("k", payload)
+            assert c.get("k") == payload

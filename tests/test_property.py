@@ -1,0 +1,173 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+from __future__ import annotations
+
+import pickle
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    InMemoryConnector,
+    OwnershipError,
+    Store,
+    borrow,
+    clone,
+    free,
+    mut_borrow,
+    owned_proxy,
+    release,
+)
+from repro.core.proxy import Proxy, extract, is_resolved
+from repro.core.streaming import (
+    QueuePublisher,
+    QueueSubscriber,
+    StreamConsumer,
+    StreamProducer,
+)
+
+SETTINGS = settings(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.function_scoped_fixture],
+)
+
+# objects a store must round-trip faithfully
+objects = st.one_of(
+    st.integers(),
+    st.floats(allow_nan=False),
+    st.text(max_size=64),
+    st.lists(st.integers(), max_size=16),
+    st.dictionaries(st.text(max_size=8), st.integers(), max_size=8),
+    st.binary(max_size=256),
+)
+
+
+@pytest.fixture
+def store():
+    with Store(f"prop-{np.random.randint(1e9)}") as s:
+        yield s
+
+
+class TestProxyRoundTrip:
+    @SETTINGS
+    @given(obj=objects)
+    def test_proxy_equals_target(self, store, obj):
+        """∀ obj: extract(store.proxy(obj)) == obj (pass-by-value fidelity)."""
+        p = store.proxy(obj)
+        assert extract(p) == obj
+
+    @SETTINGS
+    @given(obj=objects)
+    def test_proxy_type_transparency(self, store, obj):
+        """isinstance(p, type(t)) is true for a proxy p and target t (§III)."""
+        p = store.proxy(obj)
+        assert isinstance(p, type(obj))
+
+    @SETTINGS
+    @given(obj=objects)
+    def test_pickled_proxy_still_resolves(self, store, obj):
+        """Proxies are self-contained across (de)serialization (§III)."""
+        p = store.proxy(obj)
+        p2 = pickle.loads(pickle.dumps(p))
+        assert extract(p2) == obj
+
+    @SETTINGS
+    @given(arr=st.lists(st.floats(allow_nan=False, width=32), min_size=1, max_size=64))
+    def test_numpy_fidelity(self, store, arr):
+        a = np.asarray(arr, np.float32)
+        p = store.proxy(a)
+        np.testing.assert_array_equal(extract(p), a)
+
+
+class TestFutureInvariants:
+    @SETTINGS
+    @given(obj=objects)
+    def test_set_once_then_every_proxy_resolves(self, store, obj):
+        fut = store.future()
+        proxies = [fut.proxy() for _ in range(3)]
+        assert not fut.done()
+        fut.set_result(obj)
+        assert fut.done()
+        for p in proxies:
+            assert extract(p) == obj
+
+    @SETTINGS
+    @given(obj=objects)
+    def test_double_set_always_raises(self, store, obj):
+        fut = store.future()
+        fut.set_result(obj)
+        with pytest.raises(RuntimeError):
+            fut.set_result(obj)
+
+
+class TestStreamOrdering:
+    @SETTINGS
+    @given(items=st.lists(objects, min_size=1, max_size=12))
+    def test_fifo_and_exactly_once(self, store, items):
+        """Stream delivers every item exactly once, in order."""
+        ns = f"prop-{np.random.randint(1e9)}"
+        producer = StreamProducer(QueuePublisher(ns), {"t": store})
+        consumer = StreamConsumer(QueueSubscriber("t", ns), timeout=5.0)
+        for it in items:
+            producer.send("t", it)
+            producer.flush_topic("t")
+        producer.close_topic("t")
+        got = [extract(p) for p in consumer]
+        assert got == list(items)
+
+
+class TestOwnershipInvariants:
+    @SETTINGS
+    @given(obj=objects, n_refs=st.integers(0, 4))
+    def test_borrow_rules(self, store, obj, n_refs):
+        """Any number of Refs XOR exactly one RefMut; free only when clear."""
+        owner = owned_proxy(store, obj)
+        refs = [borrow(owner) for _ in range(n_refs)]
+        if n_refs:
+            with pytest.raises(OwnershipError):
+                mut_borrow(owner)  # Ref(s) outstanding → no RefMut
+            with pytest.raises(OwnershipError):
+                free(owner)  # cannot free with live borrows
+        for r in refs:
+            release(r)
+        m = mut_borrow(owner)
+        with pytest.raises(OwnershipError):
+            borrow(owner)  # RefMut outstanding → no Ref
+        release(m)
+        key = owner.__factory__.key
+        free(owner)
+        assert not store.exists(key)  # free ⇒ target evicted
+
+    @SETTINGS
+    @given(obj=objects)
+    def test_clone_is_deep_and_independent(self, store, obj):
+        a = owned_proxy(store, obj)
+        b = clone(a)
+        free(a)
+        assert extract(b) == obj  # clone survives original's death
+        free(b)
+
+
+class TestShardingRules:
+    @SETTINGS
+    @given(
+        dim=st.integers(1, 4096),
+        axis=st.sampled_from(["embed", "heads", "mlp", "vocab", "batch", None]),
+    )
+    def test_spec_always_valid(self, dim, axis):
+        """logical_to_spec never produces an indivisible sharding."""
+        import jax
+        from jax.sharding import PartitionSpec
+
+        from repro.dist.sharding import DEFAULT_RULES, logical_to_spec
+
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        spec = logical_to_spec((dim,), (axis,), DEFAULT_RULES, mesh)
+        assert isinstance(spec, PartitionSpec)
+        for entry, d in zip(spec, (dim,)):
+            if entry is not None:
+                names = entry if isinstance(entry, tuple) else (entry,)
+                size = int(np.prod([mesh.shape[n] for n in names]))
+                assert d % size == 0

@@ -1,0 +1,130 @@
+"""Roofline analyzer unit tests: HLO collective parsing + term math."""
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis.roofline import (
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    analyze,
+    parse_collectives,
+)
+
+HLO_SAMPLE = """
+HloModule jit_step
+
+fused_computation {
+  ROOT %x = f32[8,128]{1,0} add(%a, %b)
+}
+
+ENTRY %main {
+  %ag = f32[576,96]{1,0} all-gather(%p0), channel_id=9, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %ar = bf16[1024,256]{1,0} all-reduce(%f1), channel_id=10, replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[64,64]{1,0} reduce-scatter(%f2), channel_id=11, replica_groups=[2,8]<=[16], dimensions={0}
+  %cp = f32[32]{0} collective-permute(%f3), channel_id=12, source_target_pairs={{0,1},{1,0}}
+  %ags = (f32[4,4]{1,0}, f32[16,4]{1,0}) all-gather-start(%f4), channel_id=13, replica_groups=[4,4]<=[16], dimensions={0}
+  %agd = f32[16,4]{1,0} all-gather-done(%ags)
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_counts_and_kinds(self):
+        st = parse_collectives(HLO_SAMPLE, n_devices=256)
+        assert st.ops["all-gather"]["count"] == 2  # plain + -start
+        assert st.ops["all-reduce"]["count"] == 1
+        assert st.ops["reduce-scatter"]["count"] == 1
+        assert st.ops["collective-permute"]["count"] == 1
+        # -done must NOT be double counted
+        total = sum(v["count"] for v in st.ops.values())
+        assert total == 5
+
+    def test_wire_bytes_ring_model(self):
+        st = parse_collectives(HLO_SAMPLE, n_devices=256)
+        # all-gather: result 576*96*4 B, groups of 16 → wire = 15/16 × result
+        ag = 576 * 96 * 4
+        assert st.ops["all-gather"]["wire_bytes"] == pytest.approx(
+            ag * 15 / 16 + (16 * 4 * 4) * 3 / 4
+        )
+        # all-reduce: result 1024*256*2 B, group 4 → 2×(3/4)
+        ar = 1024 * 256 * 2
+        assert st.ops["all-reduce"]["wire_bytes"] == pytest.approx(ar * 2 * 3 / 4)
+        # reduce-scatter: result 64*64*4, group 8 → operand=8×result, wire=7×result
+        rs = 64 * 64 * 4
+        assert st.ops["reduce-scatter"]["wire_bytes"] == pytest.approx(rs * 7)
+
+    def test_group_size_fallback(self):
+        txt = "%ar = f32[16]{0} all-reduce(%x), to_apply=%add\n"
+        st = parse_collectives(txt, n_devices=8)
+        assert st.total_wire_bytes == pytest.approx(16 * 4 * 2 * 7 / 8)
+
+    def test_dcn_attribution(self):
+        # group of 16 when pods hold 4 devices → crosses DCN
+        st = parse_collectives(HLO_SAMPLE, n_devices=16, pod_group=4)
+        assert st.dcn_wire_bytes > 0
+        st2 = parse_collectives(HLO_SAMPLE, n_devices=16, pod_group=64)
+        assert st2.dcn_wire_bytes == 0
+
+    def test_ignores_non_collective_lines(self):
+        txt = "%f = f32[1024,1024]{1,0} fusion(%a), calls=%fused\n"
+        st = parse_collectives(txt, n_devices=8)
+        assert st.total_wire_bytes == 0
+
+
+class TestTerms:
+    def test_analysis_terms_and_dominance(self):
+        rep = analyze(
+            arch="x", shape="train_4k", mesh_desc="16x16", chips=256,
+            cost={"flops": PEAK_FLOPS, "bytes accessed": HBM_BW / 2},
+            hlo_text="%ar = f32[1024]{0} all-reduce(%x), replica_groups=[1,256]<=[256]\n",
+            model_flops=PEAK_FLOPS * 256 * 0.5,
+        )
+        assert rep.t_compute == pytest.approx(1.0)
+        assert rep.t_memory == pytest.approx(0.5)
+        assert rep.t_collective == pytest.approx(
+            1024 * 4 * 2 * 255 / 256 / LINK_BW
+        )
+        assert rep.dominant == "compute"
+        assert rep.mfu_bound == pytest.approx(0.5)
+        assert rep.useful_ratio == pytest.approx(0.5)
+
+    def test_zero_cost_degenerates_gracefully(self):
+        rep = analyze(
+            arch="x", shape="s", mesh_desc="1", chips=1,
+            cost={}, hlo_text="", model_flops=0.0,
+        )
+        assert rep.step_time == 0.0
+        assert rep.mfu_bound == 0.0
+
+
+class TestNNLS:
+    """_nnls: the probe-fit solver must match brute-force NNLS on random
+    small systems and never return negative coefficients."""
+
+    def test_nonnegative_and_exact_on_consistent_systems(self):
+        import numpy as np
+        from repro.launch.dryrun import _nnls
+
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            n, m = rng.integers(2, 6), rng.integers(4, 10)
+            A = rng.uniform(0, 4, (m, n))
+            beta_true = rng.uniform(0, 10, n)
+            # random sparsity — some coefficients exactly zero
+            beta_true[rng.random(n) < 0.3] = 0.0
+            y = A @ beta_true
+            beta = _nnls(A, y)
+            assert (beta >= 0).all()
+            # consistent nonneg system: reconstruction must match
+            np.testing.assert_allclose(A @ beta, y, rtol=1e-6, atol=1e-6)
+
+    def test_clamps_negative_tendency(self):
+        import numpy as np
+        from repro.launch.dryrun import _nnls
+
+        # y decreasing in the second column would pull OLS negative
+        A = np.array([[1.0, 1.0], [1.0, 2.0], [1.0, 3.0]])
+        y = np.array([3.0, 2.0, 1.0])
+        beta = _nnls(A, y)
+        assert (beta >= 0).all()
