@@ -57,6 +57,11 @@ def main(argv=None) -> int:
         result = mod.main()
         print(result.dump())
         result.save()
+        # benchmarks that track a repo-root perf-trajectory artifact expose
+        # write_bench_json; the driver stays benchmark-agnostic
+        emit = getattr(mod, "write_bench_json", None)
+        if emit is not None:
+            print(f"[bench] wrote {emit(result)}")
         if not result.ok:
             failures += 1
     if not args.skip_roofline:

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 gate + perf smoke.  Run from anywhere:
+#
+#     scripts/check.sh            # full tier-1 suite + quick proxy benchmark
+#     scripts/check.sh --fast     # tier-1 only (skip the benchmark smoke)
+#
+# pytest picks up pythonpath/testpaths from pyproject.toml, so no PYTHONPATH
+# export is needed for the suite; the benchmark runs as a module from the
+# repo root with src/ on PYTHONPATH (mirrors how the dry-run is invoked).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo
+    echo "== perf smoke: proxy_overhead --quick =="
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.proxy_overhead --quick
+fi
+
+echo
+echo "[check] OK"

@@ -1,0 +1,7 @@
+"""Version/dependency compatibility shims.
+
+This container pins its environment (no installs), so API gaps are bridged
+here instead of in requirements: ``jaxshims`` adapts the ``shard_map``
+API rename, ``hypothesis_stub`` stands in for the absent hypothesis
+package (installed by tests/conftest.py only when the real one is missing).
+"""

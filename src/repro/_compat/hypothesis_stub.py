@@ -1,0 +1,240 @@
+"""Minimal hypothesis stand-in (this container cannot install packages).
+
+Installed into ``sys.modules`` by tests/conftest.py ONLY when the real
+hypothesis is absent.  Implements just the surface this suite uses —
+``given`` / ``settings`` / ``HealthCheck`` and a handful of strategies —
+with deterministic pseudo-random example generation (seeded per test
+qualname) and a minimal first example per strategy.  No shrinking, no
+example database, no stateful testing: if real hypothesis is available it
+always wins.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import string
+import struct
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class HealthCheck:
+    function_scoped_fixture = "function_scoped_fixture"
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+class settings:
+    """Decorator/config object; only ``max_examples`` is honoured."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+                 suppress_health_check=(), derandomize=False, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_settings = self
+        return fn
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_at(self, rng: random.Random, i: int):
+        return self._draw(rng, i)
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test body over generated examples.
+
+    Positional strategies map to the RIGHTMOST parameters of the test (the
+    hypothesis rule); keyword strategies map by name.  Remaining parameters
+    (self, pytest fixtures) stay in the visible signature so pytest injects
+    them normally.
+    """
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        names = [p.name for p in params]
+        strat: dict[str, SearchStrategy] = {}
+        if arg_strategies:
+            strat.update(zip(names[len(names) - len(arg_strategies):],
+                             arg_strategies))
+        strat.update(kw_strategies)
+        remaining = [p for p in params if p.name not in strat]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            st = (getattr(wrapper, "_stub_settings", None)
+                  or getattr(fn, "_stub_settings", None))
+            n = st.max_examples if st is not None else DEFAULT_MAX_EXAMPLES
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                drawn = {k: s.example_at(rng, i) for k, s in strat.items()}
+                fn(*args, **{**kwargs, **drawn})
+
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# Strategies (the subset the suite imports)
+# ---------------------------------------------------------------------------
+
+
+def integers(min_value=None, max_value=None) -> SearchStrategy:
+    def draw(rng, i):
+        if min_value is not None and max_value is not None:
+            if i == 0:
+                return min_value
+            if i == 1:
+                return max_value
+            return rng.randint(min_value, max_value)
+        edges = (0, 1, -1, 127, -128, 2**31 - 1, -(2**31), 10**18)
+        if i < len(edges):
+            return edges[i]
+        return rng.randint(-(2**63), 2**63)
+
+    return SearchStrategy(draw)
+
+
+def floats(min_value=None, max_value=None, allow_nan=None, allow_infinity=None,
+           width=64, **_ignored) -> SearchStrategy:
+    edges = (0.0, -0.0, 1.0, -1.5, 0.5, 1e-6, -1e6, 3.140625)
+
+    def draw(rng, i):
+        if i < len(edges):
+            v = edges[i]
+        else:
+            kind = rng.randrange(3)
+            if kind == 0:
+                v = rng.gauss(0.0, 1.0)
+            elif kind == 1:
+                v = rng.uniform(-1e6, 1e6)
+            else:
+                v = rng.uniform(-1.0, 1.0) * 10.0 ** rng.randint(-20, 20)
+        if width == 32:
+            v = struct.unpack("f", struct.pack("f", v))[0]
+        if min_value is not None:
+            v = max(v, min_value)
+        if max_value is not None:
+            v = min(v, max_value)
+        return v
+
+    return SearchStrategy(draw)
+
+
+_TEXT_ALPHABET = string.ascii_letters + string.digits + " _-./:äöü☃µ"
+
+
+def text(alphabet=None, min_size=0, max_size=None) -> SearchStrategy:
+    chars = alphabet or _TEXT_ALPHABET
+
+    def draw(rng, i):
+        if i == 0:
+            return "a" * min_size
+        hi = max_size if max_size is not None else min_size + 16
+        n = rng.randint(min_size, max(min_size, hi))
+        return "".join(rng.choice(chars) for _ in range(n))
+
+    return SearchStrategy(draw)
+
+
+def binary(min_size=0, max_size=None) -> SearchStrategy:
+    def draw(rng, i):
+        if i == 0:
+            return b"\x00" * min_size
+        hi = max_size if max_size is not None else min_size + 64
+        n = rng.randint(min_size, max(min_size, hi))
+        return bytes(rng.randrange(256) for _ in range(n))
+
+    return SearchStrategy(draw)
+
+
+def lists(elements: SearchStrategy, min_size=0, max_size=None) -> SearchStrategy:
+    def draw(rng, i):
+        hi = max_size if max_size is not None else min_size + 8
+        n = min_size if i == 0 else rng.randint(min_size, max(min_size, hi))
+        return [elements.example_at(rng, max(i, 1)) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def dictionaries(keys: SearchStrategy, values: SearchStrategy, min_size=0,
+                 max_size=None) -> SearchStrategy:
+    def draw(rng, i):
+        hi = max_size if max_size is not None else min_size + 8
+        n = min_size if i == 0 else rng.randint(min_size, max(min_size, hi))
+        return {
+            keys.example_at(rng, max(i, 1)): values.example_at(rng, max(i, 1))
+            for _ in range(n)
+        }
+
+    return SearchStrategy(draw)
+
+
+def one_of(*strategies) -> SearchStrategy:
+    if len(strategies) == 1 and isinstance(strategies[0], (list, tuple)):
+        strategies = tuple(strategies[0])
+
+    def draw(rng, i):
+        # first pass: each branch's minimal example, then random branches
+        if i < len(strategies):
+            return strategies[i].example_at(rng, 0)
+        return rng.choice(strategies).example_at(rng, i)
+
+    return SearchStrategy(draw)
+
+
+def sampled_from(seq) -> SearchStrategy:
+    seq = list(seq)
+
+    def draw(rng, i):
+        if i < len(seq):
+            return seq[i]
+        return rng.choice(seq)
+
+    return SearchStrategy(draw)
+
+
+def booleans() -> SearchStrategy:
+    return sampled_from([False, True])
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng, i: value)
+
+
+def none() -> SearchStrategy:
+    return just(None)
+
+
+_STRATEGY_NAMES = (
+    "integers", "floats", "text", "binary", "lists", "dictionaries",
+    "one_of", "sampled_from", "booleans", "just", "none",
+)
+
+
+def install() -> None:
+    """Register this stub as ``hypothesis`` / ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = HealthCheck
+    mod.__stub__ = True
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in _STRATEGY_NAMES:
+        setattr(st_mod, name, globals()[name])
+    st_mod.__stub__ = True
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

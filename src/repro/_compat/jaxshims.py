@@ -1,0 +1,48 @@
+"""``shard_map`` across jax versions.
+
+jax ≥ 0.5 exposes ``jax.shard_map(..., check_vma=...)``; 0.4.x only has
+``jax.experimental.shard_map.shard_map(..., check_rep=...)``.  This module
+exports a :func:`shard_map` accepting either keyword and (via import side
+effect) installs it as ``jax.shard_map`` when absent, so subprocess test
+bodies and user code written against the new spelling run on both.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _native = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _native
+
+# pick the kwarg the native function actually accepts (jax.shard_map existed
+# before the check_rep → check_vma rename, so presence alone is no signal)
+_check_kw = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_native).parameters
+    else "check_rep"
+)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, check_rep=None,
+              **kw):
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None:
+        kw[_check_kw] = check
+    return _native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+if not hasattr(jax, "shard_map"):
+    jax.shard_map = shard_map
+
+
+def ensure_pallas_compat() -> None:
+    """Alias ``pltpu.CompilerParams`` (current spelling) on jax 0.4.x, which
+    only ships ``TPUCompilerParams``.  Called by repro.kernels before any
+    kernel module loads; idempotent."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    if not hasattr(pltpu, "CompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams

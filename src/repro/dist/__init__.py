@@ -1,0 +1,33 @@
+"""Distributed substrate: logical-axis sharding + elastic fault tolerance.
+
+Two modules pair the paper's proxy patterns with an actual data plane:
+
+- :mod:`repro.dist.sharding` — ``ParamSpec`` trees with *logical* axis names
+  resolved through ``AxisRules`` profiles into mesh ``PartitionSpec``s, plus
+  deterministic parameter materialization (mesh-shape independent init).
+- :mod:`repro.dist.fault` — heartbeat leases over a Store (mediated channel),
+  straggler policy, and elastic mesh re-planning after capacity loss.
+
+Every model/optimizer/trainer/server layer consumes this package; keep the
+contract here stable (see ROADMAP.md §repro.dist).
+"""
+from repro.dist.fault import (  # noqa: F401
+    HeartbeatMonitor,
+    MeshPlan,
+    StragglerPolicy,
+    elastic_plan,
+)
+from repro.dist.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    FLAT_DP_RULES,
+    MULTIPOD_RULES,
+    RULE_PROFILES,
+    AxisRules,
+    ParamSpec,
+    abstract_params,
+    count_params,
+    logical_to_spec,
+    materialize_params,
+    shard_constraint,
+    sharding_tree,
+)

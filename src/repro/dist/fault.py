@@ -1,0 +1,185 @@
+"""Elastic fault-tolerance primitives: heartbeats, stragglers, re-planning.
+
+Scaled to this container but written for the production mesh:
+
+- :class:`HeartbeatMonitor` keeps worker *leases* in a Store (the paper's
+  mediated channel), so the monitor and the workers need not share a
+  process: a worker that misses its TTL is dead until it re-registers —
+  exactly the lease protocol a 1000-node deployment runs over etcd.
+- :class:`StragglerPolicy` grades step durations against a trailing median:
+  ``warn`` (log + count) below ``redispatch`` (re-issue the work elsewhere).
+  The Trainer's watchdog delegates here.
+- :func:`elastic_plan` re-plans the (pod, data, model) mesh after capacity
+  loss: model parallelism is pinned (weights are sharded that way), data
+  parallelism degrades to the largest power of two that still fits — the
+  path ``Trainer.remesh`` takes when a pod drops.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats
+# ---------------------------------------------------------------------------
+
+
+class HeartbeatMonitor:
+    """Lease-based liveness over a Store.
+
+    ``register`` grants a lease of ``ttl`` seconds; ``heartbeat`` renews it.
+    A lease that expires makes the worker *dead*: further heartbeats raise
+    ``TimeoutError`` until the worker re-registers (so a partitioned node
+    cannot silently rejoin with stale state).
+    """
+
+    _REGISTRY_KEY = "hb-workers"
+
+    def __init__(self, store, ttl: float = 5.0):
+        self.store = store
+        self.ttl = float(ttl)
+
+    def _key(self, worker: str) -> str:
+        return f"hb-lease-{worker}"
+
+    def _lease(self, worker: str) -> dict | None:
+        return self.store.get(self._key(worker))
+
+    def _registry(self) -> list[str]:
+        return self.store.get(self._REGISTRY_KEY, [])
+
+    def register(self, worker: str) -> None:
+        # registry lives in the Store too, so monitors in other processes
+        # see workers they did not register (read-modify-write: fine for
+        # the single-registrar stub; a real fleet registers through one
+        # membership service).  Wall clock, not monotonic: lease expiries
+        # cross processes, and monotonic epochs are only meaningful locally.
+        reg = self._registry()
+        if worker not in reg:
+            self.store.put(reg + [worker], key=self._REGISTRY_KEY)
+        self.store.put(
+            {"worker": worker, "expires": time.time() + self.ttl},
+            key=self._key(worker),
+        )
+
+    def heartbeat(self, worker: str) -> None:
+        lease = self._lease(worker)
+        now = time.time()
+        if lease is None or now > lease["expires"]:
+            self.store.evict(self._key(worker))
+            raise TimeoutError(
+                f"worker {worker!r} lease expired (ttl={self.ttl}s); re-register"
+            )
+        self.store.put(
+            {"worker": worker, "expires": now + self.ttl}, key=self._key(worker)
+        )
+
+    def _alive(self, worker: str) -> bool:
+        lease = self._lease(worker)
+        return lease is not None and time.time() <= lease["expires"]
+
+    def live_workers(self) -> list[str]:
+        return sorted(w for w in self._registry() if self._alive(w))
+
+    def dead_workers(self) -> list[str]:
+        return sorted(w for w in self._registry() if not self._alive(w))
+
+
+# ---------------------------------------------------------------------------
+# Stragglers
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StragglerPolicy:
+    """Grade step durations against the trailing median.
+
+    ``observe`` returns ``None`` | ``"warn"`` | ``"redispatch"``.  No
+    judgment is made until ``min_samples`` observations exist (cold-start
+    compile steps must not poison the baseline).
+    """
+
+    warn_factor: float = 2.0
+    redispatch_factor: float = 4.0
+    window: int = 20
+    min_samples: int = 5
+    durations: list[float] = field(default_factory=list)
+    warnings: int = 0
+    redispatches: int = 0
+
+    def observe(self, dt: float) -> str | None:
+        decision = None
+        if len(self.durations) >= self.min_samples:
+            med = statistics.median(self.durations[-self.window :])
+            if dt > self.redispatch_factor * med:
+                decision = "redispatch"
+                self.redispatches += 1
+            elif dt > self.warn_factor * med:
+                decision = "warn"
+                self.warnings += 1
+        self.durations.append(dt)
+        return decision
+
+    @property
+    def stragglers(self) -> int:
+        return self.warnings + self.redispatches
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-planning
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    """A (pod, data, model) mesh assignment; ``data`` is per-pod."""
+
+    pods: int
+    data: int
+    model: int
+
+    @property
+    def chips(self) -> int:
+        return self.pods * self.data * self.model
+
+    def as_mesh_spec(self) -> tuple[tuple[int, ...], tuple[str, ...]]:
+        """(shape, axis_names) for ``jax.make_mesh``; pod axis only when >1."""
+        if self.pods > 1:
+            return (self.pods, self.data, self.model), ("pod", "data", "model")
+        return (self.data, self.model), ("data", "model")
+
+    def __str__(self):
+        shape, names = self.as_mesh_spec()
+        return "x".join(f"{n}:{s}" for n, s in zip(names, shape))
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (n.bit_length() - 1) if n > 0 else 0
+
+
+def elastic_plan(
+    available_chips: int,
+    *,
+    model_parallel: int,
+    chips_per_pod: int = 256,
+) -> MeshPlan:
+    """Largest mesh that fits the surviving chips, model parallelism pinned.
+
+    Whole pods first (TP stays on ICI), then per-pod data parallelism at the
+    largest power of two of full model-parallel groups — a partially-dead
+    pod is dropped rather than straddled, since a DP group spanning the DCN
+    would gate every gradient all-reduce on the slow hop.
+    """
+    if available_chips < 1 or model_parallel < 1:
+        raise ValueError("need at least one chip and model_parallel ≥ 1")
+    pods = max(1, available_chips // chips_per_pod)
+    per_pod = min(available_chips // pods, chips_per_pod)
+    data = _pow2_floor(per_pod // model_parallel)
+    if data < 1:
+        raise ValueError(
+            f"{available_chips} chips cannot host one model-parallel group "
+            f"of {model_parallel}"
+        )
+    return MeshPlan(pods=pods, data=data, model=model_parallel)

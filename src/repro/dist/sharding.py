@@ -1,0 +1,285 @@
+"""Logical-axis sharding: ParamSpec trees → mesh PartitionSpecs + init.
+
+Model code declares every parameter as a :class:`ParamSpec` carrying
+*logical* axis names (``embed``, ``heads``, ``mlp``, ``vocab``, ``batch``,
+…).  An :class:`AxisRules` profile maps each logical axis to zero or more
+mesh axes; :func:`logical_to_spec` resolves a concrete shape against a mesh
+**shape-aware**:
+
+- a mesh axis that is not present on the mesh is dropped (the same model
+  definition runs on the 1-device smoke mesh, the 16×16 pod, and the
+  2×16×16 multi-pod mesh);
+- a mesh axis that does not divide the dimension is dropped (smollm's 9
+  heads stay replicated on a 16-way model axis while mlp/vocab keep TP);
+- a mesh axis already consumed by an earlier dimension of the same tensor
+  is dropped (a PartitionSpec may use each mesh axis once).
+
+Materialization (:func:`materialize_params`) folds the root PRNG key with a
+hash of each leaf's tree path, so init is deterministic per-leaf and
+completely independent of mesh shape — the property the elastic re-mesh and
+checkpoint-restore paths rely on (same seed ⇒ bitwise-identical logical
+arrays on any mesh).
+"""
+from __future__ import annotations
+
+import math
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# ---------------------------------------------------------------------------
+# ParamSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Abstract parameter leaf: shape + logical axes + dtype + init.
+
+    The default dtype is bfloat16 — the model zoo's compute dtype — so a
+    weight einsum never promotes activations out of it (scan carries must
+    keep one dtype end-to-end); norm scales, router logits, moments and
+    other precision-critical leaves opt into float32 explicitly.
+
+    ``init_scale`` semantics (see :func:`materialize_params`):
+
+    - ``None`` (default): fan-in-scaled normal, std = 1/√prod(shape[:-1]).
+    - scalar, ndim ≤ 1: constant fill (norm scales ``1.0``, biases ``0.0``).
+    - scalar ``0.0``, ndim ≥ 2: zeros (decode caches / recurrent states).
+    - other scalar, ndim ≥ 2: normal with that std (embeddings ``0.02``).
+    """
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = jnp.bfloat16
+    init_scale: float | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape", tuple(self.shape))
+        object.__setattr__(self, "axes", tuple(self.axes))
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"ParamSpec rank mismatch: shape {self.shape} vs axes {self.axes}"
+            )
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+def _is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+# ---------------------------------------------------------------------------
+# AxisRules profiles
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """Immutable logical-axis → mesh-axes table.
+
+    Values are tuples of mesh axis names tried in order; unknown logical
+    axes resolve to replicated.  Profiles derive from one another with
+    :meth:`with_`.
+    """
+
+    name: str
+    table: Mapping[str, tuple[str, ...]] = field(default_factory=dict)
+
+    def __post_init__(self):
+        norm = {}
+        for k, v in dict(self.table).items():
+            if v is None:
+                v = ()
+            elif isinstance(v, str):
+                v = (v,)
+            norm[k] = tuple(v)
+        object.__setattr__(self, "table", norm)
+
+    def get(self, logical: str | None) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        return self.table.get(logical, ())
+
+    def with_(self, name: str | None = None, **updates) -> "AxisRules":
+        table = dict(self.table)
+        table.update(updates)
+        return AxisRules(name or self.name, table)
+
+    def __repr__(self):
+        return f"AxisRules({self.name!r})"
+
+
+# Megatron-style TP over heads/mlp/vocab + DP over batch; embed replicated
+# (activations are replicated across the model axis between blocks — the
+# MoE dispatch in models/moe.py assumes exactly this).
+DEFAULT_RULES = AxisRules(
+    "default",
+    {
+        "batch": ("data",),
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "expert": ("model",),
+    },
+)
+
+# 2-pod mesh: batch shards over (pod, data); TP stays intra-pod (ICI) so the
+# only DCN collective is the gradient all-reduce over ``pod``.
+MULTIPOD_RULES = DEFAULT_RULES.with_("multipod", batch=("pod", "data"))
+
+# Pure data parallelism: batch over every mesh axis, params replicated.
+FLAT_DP_RULES = AxisRules("flat_dp", {"batch": ("data", "model")})
+FLAT_DP_MULTIPOD_RULES = AxisRules(
+    "flat_dp_multipod", {"batch": ("pod", "data", "model")}
+)
+
+# Sequence parallelism: activations additionally shard their seq axis.
+SP_RULES = DEFAULT_RULES.with_("sp", seq=("model",))
+SP_MULTIPOD_RULES = MULTIPOD_RULES.with_("sp_multipod", seq=("model",))
+
+# Serving: decode is KV-bound, so the cache shards its sequence axis over
+# the model axis (kv_seq wins the model axis; kv_heads then replicates —
+# the per-tensor dedup in logical_to_spec resolves the conflict).
+SERVE_RULES = DEFAULT_RULES.with_("serve", kv_seq=("model",))
+SERVE_MULTIPOD_RULES = MULTIPOD_RULES.with_("serve_multipod", kv_seq=("model",))
+
+# profile → (single-pod rules, multi-pod rules); launch.mesh.rules_for picks
+# by mesh axis names, launch.dryrun --rules picks the profile.
+RULE_PROFILES: dict[str, tuple[AxisRules, AxisRules]] = {
+    "default": (DEFAULT_RULES, MULTIPOD_RULES),
+    "flat_dp": (FLAT_DP_RULES, FLAT_DP_MULTIPOD_RULES),
+    "sp": (SP_RULES, SP_MULTIPOD_RULES),
+    "serve": (SERVE_RULES, SERVE_MULTIPOD_RULES),
+}
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+
+def _mesh_sizes(mesh) -> Mapping[str, int]:
+    """Mesh | {axis: size} → {axis: size} (dict form eases unit testing)."""
+    if isinstance(mesh, Mapping):
+        return mesh
+    return mesh.shape
+
+
+def logical_to_spec(
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    rules: AxisRules,
+    mesh,
+) -> PartitionSpec:
+    """Resolve logical axes to a PartitionSpec valid for ``mesh``.
+
+    Invariant (pinned by tests/test_property.py): every mesh axis kept in
+    the result divides its dimension, and no mesh axis appears twice.
+    """
+    sizes = _mesh_sizes(mesh)
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim, logical in zip(shape, axes):
+        keep: list[str] = []
+        part = 1
+        for name in rules.get(logical):
+            size = sizes.get(name)
+            if size is None or name in used:
+                continue
+            if dim % (part * size) != 0:
+                continue
+            keep.append(name)
+            part *= size
+        used.update(keep)
+        if not keep:
+            entries.append(None)
+        elif len(keep) == 1:
+            entries.append(keep[0])
+        else:
+            entries.append(tuple(keep))
+    return PartitionSpec(*entries)
+
+
+def shard_constraint(x, axes, rules: AxisRules, mesh: Mesh):
+    """``with_sharding_constraint`` via logical axes; no-op on 1-device
+    meshes (smoke tests / CPU examples stay constraint-free HLO)."""
+    if mesh.size <= 1:
+        return x
+    spec = logical_to_spec(x.shape, axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def sharding_tree(specs, rules: AxisRules, mesh: Mesh):
+    """ParamSpec pytree → matching NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, logical_to_spec(s.shape, s.axes, rules, mesh)
+        ),
+        specs,
+        is_leaf=_is_spec,
+    )
+
+
+def abstract_params(specs):
+    """ParamSpec pytree → ShapeDtypeStruct pytree (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs,
+        is_leaf=_is_spec,
+    )
+
+
+def count_params(specs) -> int:
+    """Total element count over every ParamSpec leaf."""
+    return sum(
+        s.size for s in jax.tree.leaves(specs, is_leaf=_is_spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Materialization
+# ---------------------------------------------------------------------------
+
+
+def _path_fold(path) -> int:
+    """Stable 31-bit hash of a tree path (crc32 — NOT builtin hash, which is
+    randomized per process and would break cross-run determinism)."""
+    return zlib.crc32(jax.tree_util.keystr(path).encode()) & 0x7FFFFFFF
+
+
+def _init_leaf(spec: ParamSpec, key) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype)
+    shape = spec.shape
+    if spec.init_scale is not None:
+        s = float(spec.init_scale)
+        if len(shape) <= 1 or s == 0.0:
+            return jnp.full(shape, s, dtype)
+        return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+    fan_in = max(1, math.prod(shape[:-1]))
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def materialize_params(specs, key):
+    """Materialize a ParamSpec pytree with deterministic per-leaf init.
+
+    The root key is folded with a hash of each leaf's tree path, so leaf
+    values depend only on (seed, path, shape, dtype, init_scale) — never on
+    traversal order, mesh shape, or process.  Arrays are created unsharded;
+    callers ``device_put`` with :func:`sharding_tree` (or rely on the jit'd
+    step's in_shardings) to place them.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_is_spec)
+    leaves = [
+        _init_leaf(spec, jax.random.fold_in(key, _path_fold(path)))
+        for path, spec in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

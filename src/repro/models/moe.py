@@ -23,8 +23,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
+from repro._compat.jaxshims import shard_map
 from repro.configs.base import ArchConfig
 from repro.dist.sharding import ParamSpec
 from repro.models.layers import ModelContext

@@ -19,8 +19,6 @@ the production mesh:
 """
 from __future__ import annotations
 
-import statistics
-import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -30,6 +28,7 @@ import numpy as np
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.core.proxy import Proxy, extract
+from repro.dist.fault import StragglerPolicy
 from repro.dist.sharding import materialize_params, sharding_tree
 from repro.models.layers import ModelContext
 from repro.optim.adamw import AdamWConfig, build_optimizer
@@ -50,23 +49,26 @@ class TrainerConfig:
 
 
 class StepWatchdog:
-    """Flags steps that exceed straggle_factor × trailing median."""
+    """Flags steps that exceed straggle_factor × trailing median.
+
+    Thin adapter over :class:`repro.dist.fault.StragglerPolicy` — the same
+    policy object a multi-host deployment would feed from per-worker
+    heartbeat timings; here it grades local step durations.  A step past
+    ``2×straggle_factor`` grades "redispatch" (on real multi-host it would
+    re-issue the batch; locally it is recorded like a warn).
+    """
 
     def __init__(self, factor: float, window: int = 20):
-        self.factor = factor
-        self.durations: list[float] = []
-        self.window = window
-        self.stragglers = 0
+        self.policy = StragglerPolicy(
+            warn_factor=factor, redispatch_factor=2 * factor, window=window
+        )
 
     def observe(self, dt: float) -> bool:
-        flagged = False
-        if len(self.durations) >= 5:
-            med = statistics.median(self.durations[-self.window :])
-            if dt > self.factor * med:
-                self.stragglers += 1
-                flagged = True
-        self.durations.append(dt)
-        return flagged
+        return self.policy.observe(dt) is not None
+
+    @property
+    def stragglers(self) -> int:
+        return self.policy.stragglers
 
 
 class Trainer:

@@ -1,0 +1,19 @@
+"""Suite bootstrap: src/ on sys.path + hypothesis fallback.
+
+The sys.path insert duplicates pyproject's ``pythonpath`` on purpose: this
+conftest imports ``repro`` itself (for the hypothesis stub) and must not
+depend on ini-option processing order.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro._compat import hypothesis_stub
+
+    hypothesis_stub.install()
