@@ -3,7 +3,11 @@
 Measures, per object size:
 - **pass-by-value**: payload serialized into the task and result out (what a
   control-flow engine does);
-- **proxy**: Store.proxy() creation + just-in-time resolution in the task.
+- **proxy**: Store.proxy() creation + just-in-time resolution in the task;
+- **breakdown**: serialize (framed encode), transport (connector put +
+  get_view), deserialize (zero-copy decode) — where the proxy path spends
+  its time;
+- **cold vs warm resolve**: first resolution vs a resolve-cache hit.
 
 The crossover where proxy total cost beats pass-by-value is reported; the
 paper places it around 10 kB (connector-dependent).
@@ -14,43 +18,102 @@ import pickle
 import time
 
 from benchmarks.common import BenchResult, payload
-from repro.core import Store
-from repro.core.proxy import extract
+from repro.core import Store, framing
+from repro.core.connectors import get_view, put_payload
+from repro.core.proxy import extract, reset
 
 SIZES = (1_000, 10_000, 100_000, 1_000_000, 10_000_000)
 REPS = 20
 QUICK_SIZES = (1_000, 100_000, 1_000_000)
-QUICK_REPS = 5
+QUICK_REPS = 10  # enough reps that the compare_bench gate sees signal, not noise
+WARMUP = 3
+
+
+def _best(fn, reps: int, trials: int = 3) -> float:
+    """Best-of-``trials`` mean op time: robust to allocator/GC outliers,
+    which otherwise dominate the MB-scale pass-by-value loops."""
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / reps)
+    return best
 
 
 def main(quick: bool = False) -> BenchResult:
     sizes = QUICK_SIZES if quick else SIZES
-    reps = QUICK_REPS if quick else REPS
     res = BenchResult("proxy_overhead")
     crossover = None
     with Store("overhead") as store:
         for size in sizes:
+            # sub-100-µs round trips need more reps for a stable ratio; at
+            # large sizes quick mode keeps the full rep count (still fast)
+            # so its ratios are comparable to the committed full-run baseline
+            base = QUICK_REPS if quick else REPS
+            reps = base * 10 if size <= 100_000 else REPS
             obj = payload(size)
-            t0 = time.perf_counter()
-            for _ in range(reps):
+            for _ in range(WARMUP):
+                _ = pickle.loads(pickle.dumps(obj))
+                _ = extract(store.proxy(obj, evict_on_resolve=True))
+
+            def by_value(obj=obj):
                 blob = pickle.dumps(obj)          # into task payload
                 got = pickle.loads(blob)
                 _ = pickle.loads(pickle.dumps(got))  # result path back
-            t_value = (time.perf_counter() - t0) / reps
 
-            t0 = time.perf_counter()
-            for _ in range(reps):
+            def by_proxy(obj=obj):
                 p = store.proxy(obj, evict_on_resolve=True)
                 _ = extract(p)                    # just-in-time resolve
-            t_proxy = (time.perf_counter() - t0) / reps
+
+            t_value = _best(by_value, reps)
+            t_proxy = _best(by_proxy, reps)
+
+            # -- hot-path breakdown: where the proxy round trip goes --------
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                parts = framing.encode(obj)
+            t_ser = (time.perf_counter() - t0) / reps
+
+            conn = store.connector
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                put_payload(conn, "bd", parts)
+                view = get_view(conn, "bd")
+                conn.evict("bd")  # mirrors the evict_on_resolve round trip
+            t_tra = (time.perf_counter() - t0) / reps
+
+            put_payload(conn, "bd", parts)
+            view = get_view(conn, "bd")
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                _ = framing.decode(view)
+            t_des = (time.perf_counter() - t0) / reps
+            del view
+            conn.evict("bd")
+
+            # -- resolve cache: cold first hit vs warm re-resolve -----------
+            p = store.proxy(obj)
+            t0 = time.perf_counter()
+            _ = extract(p)
+            t_cold = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                reset(p)
+                _ = extract(p)                    # resolve-cache hit
+            t_warm = (time.perf_counter() - t0) / reps
+            store.evict(object.__getattribute__(p, "__proxy_metadata__")["key"])
 
             res.add(bytes=size, pass_by_value_s=t_value, proxy_s=t_proxy,
-                    ratio=t_value / t_proxy)
+                    ratio=t_value / t_proxy,
+                    serialize_s=t_ser, transport_s=t_tra, deserialize_s=t_des,
+                    resolve_cold_s=t_cold, resolve_warm_s=t_warm,
+                    warm_speedup=t_cold / t_warm)
             if crossover is None and t_proxy <= t_value:
                 crossover = size
     res.claim(
-        crossover is not None and crossover <= 100_000,
-        f"proxy wins by ≤100 kB objects (paper: ~10 kB; crossover here: "
+        crossover is not None and crossover <= 10_000,
+        f"proxy wins by ≤10 kB objects (paper: ~10 kB; crossover here: "
         f"{crossover if crossover else f'>{sizes[-1]}'} B)",
     )
     big = res.rows[-1]
@@ -58,6 +121,12 @@ def main(quick: bool = False) -> BenchResult:
         big["ratio"] > 1.0,
         f"{big['bytes'] // 1_000_000} MB objects: proxy {big['ratio']:.1f}× "
         f"cheaper than pass-by-value",
+    )
+    warm_target = 5.0 if quick else 10.0  # few-rep quick timings are noisier
+    res.claim(
+        big["warm_speedup"] >= warm_target,
+        f"resolve cache: warm re-resolve {big['warm_speedup']:.0f}× faster "
+        f"than cold at {big['bytes'] // 1_000_000} MB (target ≥{warm_target:.0f}×)",
     )
     return res
 

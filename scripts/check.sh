@@ -18,6 +18,9 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo "== perf smoke: proxy_overhead --quick =="
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m benchmarks.proxy_overhead --quick
+    echo
+    echo "== perf gate: quick ratios vs committed BENCH_proxy.json =="
+    python scripts/compare_bench.py
 fi
 
 echo

@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Perf-trajectory gate: fail on proxy-vs-value ratio regression.
+
+Compares a freshly produced quick benchmark (``BENCH_proxy.quick.json``)
+against the committed full-run baseline (``BENCH_proxy.json``) at every
+object size both runs cover.  A fresh ratio more than ``--tolerance``
+(default 25%) below the baseline ratio at any size fails the check, so the
+store/proxy hot path can only ratchet forward.
+
+Usage: scripts/compare_bench.py [fresh.json] [baseline.json] [--tolerance 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_ratios(path: str) -> dict[int, float]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {int(r["bytes"]): float(r["ratio"]) for r in doc.get("rows", [])}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", nargs="?",
+                    default=os.path.join(REPO, "BENCH_proxy.quick.json"))
+    ap.add_argument("baseline", nargs="?",
+                    default=os.path.join(REPO, "BENCH_proxy.json"))
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional ratio drop vs baseline "
+                         "(quick runs use few reps; leave headroom for noise)")
+    ap.add_argument("--cap", type=float, default=10.0,
+                    help="saturate ratios at this value before comparing: "
+                         "beyond it the proxy has decisively won and the "
+                         "variance is pass-by-value allocator noise, not "
+                         "hot-path signal")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"[compare_bench] no baseline at {args.baseline}; skipping")
+        return 0
+    fresh, base = load_ratios(args.fresh), load_ratios(args.baseline)
+    shared = sorted(set(fresh) & set(base))
+    if not shared:
+        print("[compare_bench] no shared sizes between fresh and baseline")
+        return 1
+
+    failed = False
+    for size in shared:
+        fresh_r = min(fresh[size], args.cap)
+        base_r = min(base[size], args.cap)
+        floor = base_r * (1.0 - args.tolerance)
+        status = "OK " if fresh_r >= floor else "REGRESSION"
+        failed |= fresh_r < floor
+        print(f"[compare_bench] {size:>9} B: fresh ratio {fresh[size]:6.2f} "
+              f"vs baseline {base[size]:6.2f} "
+              f"(capped floor {floor:6.2f}) {status}")
+    if failed:
+        print(f"[compare_bench] FAIL: hot path regressed >"
+              f"{args.tolerance:.0%} vs committed BENCH_proxy.json")
+        return 1
+    print("[compare_bench] OK: no ratio regression")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,11 +5,17 @@
 - StreamProducer/StreamConsumer: metadata/bulk-decoupled streaming (§IV-B).
 - OwnedProxy/RefProxy/RefMutProxy + Lifetimes: ownership model (§IV-C).
 """
+from repro.core import framing
 from repro.core.connectors import (
     Connector,
     FileConnector,
     InMemoryConnector,
     SharedMemoryConnector,
+    get_view,
+    put_batch_payloads,
+    put_payload,
+    wait_for_key,
+    wait_for_view,
 )
 from repro.core.executor import ProxyPolicy, StoreExecutor
 from repro.core.futures import ProxyFuture, wait_all
@@ -34,7 +40,14 @@ from repro.core.ownership import (
     update,
 )
 from repro.core.proxy import Proxy, extract, get_factory, is_resolved, reset
-from repro.core.store import Store, StoreFactory
+from repro.core.store import (
+    Store,
+    StoreFactory,
+    StoreMetrics,
+    default_deserializer,
+    default_serializer,
+    invalidate_resolve_cache,
+)
 from repro.core.streaming import (
     FileLogPublisher,
     FileLogSubscriber,
@@ -67,19 +80,29 @@ __all__ = [
     "Store",
     "StoreExecutor",
     "StoreFactory",
+    "StoreMetrics",
     "StreamConsumer",
     "StreamProducer",
     "borrow",
     "clone",
+    "default_deserializer",
+    "default_serializer",
     "extract",
+    "framing",
     "free",
     "get_factory",
+    "get_view",
     "into_owned",
+    "invalidate_resolve_cache",
     "is_resolved",
     "mut_borrow",
     "owned_proxy",
+    "put_batch_payloads",
+    "put_payload",
     "release",
     "reset",
     "update",
     "wait_all",
+    "wait_for_key",
+    "wait_for_view",
 ]

@@ -11,18 +11,45 @@ single-node container we provide:
 
 All satisfy the :class:`Connector` protocol so higher layers (Store, streams,
 futures, ownership) are transport-agnostic, exactly as in the paper.
+
+Hot-path extensions (all optional; duck-typed with protocol-level fallbacks
+via :func:`put_payload` / :func:`put_batch_payloads` / :func:`get_view`):
+
+- ``put_parts(key, parts)`` — vectored put of a framed-parts payload, so the
+  connector writes header + raw buffers without a join copy;
+- ``put_batch(items)``      — amortized multi-object put (stream batches);
+- ``get_view(key)``         — zero-copy read: a memoryview over channel
+  memory (dict bytes, shm segment, mmap'd file) instead of a bytes copy.
 """
 from __future__ import annotations
 
+import itertools
 import os
 import threading
 import time
 import uuid
-from typing import Iterable, Protocol, runtime_checkable
+from typing import Iterable, Protocol, Sequence, runtime_checkable
+
+from repro.core.framing import join_parts, parts_nbytes
+
+
+# Key generation sits on the put hot path; uuid4 costs a getrandom syscall
+# per key (tens of µs on older kernels), so draw entropy once per process
+# and append a monotonic counter.  Forked children re-seed their prefix.
+_KEY_STATE = {"prefix": uuid.uuid4().hex[:16], "count": itertools.count()}
+
+
+def _reseed_key_prefix() -> None:
+    _KEY_STATE["prefix"] = uuid.uuid4().hex[:16]
+    _KEY_STATE["count"] = itertools.count()
+
+
+if hasattr(os, "register_at_fork"):
+    os.register_at_fork(after_in_child=_reseed_key_prefix)
 
 
 def new_key() -> str:
-    return uuid.uuid4().hex
+    return f"{_KEY_STATE['prefix']}{next(_KEY_STATE['count']):012x}"
 
 
 @runtime_checkable
@@ -38,6 +65,46 @@ class Connector(Protocol):
     def evict(self, key: str) -> None: ...
 
     def close(self) -> None: ...
+
+
+# ---------------------------------------------------------------------------
+# Optional-method dispatch helpers.  Higher layers call these instead of the
+# connector directly so that any object satisfying the minimal bytes-only
+# protocol keeps working, while native connectors get the fast paths.
+# ---------------------------------------------------------------------------
+
+
+def put_payload(connector: Connector, key: str, parts: Sequence) -> int:
+    """Put a framed-parts payload; returns the wire size in bytes.
+
+    Vectored (no join copy) when the connector implements ``put_parts``;
+    otherwise the parts are flattened once and handed to plain ``put``.
+    """
+    put_parts = getattr(connector, "put_parts", None)
+    if put_parts is not None:
+        return put_parts(key, parts)
+    data = join_parts(parts)
+    connector.put(key, data)
+    return len(data)
+
+
+def put_batch_payloads(
+    connector: Connector, items: Sequence[tuple[str, Sequence]]
+) -> int:
+    """Put many ``(key, parts)`` payloads; returns total wire bytes."""
+    put_batch = getattr(connector, "put_batch", None)
+    if put_batch is not None:
+        return put_batch(items)
+    return sum(put_payload(connector, key, parts) for key, parts in items)
+
+
+def get_view(connector: Connector, key: str) -> memoryview | None:
+    """Read a payload as a memoryview (zero-copy where the channel allows)."""
+    gv = getattr(connector, "get_view", None)
+    if gv is not None:
+        return gv(key)
+    data = connector.get(key)
+    return None if data is None else memoryview(data)
 
 
 class InMemoryConnector:
@@ -62,8 +129,16 @@ class InMemoryConnector:
     def put(self, key: str, data: bytes) -> None:
         self._store[key] = data
 
+    # no put_parts/put_batch here: the generic fallbacks (join once into an
+    # immutable bytes snapshot, then plain put) are already optimal for a
+    # dict-backed channel; get_view over the stored bytes is zero-copy.
+
     def get(self, key: str) -> bytes | None:
         return self._store.get(key)
+
+    def get_view(self, key: str) -> memoryview | None:
+        data = self._store.get(key)
+        return None if data is None else memoryview(data)
 
     def exists(self, key: str) -> bool:
         return key in self._store
@@ -100,12 +175,23 @@ class FileConnector:
         return os.path.join(self.directory, key)
 
     def put(self, key: str, data: bytes) -> None:
+        self.put_parts(key, (data,))
+
+    def put_parts(self, key: str, parts: Sequence) -> int:
         tmp = self._path(key) + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        total = 0
         with open(tmp, "wb") as f:
-            f.write(data)
+            # writev-style: each framed part streams to the page cache
+            # directly; the payload is never joined in user space.
+            for part in parts:
+                total += f.write(part)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self._path(key))
+        return total
+
+    def put_batch(self, items: Sequence[tuple[str, Sequence]]) -> int:
+        return sum(self.put_parts(key, parts) for key, parts in items)
 
     def get(self, key: str) -> bytes | None:
         try:
@@ -113,6 +199,22 @@ class FileConnector:
                 return f.read()
         except FileNotFoundError:
             return None
+
+    def get_view(self, key: str) -> memoryview | None:
+        import mmap
+
+        try:
+            f = open(self._path(key), "rb")
+        except FileNotFoundError:
+            return None
+        with f:
+            if os.fstat(f.fileno()).st_size == 0:
+                return memoryview(b"")
+            # The returned memoryview keeps the mapping alive; closing the
+            # fd here is safe (POSIX mappings outlive their descriptor), and
+            # an evict/unlink while mapped is equally safe on Linux.
+            mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+        return memoryview(mm)
 
     def exists(self, key: str) -> bool:
         return os.path.exists(self._path(key))
@@ -140,31 +242,86 @@ class SharedMemoryConnector:
     ``psx_<namespace>_<key>``; an index is not needed because keys are
     content-addressed by the caller (Store).  This is the high-bandwidth
     'UCX-like' transport of the single-node setting.
+
+    Overwriting an existing key reuses the segment in place when the new
+    payload fits — unless *this process* holds live zero-copy views of it
+    (then the segment is replaced and the old mapping stays valid until the
+    views die).  The guard cannot see other processes' views: treat keys as
+    write-once across processes, or evict before re-putting.
     """
 
+    _live: "weakref.WeakSet[SharedMemoryConnector]" = None  # type: ignore[assignment]
+
     def __init__(self, namespace: str | None = None):
-        self.namespace = (namespace or new_key())[:12]
+        # uuid4, not new_key(): new_key's per-process prefix would collapse
+        # every default-namespaced connector onto the same 12 chars
+        self.namespace = (namespace or uuid.uuid4().hex)[:12]
+        # Segments with exported zero-copy views (get_view); kept mapped
+        # until evict/close so resolved arrays never dangle.  The lock keeps
+        # a concurrent get_view append from being lost by a reap's rebuild
+        # (which would disarm the in-place-overwrite guard).
+        self._retained: list = []
+        self._retained_lock = threading.Lock()
+        if SharedMemoryConnector._live is None:
+            import atexit
+            import weakref
+
+            SharedMemoryConnector._live = weakref.WeakSet()
+            atexit.register(SharedMemoryConnector._atexit_disarm)
+        SharedMemoryConnector._live.add(self)
+
+    @classmethod
+    def _atexit_disarm(cls) -> None:
+        # At interpreter exit, resolved arrays may still alias retained
+        # mappings; SharedMemory.__del__ would spam BufferError.  Disarm the
+        # close and let the OS unmap on process teardown.
+        for conn in list(cls._live or ()):
+            for _, seg in conn._retained:
+                try:
+                    seg.close()
+                except BufferError:
+                    seg.close = lambda: None
 
     def _name(self, key: str) -> str:
         # shm names have tight length limits on some platforms
         return f"psx{self.namespace}{key[:32]}"
 
     def put(self, key: str, data: bytes) -> None:
+        self.put_parts(key, (data,))
+
+    def put_parts(self, key: str, parts: Sequence) -> int:
         from multiprocessing import shared_memory
 
         name = self._name(key)
+        total = parts_nbytes(parts)
+        size = max(total, 1) + 8
         try:
-            seg = shared_memory.SharedMemory(name=name, create=True, size=max(len(data), 1) + 8)
+            seg = shared_memory.SharedMemory(name=name, create=True, size=size)
         except FileExistsError:
-            old = shared_memory.SharedMemory(name=name)
-            old.close()
-            old.unlink()
-            seg = shared_memory.SharedMemory(name=name, create=True, size=max(len(data), 1) + 8)
+            seg = shared_memory.SharedMemory(name=name)
+            if seg.size < size or self._has_retained(key):
+                # Replace the segment when it's too small — or when resolved
+                # arrays in this process still alias it (overwriting in place
+                # would mutate results already handed to user code; the old
+                # mapping stays valid until those views die).
+                seg.unlink()
+                seg.close()
+                seg = shared_memory.SharedMemory(name=name, create=True, size=size)
+            # else: resize-safe reuse — overwrite in place (the length
+            # header below masks any trailing stale bytes)
         try:
-            seg.buf[:8] = len(data).to_bytes(8, "little")
-            seg.buf[8 : 8 + len(data)] = data
+            seg.buf[:8] = total.to_bytes(8, "little")
+            off = 8
+            for part in parts:
+                n = part.nbytes if isinstance(part, memoryview) else len(part)
+                seg.buf[off : off + n] = part
+                off += n
         finally:
             seg.close()
+        return total
+
+    def put_batch(self, items: Sequence[tuple[str, Sequence]]) -> int:
+        return sum(self.put_parts(key, parts) for key, parts in items)
 
     def get(self, key: str) -> bytes | None:
         from multiprocessing import shared_memory
@@ -178,6 +335,45 @@ class SharedMemoryConnector:
             return bytes(seg.buf[8 : 8 + n])
         finally:
             seg.close()
+
+    def get_view(self, key: str) -> memoryview | None:
+        from multiprocessing import shared_memory
+
+        try:
+            seg = shared_memory.SharedMemory(name=self._name(key))
+        except FileNotFoundError:
+            return None
+        n = int.from_bytes(bytes(seg.buf[:8]), "little")
+        # read-only: a plain resolve must not be able to scribble on the
+        # shared segment (mutators get private copies via decode(writable=))
+        view = seg.buf[8 : 8 + n].toreadonly()
+        with self._retained_lock:
+            self._retained.append((key, seg))
+        self._reap_retained(limit=64)
+        return view
+
+    def _reap_retained(self, limit: int = 0) -> None:
+        # Close mappings whose exported views have been garbage-collected;
+        # ones still referenced by live resolved objects raise BufferError
+        # and stay mapped.
+        with self._retained_lock:
+            if len(self._retained) <= limit:
+                return
+            still = []
+            for key, seg in self._retained:
+                try:
+                    seg.close()
+                except BufferError:
+                    still.append((key, seg))
+            self._retained = still
+
+    def _has_retained(self, key: str) -> bool:
+        with self._retained_lock:
+            if not any(k == key for k, _ in self._retained):
+                return False
+        self._reap_retained()  # drop dead views before deciding
+        with self._retained_lock:
+            return any(k == key for k, _ in self._retained)
 
     def exists(self, key: str) -> bool:
         from multiprocessing import shared_memory
@@ -201,9 +397,10 @@ class SharedMemoryConnector:
             seg.unlink()
         except FileNotFoundError:
             pass
+        self._reap_retained()
 
     def close(self) -> None:
-        pass
+        self._reap_retained()
 
     def __reduce__(self):
         return (SharedMemoryConnector, (self.namespace,))
@@ -228,6 +425,26 @@ def wait_for_key(
         data = connector.get(key)
         if data is not None:
             return data
+        if deadline is not None and time.monotonic() > deadline:
+            raise TimeoutError(f"future target {key!r} not set within {timeout}s")
+        time.sleep(delay)
+        delay = min(delay * 2.0, poll_max)
+
+
+def wait_for_view(
+    connector: Connector,
+    key: str,
+    timeout: float | None = None,
+    poll_min: float = 1e-4,
+    poll_max: float = 0.01,
+) -> memoryview:
+    """Like :func:`wait_for_key` but returns a zero-copy view of the payload."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    delay = poll_min
+    while True:
+        view = get_view(connector, key)
+        if view is not None:
+            return view
         if deadline is not None and time.monotonic() > deadline:
             raise TimeoutError(f"future target {key!r} not set within {timeout}s")
         time.sleep(delay)

@@ -10,12 +10,11 @@ Dask/Parsl/Globus Compute in the paper) and:
 """
 from __future__ import annotations
 
-import pickle
-import sys
 from concurrent.futures import Executor, Future
 from dataclasses import dataclass
 from typing import Any, Callable
 
+from repro.core import framing
 from repro.core.ownership import (
     OwnedProxy,
     RefMutProxy,
@@ -38,10 +37,9 @@ class ProxyPolicy:
     def should_proxy(self, obj: Any) -> bool:
         if isinstance(obj, Proxy):
             return False
-        try:
-            size = len(pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL))
-        except Exception:
-            return False
+        # framing's estimate is copy-free for array-likes (reads .nbytes)
+        # and out-of-band for everything else — no full in-band dumps here.
+        size = framing.estimated_nbytes(obj)
         return size >= self.min_bytes
 
 

@@ -1,0 +1,211 @@
+"""Zero-copy serialization framing for the store hot path (paper §III).
+
+Pickle protocol 5 separates the object graph (small pickle stream) from its
+large binary payloads (out-of-band ``PickleBuffer``\\ s).  We frame the two as
+
+    ``MAGIC | n_buffers:u32 | pickle_len:u64 | buf_len:u64 * n | pickle | bufs``
+
+so a payload travels through a connector as a *sequence of buffer parts* —
+the raw numpy/jax array bytes are handed to the channel as memoryviews and
+never copied through an intermediate ``BytesIO``.  On the way out,
+:func:`decode` slices sub-views of the connector's single contiguous view
+and feeds them to ``pickle.loads(..., buffers=...)``; numpy reconstructs
+arrays *over* those views (``_frombuffer``), so a resolve from a view-capable
+connector (in-memory, shm, mmap'd file) performs zero payload copies.
+
+Caveats of zero-copy resolution (standard for UCX-style transports):
+- arrays resolved from a read-only view are non-writable (copy to mutate);
+- the resolved array aliases the channel buffer, so overwriting the same key
+  in a shared-memory segment mutates previously resolved arrays.  The
+  Store's resolve cache + evict invalidation keep the common paths safe.
+
+Legacy payloads (plain pickle, protocol ≥2 streams start with ``0x80``) are
+transparently accepted by :func:`decode`, so stores can read objects written
+before this framing existed.
+"""
+from __future__ import annotations
+
+import io
+import pickle
+import struct
+from typing import Any, Sequence
+
+MAGIC = b"PSF1"
+MAGIC_ARR = b"PSA1"  # contiguous-ndarray fast frame: no pickle at all
+_HEAD = struct.Struct("<IQ")  # n_buffers, pickle_len
+_LEN = struct.Struct("<Q")
+
+
+class _JaxAwarePickler(pickle.Pickler):
+    """Pickler that converts jax arrays to numpy on the way into the store.
+
+    Consumers re-``device_put`` lazily on resolution — the proxy's
+    just-in-time semantics make this transparent.
+    """
+
+    def reducer_override(self, o):
+        import sys
+
+        # sys.modules check, NOT an import: if jax was never imported, ``o``
+        # cannot be a jax array, and a lazy ``import jax`` here would inject
+        # a ~1.5 s GIL-holding import into the first put() of a process that
+        # never touches jax (observed in the Fig-5 benchmark).
+        jax = sys.modules.get("jax")
+        if jax is None:
+            return NotImplemented
+        import numpy as np
+
+        if isinstance(o, jax.Array):
+            # The numpy copy (device→host) is unavoidable; handing the copy
+            # to the pickler lets protocol 5 take its buffer out-of-band.
+            return (np.asarray, (np.asarray(o),))
+        return NotImplemented
+
+
+def encode(obj: Any) -> list:
+    """Serialize ``obj`` into framed parts: ``[header, pickle, *raw_bufs]``.
+
+    Every part is bytes-like; large array payloads appear as out-of-band
+    memoryviews over the original object's memory (no copy).  Join the parts
+    (or hand them to a vectored connector put) to form the wire payload.
+
+    A bare C-contiguous numpy array — the dominant payload in the paper's
+    workloads — short-circuits to an array frame (``PSA1``): dtype + shape
+    header followed by the raw buffer, skipping pickle entirely on both
+    ends (this is the serializer the small-object crossover lives or dies
+    by).
+    """
+    import sys
+
+    np = sys.modules.get("numpy")
+    if (
+        np is not None
+        and type(obj) is np.ndarray
+        and obj.flags.c_contiguous
+        and obj.dtype.kind in "biufc"  # kinds that export a plain buffer
+    ):
+        dt = obj.dtype.str.encode()
+        header = b"".join(
+            (
+                MAGIC_ARR,
+                bytes((len(dt), obj.ndim)),
+                dt,
+                struct.pack(f"<{obj.ndim}Q", *obj.shape),
+            )
+        )
+        return [header, memoryview(obj).cast("B")]
+
+    bufs: list[memoryview] = []
+
+    def grab(pb: pickle.PickleBuffer):
+        bufs.append(pb.raw())
+        return False  # take out-of-band
+
+    try:
+        if "jax" not in sys.modules:
+            # no jax arrays can exist → use the C pickler end-to-end (a
+            # Pickler subclass with reducer_override pays a Python callback
+            # per object, measurable on the small-object hot path)
+            pkl = pickle.dumps(obj, protocol=5, buffer_callback=grab)
+        else:
+            stream = io.BytesIO()
+            _JaxAwarePickler(stream, protocol=5, buffer_callback=grab).dump(obj)
+            pkl = stream.getbuffer()
+    except pickle.PickleError:
+        # e.g. a non-contiguous PickleBuffer with no contiguous raw() view;
+        # fall back to fully in-band pickling (still decodable: legacy path).
+        return [pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)]
+    plen = pkl.nbytes if isinstance(pkl, memoryview) else len(pkl)
+    header = b"".join(
+        (
+            MAGIC,
+            _HEAD.pack(len(bufs), plen),
+            b"".join(_LEN.pack(b.nbytes) for b in bufs),
+        )
+    )
+    return [header, pkl, *bufs]
+
+
+def is_framed(data) -> bool:
+    view = data if isinstance(data, memoryview) else memoryview(data)
+    if view.nbytes < 4:
+        return False
+    head = view[:4]
+    return head == MAGIC or head == MAGIC_ARR
+
+
+def decode(data, *, writable: bool = False) -> Any:
+    """Deserialize a framed (or legacy plain-pickle) payload.
+
+    Accepts any bytes-like object; when given a memoryview over channel
+    memory, out-of-band buffers are zero-copy sub-views of it — resolved
+    arrays are then read-only aliases of the channel.  ``writable=True``
+    copies each raw buffer once (into a private bytearray) so reconstructed
+    arrays are mutable and independent of the channel; mutation-bearing
+    paths (ownership Owned/RefMut proxies) use this.
+    """
+    view = data if isinstance(data, memoryview) else memoryview(data)
+    if view.ndim != 1 or view.format != "B":
+        view = view.cast("B")
+    if view[:4] == MAGIC_ARR:
+        import numpy as np
+
+        dt_len, ndim = view[4], view[5]
+        off = 6 + dt_len
+        dtype = np.dtype(bytes(view[6:off]).decode())
+        shape = struct.unpack_from(f"<{ndim}Q", view, off)
+        buf = view[off + ndim * 8 :]
+        if writable:
+            buf = memoryview(bytearray(buf))
+        return np.frombuffer(buf, dtype=dtype).reshape(shape)
+    if not is_framed(view):
+        return pickle.loads(view)
+    off = len(MAGIC)
+    nbuf, plen = _HEAD.unpack_from(view, off)
+    off += _HEAD.size
+    lens = [_LEN.unpack_from(view, off + i * _LEN.size)[0] for i in range(nbuf)]
+    off += nbuf * _LEN.size
+    pkl = view[off : off + plen]
+    off += plen
+    bufs = []
+    for n in lens:
+        buf = view[off : off + n]
+        bufs.append(memoryview(bytearray(buf)) if writable else buf)
+        off += n
+    return pickle.loads(pkl, buffers=bufs)
+
+
+def parts_nbytes(parts: Sequence) -> int:
+    """Total wire size of a framed-parts payload."""
+    return sum(
+        p.nbytes if isinstance(p, memoryview) else len(p) for p in parts
+    )
+
+
+def join_parts(parts: Sequence) -> bytes:
+    """Flatten framed parts into one contiguous payload (single copy)."""
+    if len(parts) == 1:
+        p = parts[0]
+        return p if isinstance(p, bytes) else bytes(p)
+    return b"".join(parts)
+
+
+def estimated_nbytes(obj: Any) -> int:
+    """Cheap serialized-size estimate for proxy-policy thresholds.
+
+    numpy arrays report ``nbytes`` directly (no serialization); everything
+    else pays one framed encode, which is itself copy-free for buffers.
+    Returns -1 for objects that cannot be serialized at all — the .nbytes
+    shortcut is restricted to ndarrays precisely so that unpicklable
+    buffer types (memoryview, mmap) fall through to the encode probe and
+    report unserializable instead of a plausible size.
+    """
+    import sys
+
+    np = sys.modules.get("numpy")
+    if np is not None and isinstance(obj, np.ndarray) and not obj.dtype.hasobject:
+        return obj.nbytes
+    try:
+        return parts_nbytes(encode(obj))
+    except Exception:
+        return -1

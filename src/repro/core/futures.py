@@ -39,10 +39,9 @@ class ProxyFuture(Generic[T]):
         return self.store.exists(self.key)
 
     def result(self, timeout: float | None = None) -> T:
-        data = wait_for_key(
-            self.store.connector, self.key, timeout=timeout or self.timeout
+        return self.store.resolve(
+            self.key, block=True, timeout=timeout or self.timeout
         )
-        return self.store.deserializer(data)
 
     # -- consumer side (implicit: the paper's contribution) ------------------------
     def proxy(self) -> Proxy[T]:
@@ -53,6 +52,8 @@ class ProxyFuture(Generic[T]):
             self.store.connector,
             block=True,
             timeout=self.timeout,
+            deserializer=self.store._carried_deserializer(),
+            serializer=self.store._carried_serializer(),
         )
         return Proxy(factory, metadata={"key": self.key, "store": self.store.name,
                                         "future": True})

@@ -22,7 +22,7 @@ from typing import Any, TypeVar
 
 from repro.core.connectors import new_key
 from repro.core.proxy import Proxy, _resolve, is_resolved
-from repro.core.store import Store, StoreFactory
+from repro.core.store import Store, StoreFactory, invalidate_resolve_cache
 
 T = TypeVar("T")
 
@@ -63,8 +63,33 @@ def _state(p: Proxy) -> _RefState:
     return st
 
 
-def _mk(cls, state: _RefState, *, token: str | None = None, remote: bool = False) -> Proxy:
-    factory = StoreFactory(state.key, state.store_name, state.connector)
+def _codec_of(p: Proxy) -> tuple:
+    """(serializer, deserializer) carried by a proxy's factory."""
+    f = object.__getattribute__(p, "__factory__")
+    return f.serializer, f.deserializer
+
+
+def _mk(
+    cls,
+    state: _RefState,
+    *,
+    token: str | None = None,
+    remote: bool = False,
+    serializer=None,
+    deserializer=None,
+) -> Proxy:
+    # Owners and mutable borrows resolve writable private copies (their
+    # contract is mutate-then-update); immutable RefProxies keep the
+    # zero-copy read-only view, which *enforces* the no-mutation rule for
+    # array targets.
+    factory = StoreFactory(
+        state.key,
+        state.store_name,
+        state.connector,
+        serializer=serializer,
+        deserializer=deserializer,
+        writable=cls is not RefProxy,
+    )
     p = Proxy.__new__(cls)
     object.__setattr__(p, "__factory__", factory)
     from repro.core.proxy import _UNRESOLVED
@@ -100,6 +125,7 @@ class OwnedProxy(Proxy[T]):
         st.valid = False
         try:
             st.connector.evict(st.key)
+            invalidate_resolve_cache(st.store_name, st.key)
         except Exception:
             pass
 
@@ -116,7 +142,8 @@ class OwnedProxy(Proxy[T]):
             if not st.valid:
                 raise OwnershipError(f"use of freed OwnedProxy({st.key})")
             st.moved = True
-        return (_rebuild_owned, (st.store_name, st.connector, st.key))
+        ser, de = _codec_of(self)
+        return (_rebuild_owned, (st.store_name, st.connector, st.key, de, ser))
 
 
 class RefProxy(Proxy[T]):
@@ -140,9 +167,11 @@ class RefProxy(Proxy[T]):
         # of scope when the task completes").
         st = _state(self)
         meta = object.__getattribute__(self, "__proxy_metadata__")
+        ser, de = _codec_of(self)
         return (
             _rebuild_borrow,
-            (type(self), st.store_name, st.connector, st.key, meta.get("token")),
+            (type(self), st.store_name, st.connector, st.key, meta.get("token"),
+             de, ser),
         )
 
 
@@ -164,14 +193,16 @@ class RefMutProxy(Proxy[T]):
     __reduce__ = RefProxy.__reduce__
 
 
-def _rebuild_owned(store_name, connector, key):
+def _rebuild_owned(store_name, connector, key, deserializer=None, serializer=None):
     st = _RefState(store_name, connector, key)
-    return _mk(OwnedProxy, st)
+    return _mk(OwnedProxy, st, serializer=serializer, deserializer=deserializer)
 
 
-def _rebuild_borrow(cls, store_name, connector, key, token):
+def _rebuild_borrow(cls, store_name, connector, key, token,
+                    deserializer=None, serializer=None):
     st = _RefState(store_name, connector, key)
-    return _mk(cls, st, token=token, remote=True)
+    return _mk(cls, st, token=token, remote=True,
+               serializer=serializer, deserializer=deserializer)
 
 
 # ---------------------------------------------------------------------------
@@ -183,7 +214,9 @@ def owned_proxy(store: Store, obj: T, *, key: str | None = None) -> OwnedProxy[T
     """Serialize ``obj`` into the store and return its (sole) owner proxy."""
     key = store.put(obj, key=key)
     st = _RefState(store.name, store.connector, key)
-    return _mk(OwnedProxy, st)
+    return _mk(OwnedProxy, st,
+               serializer=store._carried_serializer(),
+               deserializer=store._carried_deserializer())
 
 
 def into_owned(proxy: Proxy[T]) -> OwnedProxy[T]:
@@ -195,7 +228,8 @@ def into_owned(proxy: Proxy[T]) -> OwnedProxy[T]:
     if not isinstance(factory, StoreFactory):
         raise OwnershipError("only store-backed proxies can become owned")
     st = _RefState(meta["store"], factory.connector, meta["key"])
-    return _mk(OwnedProxy, st)
+    return _mk(OwnedProxy, st,
+               serializer=factory.serializer, deserializer=factory.deserializer)
 
 
 def borrow(owner: OwnedProxy[T]) -> RefProxy[T]:
@@ -209,7 +243,8 @@ def borrow(owner: OwnedProxy[T]) -> RefProxy[T]:
             )
         token = new_key()
         st.refs.add(token)
-    return _mk(RefProxy, st, token=token)
+    ser, de = _codec_of(owner)
+    return _mk(RefProxy, st, token=token, serializer=ser, deserializer=de)
 
 
 def mut_borrow(owner: OwnedProxy[T]) -> RefMutProxy[T]:
@@ -224,7 +259,8 @@ def mut_borrow(owner: OwnedProxy[T]) -> RefMutProxy[T]:
             )
         token = new_key()
         st.mut_ref = token
-    return _mk(RefMutProxy, st, token=token)
+    ser, de = _codec_of(owner)
+    return _mk(RefMutProxy, st, token=token, serializer=ser, deserializer=de)
 
 
 def clone(owner: OwnedProxy[T]) -> OwnedProxy[T]:
@@ -237,7 +273,9 @@ def clone(owner: OwnedProxy[T]) -> OwnedProxy[T]:
         raise OwnershipError(f"target of OwnedProxy({st.key}) missing")
     nk = new_key()
     st.connector.put(nk, data)
-    return _mk(OwnedProxy, _RefState(st.store_name, st.connector, nk))
+    ser, de = _codec_of(owner)
+    return _mk(OwnedProxy, _RefState(st.store_name, st.connector, nk),
+               serializer=ser, deserializer=de)
 
 
 def update(proxy: Proxy[T]) -> None:
@@ -256,7 +294,12 @@ def update(proxy: Proxy[T]) -> None:
                 )
     if not is_resolved(proxy):
         raise OwnershipError("nothing to update: proxy never resolved/mutated")
-    store = Store.get_or_reattach(st.store_name, st.connector)
+    ser, de = _codec_of(proxy)
+    # reattach with the carried codec pair so the write-back is encoded the
+    # way every reader of this key will decode it
+    store = Store.get_or_reattach(
+        st.store_name, st.connector, serializer=ser, deserializer=de
+    )
     store.put(_resolve(proxy), key=st.key)
 
 
@@ -293,6 +336,7 @@ def free(owner: OwnedProxy) -> None:
             )
         st.valid = False
     st.connector.evict(st.key)
+    invalidate_resolve_cache(st.store_name, st.key)
 
 
 def is_valid(p: Proxy) -> bool:

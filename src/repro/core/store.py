@@ -7,60 +7,55 @@ for just-in-time retrieval, and returns a transparent :class:`Proxy`.
 The store also exposes the three pattern entry points:
 ``future()`` (§IV-A), stream producers/consumers consume stores directly
 (§IV-B), and ``owned_proxy()`` (§IV-C).
+
+Hot path (see :mod:`repro.core.framing`): the default serializer frames
+payloads as ``header || pickle || raw buffers`` (pickle protocol 5
+out-of-band), puts go through the connector's vectored ``put_parts`` when
+available, resolves read zero-copy ``get_view`` memoryviews, and resolved
+targets are kept in a per-store LRU cache so a warm re-resolve never touches
+the channel.
 """
 from __future__ import annotations
 
-import io
-import pickle
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Generic, TypeVar
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Callable, Generic, Sequence, TypeVar
 
-from repro.core.connectors import Connector, InMemoryConnector, new_key, wait_for_key
+from repro.core import framing
+from repro.core.connectors import (
+    Connector,
+    InMemoryConnector,
+    get_view,
+    new_key,
+    put_batch_payloads,
+    put_payload,
+    wait_for_view,
+)
 from repro.core.proxy import Factory, Proxy
 
 T = TypeVar("T")
 
 # ---------------------------------------------------------------------------
-# Serialization: pickle with a jax-array-aware path.  jax.Array does not
-# pickle across processes reliably; convert to numpy on the way in and let
-# consumers re-device_put (just-in-time resolution does this lazily).
+# Serialization entry points.  The default pair speaks the framed zero-copy
+# format; both remain plain ``obj <-> bytes`` callables so custom
+# serializers slot in unchanged.
 # ---------------------------------------------------------------------------
 
 
-class _JaxAwarePickler(pickle.Pickler):
-    """Pickler that converts jax arrays to numpy on the way into the store.
-
-    Consumers re-``device_put`` lazily on resolution — the proxy's
-    just-in-time semantics make this transparent.
-    """
-
-    def reducer_override(self, o):
-        import sys
-
-        # sys.modules check, NOT an import: if jax was never imported, ``o``
-        # cannot be a jax array, and a lazy ``import jax`` here would inject
-        # a ~1.5 s GIL-holding import into the first put() of a process that
-        # never touches jax (observed in the Fig-5 benchmark).
-        jax = sys.modules.get("jax")
-        if jax is None:
-            return NotImplemented
-        import numpy as np
-
-        if isinstance(o, jax.Array):
-            return (np.asarray, (np.asarray(o),))
-        return NotImplemented
-
-
 def default_serializer(obj: Any) -> bytes:
-    buf = io.BytesIO()
-    _JaxAwarePickler(buf, protocol=pickle.HIGHEST_PROTOCOL).dump(obj)
-    return buf.getvalue()
+    return framing.join_parts(framing.encode(obj))
 
 
 def default_deserializer(data: bytes) -> Any:
-    return pickle.loads(data)
+    # Accepts framed payloads *and* legacy plain pickles (pre-framing data).
+    return framing.decode(data)
+
+
+# Marks a deserializer as accepting memoryviews (zero-copy resolve path);
+# custom bytes-only deserializers are fed a one-time copy instead.
+default_deserializer.accepts_buffers = True  # type: ignore[attr-defined]
 
 
 # ---------------------------------------------------------------------------
@@ -77,20 +72,109 @@ class StoreMetrics:
     get_bytes: int = 0
     get_time: float = 0.0
     evict_count: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
+
+
+_MISS = object()
+_RAISE = object()
+
+
+class _ResolveCache:
+    """Thread-safe LRU of resolved targets, keyed ``(key, deserializer)``.
+
+    The deserializer participates in the key so one channel key resolved
+    under two different deserializers never aliases; invalidation is by
+    channel key alone (an evict must drop every variant).
+    """
+
+    def __init__(self, maxsize: int):
+        self.maxsize = max(0, maxsize)
+        self._data: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        # Bumped by every invalidate/clear.  A resolver snapshots the
+        # generation before fetching and inserts with set_if, so a resolve
+        # that raced an overwrite/evict can never install a stale object.
+        self.generation = 0
+
+    def get(self, key: tuple) -> Any:
+        if not self._data:  # lock-free miss fast path (hot on evicting flows)
+            return _MISS
+        with self._lock:
+            try:
+                self._data.move_to_end(key)
+            except KeyError:
+                return _MISS
+            return self._data[key]
+
+    def set_if(self, key: tuple, value: Any, generation: int) -> None:
+        if self.maxsize == 0:
+            return
+        with self._lock:
+            if self.generation != generation:
+                return  # an invalidate raced the fetch; don't cache
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+
+    def invalidate(self, channel_key: str) -> None:
+        with self._lock:
+            self.generation += 1  # even when empty: an in-flight set_if must lose
+            for k in [k for k in self._data if k[0] == channel_key]:
+                del self._data[k]
+
+    def clear(self) -> None:
+        with self._lock:
+            self.generation += 1
+            self._data.clear()
+
+    def __len__(self) -> int:
+        return len(self._data)
 
 
 _STORE_REGISTRY: dict[str, "Store"] = {}
 _REGISTRY_LOCK = threading.Lock()
 
 
+def _same_codec(a, b) -> bool:
+    """True when two codec callables are interchangeable.
+
+    Identity fails for codecs that don't unpickle to the same object
+    (functools.partial, callable instances); their pickled forms still
+    agree, so compare those before declaring a conflict.
+    """
+    import pickle as _pickle
+
+    try:
+        return _pickle.dumps(a) == _pickle.dumps(b)
+    except Exception:
+        return False
+
+
+def invalidate_resolve_cache(store_name: str, key: str) -> None:
+    """Drop ``key`` from the named store's resolve cache, if registered.
+
+    Connector-level evicts (ownership ``free``, stream skip-evicts) bypass
+    :meth:`Store.evict`; they call this so a cached resolve can never serve
+    a freed object.
+    """
+    st = _STORE_REGISTRY.get(store_name)
+    if st is not None:
+        st._cache.invalidate(key)
+
+
 class StoreFactory(Factory[T]):
     """Factory that retrieves a serialized target from a mediated channel.
 
-    Self-contained: carries the store name + connector (picklable), so a
-    proxy can resolve anywhere with "no external information" (paper §III).
+    Self-contained: carries the store name + connector (picklable) and, when
+    the originating store used a non-default serializer, the matching
+    deserializer — so a proxy resolves anywhere with "no external
+    information" (paper §III) *and* with the right codec even if the far
+    side reattached the store with defaults.
     """
 
     def __init__(
@@ -102,6 +186,9 @@ class StoreFactory(Factory[T]):
         evict_on_resolve: bool = False,
         block: bool = False,
         timeout: float | None = None,
+        deserializer: Callable[[bytes], Any] | None = None,
+        serializer: Callable[[Any], bytes] | None = None,
+        writable: bool = False,
     ):
         self.key = key
         self.store_name = store_name
@@ -109,27 +196,22 @@ class StoreFactory(Factory[T]):
         self.evict_on_resolve = evict_on_resolve
         self.block = block
         self.timeout = timeout
+        self.deserializer = deserializer
+        # not used to resolve; carried so write-back paths (ownership
+        # update) can reattach the store with the matching encoder
+        self.serializer = serializer
+        self.writable = writable
 
     def __call__(self) -> T:
         store = Store.get_or_reattach(self.store_name, self.connector)
-        if self.block:
-            data = wait_for_key(self.connector, self.key, timeout=self.timeout)
-            t0 = time.perf_counter()
-        else:
-            t0 = time.perf_counter()
-            data = self.connector.get(self.key)
-            if data is None:
-                raise KeyError(
-                    f"proxy target {self.key!r} missing from store "
-                    f"{self.store_name!r} (freed early? see ownership rules)"
-                )
-        obj = store.deserializer(data)
-        store.metrics.get_count += 1
-        store.metrics.get_bytes += len(data)
-        store.metrics.get_time += time.perf_counter() - t0
-        if self.evict_on_resolve:
-            self.connector.evict(self.key)
-        return obj
+        return store.resolve(
+            self.key,
+            deserializer=self.deserializer,
+            block=self.block,
+            timeout=self.timeout,
+            evict_on_resolve=self.evict_on_resolve,
+            writable=self.writable,
+        )
 
     def __repr__(self):
         return f"StoreFactory(key={self.key!r}, store={self.store_name!r})"
@@ -152,6 +234,8 @@ class Store(Generic[T]):
         self.connector = connector if connector is not None else InMemoryConnector(name)
         self.serializer = serializer
         self.deserializer = deserializer
+        self.cache_size = cache_size
+        self._cache = _ResolveCache(cache_size)
         self.metrics = StoreMetrics()
         self._closed = False
         if register:
@@ -160,37 +244,187 @@ class Store(Generic[T]):
 
     # -- registry ------------------------------------------------------------
     @classmethod
-    def get_or_reattach(cls, name: str, connector: Connector) -> "Store":
-        with _REGISTRY_LOCK:
-            st = _STORE_REGISTRY.get(name)
+    def get_or_reattach(
+        cls,
+        name: str,
+        connector: Connector,
+        *,
+        serializer: Callable[[Any], bytes] | None = None,
+        deserializer: Callable[[bytes], Any] | None = None,
+    ) -> "Store":
+        # Lock-free fast path (resolve hot path); double-checked construction
+        # under the lock so two racing reattaches can't clobber each other.
+        st = _STORE_REGISTRY.get(name)
         if st is None:
-            st = Store(name, connector)
+            with _REGISTRY_LOCK:
+                st = _STORE_REGISTRY.get(name)
+                if st is None:
+                    st = cls(
+                        name,
+                        connector,
+                        serializer=serializer or default_serializer,
+                        deserializer=deserializer or default_deserializer,
+                        register=False,
+                    )
+                    _STORE_REGISTRY[name] = st
+                    return st
+        if serializer is not None or deserializer is not None:
+            st._adopt_codec(serializer, deserializer)
         return st
+
+    def _adopt_codec(self, serializer, deserializer) -> None:
+        """Reconcile a carried custom codec with an already-registered store.
+
+        A plain resolve may have registered this store with defaults before
+        the pickled original (carrying the real codec) arrived; upgrade the
+        defaults in place.  Two *different* custom codecs for one store name
+        is unreconcilable — fail loudly rather than corrupt payloads.
+        """
+        for attr, new, default in (
+            ("serializer", serializer, default_serializer),
+            ("deserializer", deserializer, default_deserializer),
+        ):
+            if new is None:
+                continue
+            cur = getattr(self, attr)
+            if cur is default:
+                setattr(self, attr, new)
+            elif cur is not new and not _same_codec(cur, new):
+                raise ValueError(
+                    f"store {self.name!r} reattached with a conflicting "
+                    f"custom {attr} ({cur!r} vs {new!r})"
+                )
+
+    # -- codec ---------------------------------------------------------------
+    def _encode(self, obj: Any) -> Sequence:
+        """Serialize to framed parts (vectored; raw buffers uncopied)."""
+        if self.serializer is default_serializer:
+            return framing.encode(obj)
+        return (self.serializer(obj),)
+
+    def _decode(
+        self,
+        view,
+        deserializer: Callable[[bytes], Any] | None = None,
+        *,
+        writable: bool = False,
+    ) -> Any:
+        deserializer = deserializer or self.deserializer
+        if deserializer is default_deserializer:
+            return framing.decode(view, writable=writable)
+        if isinstance(view, memoryview) and not getattr(
+            deserializer, "accepts_buffers", False
+        ):
+            view = view.tobytes()  # custom codecs get an owned copy
+        return deserializer(view)
+
+    def _carried_deserializer(self) -> Callable[[bytes], Any] | None:
+        return None if self.deserializer is default_deserializer else self.deserializer
+
+    def _carried_serializer(self) -> Callable[[Any], bytes] | None:
+        return None if self.serializer is default_serializer else self.serializer
 
     # -- raw k/v --------------------------------------------------------------
     def put(self, obj: Any, key: str | None = None) -> str:
         key = key or new_key()
-        data = self.serializer(obj)
+        parts = self._encode(obj)
         t0 = time.perf_counter()
-        self.connector.put(key, data)
+        nbytes = put_payload(self.connector, key, parts)
         self.metrics.put_time += time.perf_counter() - t0
         self.metrics.put_count += 1
-        self.metrics.put_bytes += len(data)
+        self.metrics.put_bytes += nbytes
+        self._cache.invalidate(key)  # overwrite must not serve a stale resolve
         return key
 
-    def get(self, key: str, default: Any = None) -> Any:
-        data = self.connector.get(key)
-        if data is None:
-            return default
-        self.metrics.get_count += 1
-        self.metrics.get_bytes += len(data)
-        return self.deserializer(data)
+    def put_batch(self, objs: Sequence[Any], *, keys: Sequence[str] | None = None) -> list[str]:
+        """Amortized multi-object put (one connector round for the batch)."""
+        objs = list(objs)  # a generator must not be exhausted minting keys
+        keys = list(keys) if keys is not None else [new_key() for _ in objs]
+        items = [(k, self._encode(o)) for k, o in zip(keys, objs)]
+        t0 = time.perf_counter()
+        nbytes = put_batch_payloads(self.connector, items)
+        self.metrics.put_time += time.perf_counter() - t0
+        self.metrics.put_count += len(items)
+        self.metrics.put_bytes += nbytes
+        for k in keys:
+            self._cache.invalidate(k)
+        return keys
+
+    def resolve(
+        self,
+        key: str,
+        *,
+        deserializer: Callable[[bytes], Any] | None = None,
+        block: bool = False,
+        timeout: float | None = None,
+        evict_on_resolve: bool = False,
+        writable: bool = False,
+        fresh: bool = False,
+        default: Any = _RAISE,
+    ) -> Any:
+        """The one resolve hot path (factories, futures, and ``get`` all
+        land here): resolve-cache probe → zero-copy fetch → decode →
+        metrics → cache fill (generation-guarded against racing evicts).
+
+        ``writable`` resolves (ownership mutation paths) decode private
+        copies and bypass the cache entirely — a cached object is shared,
+        so it must never be handed to a mutator, and a mutator's copy must
+        never be served to readers.  ``fresh`` also bypasses the cache:
+        it is for *mutable-key* reads (lease renewals, config cells) where
+        another process or store instance may have re-put the key — cache
+        invalidation is in-process only.
+
+        Contract: cached resolves of the same key return the *same* object.
+        Framed arrays are read-only (enforced); plain Python containers are
+        shared by convention — treat resolved objects as immutable, and
+        mutate through ownership proxies (``writable`` private copies) or
+        re-read with ``fresh=True``/``writable=True`` when isolation
+        matters.
+        """
+        deserializer = deserializer or self.deserializer
+        bypass = writable or fresh
+        obj = _MISS
+        if not bypass:
+            obj = self._cache.get((key, deserializer))
+        if obj is not _MISS:
+            self.metrics.cache_hits += 1
+        else:
+            self.metrics.cache_misses += 1
+            gen = self._cache.generation
+            t0 = time.perf_counter()  # before any wait: blocking is fetch time
+            if block:
+                view = wait_for_view(self.connector, key, timeout=timeout)
+            else:
+                view = get_view(self.connector, key)
+                if view is None:
+                    if default is not _RAISE:
+                        return default
+                    raise KeyError(
+                        f"proxy target {key!r} missing from store "
+                        f"{self.name!r} (freed early? see ownership rules)"
+                    )
+            obj = self._decode(view, deserializer, writable=writable)
+            self.metrics.get_count += 1
+            self.metrics.get_bytes += view.nbytes
+            self.metrics.get_time += time.perf_counter() - t0
+            if not (evict_on_resolve or bypass):
+                self._cache.set_if((key, deserializer), obj, gen)
+        if evict_on_resolve:
+            # also on a cache hit: the one-shot contract reclaims the payload
+            self.connector.evict(key)
+            self._cache.invalidate(key)
+        return obj
+
+    def get(self, key: str, default: Any = None, *, fresh: bool = False) -> Any:
+        # missing key → default; a deserializer failure still propagates
+        return self.resolve(key, default=default, fresh=fresh)
 
     def exists(self, key: str) -> bool:
         return self.connector.exists(key)
 
     def evict(self, key: str) -> None:
         self.connector.evict(key)
+        self._cache.invalidate(key)
         self.metrics.evict_count += 1
 
     # -- proxies ---------------------------------------------------------------
@@ -205,7 +439,12 @@ class Store(Generic[T]):
         """Serialize ``obj`` into the channel and return a lazy proxy of it."""
         key = self.put(obj, key=key)
         factory = StoreFactory(
-            key, self.name, self.connector, evict_on_resolve=evict_on_resolve
+            key,
+            self.name,
+            self.connector,
+            evict_on_resolve=evict_on_resolve,
+            deserializer=self._carried_deserializer(),
+            serializer=self._carried_serializer(),
         )
         p = Proxy(factory, metadata={"key": key, "store": self.name})
         if lifetime is not None:
@@ -214,7 +453,14 @@ class Store(Generic[T]):
 
     def proxy_from_key(self, key: str, *, block: bool = False) -> Proxy[T]:
         """Build a proxy for an object already (or eventually) in the channel."""
-        factory = StoreFactory(key, self.name, self.connector, block=block)
+        factory = StoreFactory(
+            key,
+            self.name,
+            self.connector,
+            block=block,
+            deserializer=self._carried_deserializer(),
+            serializer=self._carried_serializer(),
+        )
         return Proxy(factory, metadata={"key": key, "store": self.name})
 
     # -- pattern entry points ----------------------------------------------------
@@ -234,6 +480,7 @@ class Store(Generic[T]):
             self._closed = True
             with _REGISTRY_LOCK:
                 _STORE_REGISTRY.pop(self.name, None)
+            self._cache.clear()
             self.connector.close()
 
     def __enter__(self) -> "Store":
@@ -243,8 +490,24 @@ class Store(Generic[T]):
         self.close()
 
     def __reduce__(self):
-        # Reattach by (name, connector) on the far side.
-        return (Store.get_or_reattach, (self.name, self.connector))
+        # Reattach by (name, connector) on the far side, carrying custom
+        # serializers when present.  A non-picklable custom codec fails
+        # *here*, loudly, instead of silently reattaching with defaults.
+        return (
+            _reattach,
+            (
+                self.name,
+                self.connector,
+                None if self.serializer is default_serializer else self.serializer,
+                self._carried_deserializer(),
+            ),
+        )
 
     def __repr__(self):
         return f"Store(name={self.name!r}, connector={type(self.connector).__name__})"
+
+
+def _reattach(name, connector, serializer, deserializer):
+    return Store.get_or_reattach(
+        name, connector, serializer=serializer, deserializer=deserializer
+    )

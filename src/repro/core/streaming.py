@@ -21,7 +21,7 @@ from collections import deque
 from typing import Any, Callable, Iterator, Protocol, runtime_checkable
 
 from repro.core.proxy import Proxy
-from repro.core.store import Store, StoreFactory
+from repro.core.store import Store, StoreFactory, invalidate_resolve_cache
 
 _END = "__stream_end__"
 
@@ -121,7 +121,6 @@ class FileLogPublisher:
     def __init__(self, directory: str):
         self.directory = directory
         os.makedirs(directory, exist_ok=True)
-        self._locks: dict[str, threading.Lock] = {}
 
     def _path(self, topic: str) -> str:
         return os.path.join(self.directory, f"{topic}.log")
@@ -213,6 +212,28 @@ class StreamProducer:
         self.evict_on_resolve = evict_on_resolve
         self._buffers: dict[str, list[tuple[Any, dict]]] = {}
         self._seq: dict[str, int] = {}
+        self._event_codecs: dict[str, Any] = {}  # store name → picklable codec
+
+    def _event_deserializer(self, store: Store):
+        """The store's custom deserializer, if events can carry it.
+
+        Non-picklable codecs (lambdas, closures) are omitted rather than
+        failing every send: an in-process consumer still resolves through
+        the registered store; only cross-process custom-codec streams need
+        a picklable deserializer.
+        """
+        try:
+            return self._event_codecs[store.name]
+        except KeyError:
+            pass
+        deserializer = store._carried_deserializer()
+        if deserializer is not None:
+            try:
+                pickle.dumps(deserializer)
+            except Exception:
+                deserializer = None
+        self._event_codecs[store.name] = deserializer
+        return deserializer
 
     def store_for(self, topic: str) -> Store:
         if isinstance(self._stores, Store):
@@ -243,8 +264,11 @@ class StreamProducer:
             for _, m in buf:
                 merged_meta.update(m)
             buf = [(self.aggregator(objs), merged_meta)]
-        for obj, metadata in buf:
-            key = store.put(obj)
+        # one vectored connector round for the whole batch (bulk first, then
+        # events: a consumer that sees an event can always fetch its object)
+        keys = store.put_batch([obj for obj, _ in buf])
+        deserializer = self._event_deserializer(store)
+        for key, (_, metadata) in zip(keys, buf):
             seq = self._seq.get(topic, 0)
             self._seq[topic] = seq + 1
             event = {
@@ -256,6 +280,8 @@ class StreamProducer:
                 "seq": seq,
                 "evict_on_resolve": self.evict_on_resolve,
             }
+            if deserializer is not None:
+                event["deserializer"] = deserializer
             self.publisher.send_event(topic, pickle.dumps(event))
         self._buffers[topic] = []
 
@@ -312,6 +338,7 @@ class StreamConsumer:
                 # skipped events still evict their payload to avoid leaks
                 if event.get("evict_on_resolve"):
                     event["connector"].evict(event["key"])
+                    invalidate_resolve_cache(event["store"], event["key"])
                 continue
             return event
 
@@ -323,6 +350,7 @@ class StreamConsumer:
             event["connector"],
             evict_on_resolve=event.get("evict_on_resolve", False),
             block=True,
+            deserializer=event.get("deserializer"),
         )
         proxy = Proxy(
             factory,

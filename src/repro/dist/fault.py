@@ -45,10 +45,13 @@ class HeartbeatMonitor:
         return f"hb-lease-{worker}"
 
     def _lease(self, worker: str) -> dict | None:
-        return self.store.get(self._key(worker))
+        # fresh: leases are *mutable* keys renewed by other processes/store
+        # instances; a cached read would pin the first lease forever and
+        # declare a heartbeating worker dead
+        return self.store.get(self._key(worker), fresh=True)
 
     def _registry(self) -> list[str]:
-        return self.store.get(self._REGISTRY_KEY, [])
+        return self.store.get(self._REGISTRY_KEY, [], fresh=True)
 
     def register(self, worker: str) -> None:
         # registry lives in the Store too, so monitors in other processes

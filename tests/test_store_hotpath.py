@@ -1,0 +1,710 @@
+"""Hot-path regression tests: framing, zero-copy views, resolve cache,
+metrics symmetry, reattach atomicity/fidelity, shm segment reuse, and the
+cross-process stream path (PR 2)."""
+from __future__ import annotations
+
+import os
+import pickle
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FileConnector,
+    FileLogPublisher,
+    FileLogSubscriber,
+    InMemoryConnector,
+    SharedMemoryConnector,
+    Store,
+    StreamConsumer,
+    StreamProducer,
+    extract,
+    framing,
+    free,
+    owned_proxy,
+    reset,
+)
+from repro.core.connectors import get_view, put_payload
+from repro.core.store import _STORE_REGISTRY, default_serializer
+
+
+@pytest.fixture()
+def store():
+    with Store(f"hot-{id(object())}", InMemoryConnector()) as s:
+        yield s
+
+
+# ---------------------------------------------------------------------------
+# Framing
+# ---------------------------------------------------------------------------
+
+
+class TestFraming:
+    @pytest.mark.parametrize(
+        "obj",
+        [
+            np.arange(100, dtype=np.float64),
+            np.zeros((8, 8), dtype=np.int32),
+            np.array(3.5),
+            {"a": np.ones(16), "b": [1, "x", None]},
+            [np.arange(4, dtype=np.uint8), np.arange(4, dtype=np.float32)],
+            "plain string",
+            12345,
+            b"raw bytes",
+        ],
+    )
+    def test_roundtrip(self, obj):
+        parts = framing.encode(obj)
+        out = framing.decode(framing.join_parts(parts))
+        if isinstance(obj, np.ndarray):
+            np.testing.assert_array_equal(out, obj)
+        elif isinstance(obj, dict):
+            np.testing.assert_array_equal(out["a"], obj["a"])
+            assert out["b"] == obj["b"]
+        elif isinstance(obj, list) and isinstance(obj[0], np.ndarray):
+            for got, want in zip(out, obj):
+                np.testing.assert_array_equal(got, want)
+        else:
+            assert out == obj
+
+    def test_bare_array_uses_array_frame(self):
+        arr = np.arange(1000, dtype=np.float64)
+        parts = framing.encode(arr)
+        # dtype/shape header + one raw buffer (no pickle stream at all), and
+        # the raw buffer is a view over the array's own memory (no copy)
+        assert len(parts) == 2
+        assert bytes(parts[0][:4]) == framing.MAGIC_ARR
+        raw = parts[-1]
+        assert isinstance(raw, memoryview)
+        assert raw.nbytes == arr.nbytes
+        assert np.shares_memory(np.frombuffer(raw, dtype=np.float64), arr)
+
+    def test_nested_array_buffers_out_of_band(self):
+        arr = np.arange(1000, dtype=np.float64)
+        parts = framing.encode({"a": arr})
+        # generic frame: header + pickle stream + one out-of-band raw buffer
+        assert bytes(parts[0][:4]) == framing.MAGIC
+        assert len(parts) == 3
+        raw = parts[-1]
+        assert isinstance(raw, memoryview)
+        assert raw.nbytes == arr.nbytes
+        assert np.shares_memory(np.frombuffer(raw, dtype=np.float64), arr)
+
+    def test_decode_is_zero_copy(self):
+        arr = np.arange(256, dtype=np.float64)
+        data = framing.join_parts(framing.encode(arr))
+        out = framing.decode(memoryview(data))
+        # reconstructed over the channel view, not copied out of it
+        assert not out.flags.owndata
+        assert not out.flags.writeable
+        np.testing.assert_array_equal(out, arr)
+
+    def test_legacy_plain_pickle_accepted(self):
+        legacy = pickle.dumps({"old": [1, 2, 3]}, protocol=pickle.HIGHEST_PROTOCOL)
+        assert framing.decode(legacy) == {"old": [1, 2, 3]}
+
+    def test_non_contiguous_array_falls_back(self):
+        arr = np.arange(100, dtype=np.float64)[::2]  # strided view
+        out = framing.decode(framing.join_parts(framing.encode(arr)))
+        np.testing.assert_array_equal(out, arr)
+
+    def test_estimated_nbytes(self):
+        arr = np.zeros(1000, dtype=np.float64)
+        assert framing.estimated_nbytes(arr) == arr.nbytes  # no serialization
+        assert framing.estimated_nbytes(list(range(1000))) > 1000
+
+
+# ---------------------------------------------------------------------------
+# Connector view/vectored paths
+# ---------------------------------------------------------------------------
+
+
+class TestConnectorViews:
+    @pytest.mark.parametrize("kind", ["memory", "file", "shm"])
+    def test_put_parts_and_get_view(self, kind, tmp_path):
+        if kind == "memory":
+            c = InMemoryConnector()
+        elif kind == "file":
+            c = FileConnector(str(tmp_path / "s"))
+        else:
+            c = SharedMemoryConnector()
+        try:
+            parts = [b"head", memoryview(b"middle"), b"tail"]
+            n = put_payload(c, "k", parts)
+            assert n == len(b"headmiddletail")
+            view = get_view(c, "k")
+            assert isinstance(view, memoryview)
+            assert bytes(view) == b"headmiddletail"
+            assert c.get("k") == b"headmiddletail"  # bytes path agrees
+            assert get_view(c, "missing") is None
+            del view
+            c.evict("k")
+        finally:
+            c.close()
+
+    def test_shm_recreate_reuses_segment_when_payload_fits(self):
+        from multiprocessing import shared_memory
+
+        c = SharedMemoryConnector()
+        try:
+            c.put("k", b"x" * 4096)
+            seg = shared_memory.SharedMemory(name=c._name("k"))
+            big_size = seg.size
+            seg.close()
+            c.put("k", b"y" * 10)  # smaller: must reuse, not unlink+create
+            seg = shared_memory.SharedMemory(name=c._name("k"))
+            assert seg.size == big_size  # same segment survived
+            seg.close()
+            assert c.get("k") == b"y" * 10  # header masks stale tail bytes
+            c.put("k", b"z" * (2 * big_size))  # larger: replaced
+            assert c.get("k") == b"z" * (2 * big_size)
+            c.evict("k")
+        finally:
+            c.close()
+
+    def test_file_connector_mmap_view(self, tmp_path):
+        c = FileConnector(str(tmp_path / "s"))
+        payload = np.arange(512, dtype=np.int64)
+        with Store(f"mm-{id(c)}", c) as s:
+            key = s.put(payload)
+            view = get_view(c, key)
+            out = framing.decode(view)
+            np.testing.assert_array_equal(out, payload)
+            # evict while mapped is safe on Linux; the view stays readable
+            del out
+            c.evict(key)
+            assert c.get(key) is None
+
+
+# ---------------------------------------------------------------------------
+# Resolve cache
+# ---------------------------------------------------------------------------
+
+
+class _CountingConnector(InMemoryConnector):
+    def __init__(self, namespace=None):
+        super().__init__(namespace)
+        self.gets = 0
+
+    def get_view(self, key):
+        self.gets += 1
+        return super().get_view(key)
+
+    def get(self, key):
+        self.gets += 1
+        return super().get(key)
+
+
+class TestResolveCache:
+    def test_warm_resolve_skips_connector(self):
+        c = _CountingConnector()
+        with Store(f"rc-{id(c)}", c) as s:
+            p = s.proxy([1, 2, 3])
+            assert extract(p) == [1, 2, 3]
+            assert c.gets == 1
+            reset(p)
+            assert extract(p) == [1, 2, 3]  # served from the resolve cache
+            assert c.gets == 1
+            assert s.metrics.cache_hits == 1
+            assert s.metrics.cache_misses == 1
+
+    def test_store_get_uses_cache(self):
+        c = _CountingConnector()
+        with Store(f"rg-{id(c)}", c) as s:
+            k = s.put({"v": 9})
+            assert s.get(k) == {"v": 9}
+            assert s.get(k) == {"v": 9}
+            assert c.gets == 1
+            assert s.metrics.cache_hits == 1
+
+    def test_evict_invalidates_cache(self):
+        c = _CountingConnector()
+        with Store(f"ev-{id(c)}", c) as s:
+            p = s.proxy("val")
+            assert extract(p) == "val"
+            s.evict(object.__getattribute__(p, "__proxy_metadata__")["key"])
+            reset(p)
+            with pytest.raises(KeyError):
+                extract(p)  # a cached resolve must never serve a freed object
+
+    def test_evict_on_resolve_not_cached(self):
+        c = _CountingConnector()
+        with Store(f"er-{id(c)}", c) as s:
+            p = s.proxy("one-shot", evict_on_resolve=True)
+            assert extract(p) == "one-shot"
+            reset(p)
+            with pytest.raises(KeyError):
+                extract(p)
+            assert s.metrics.cache_hits == 0
+
+    def test_ownership_free_invalidates_cache(self, store):
+        o = owned_proxy(store, [7, 8])
+        assert o[0] == 7  # resolve (cached)
+        free(o)
+        p = store.proxy_from_key(
+            object.__getattribute__(o, "__proxy_metadata__")["key"]
+        )
+        with pytest.raises(KeyError):
+            extract(p)
+
+    def test_put_overwrite_invalidates_cache(self, store):
+        k = store.put({"n": 1})
+        assert store.get(k) == {"n": 1}
+        store.put({"n": 2}, key=k)
+        assert store.get(k) == {"n": 2}
+
+    def test_lru_eviction_bounded(self):
+        with Store(f"lru-{id(object())}", InMemoryConnector(), cache_size=4) as s:
+            keys = [s.put(i) for i in range(8)]
+            for k in keys:
+                s.get(k)
+            assert len(s._cache) == 4  # bounded by cache_size
+            # least-recently-used entries fell out; newest are hits
+            hits0 = s.metrics.cache_hits
+            s.get(keys[-1])
+            assert s.metrics.cache_hits == hits0 + 1
+
+    def test_racing_invalidate_blocks_stale_cache_fill(self, store):
+        # a resolver that snapshotted the payload before an overwrite must
+        # not install its stale object after the overwrite's invalidate
+        k = store.put({"v": "old"})
+        gen = store._cache.generation
+        stale = {"v": "old"}  # what the slow resolver decoded
+        store.put({"v": "new"}, key=k)  # bumps the cache generation
+        store._cache.set_if((k, store.deserializer), stale, gen)
+        assert store.get(k) == {"v": "new"}
+
+    def test_default_shm_connectors_get_distinct_namespaces(self):
+        a, b = SharedMemoryConnector(), SharedMemoryConnector()
+        try:
+            assert a.namespace != b.namespace
+            a.put("weights", b"AAAA")
+            b.put("weights", b"BBBB")
+            assert a.get("weights") == b"AAAA"
+        finally:
+            for c in (a, b):
+                c.evict("weights")
+                c.close()
+
+    def test_evict_on_resolve_honored_on_cache_hit(self, store):
+        # a prior plain resolve caches the object; a later one-shot resolve
+        # of the same key must still reclaim the channel payload
+        k = store.put("shared")
+        assert extract(store.proxy_from_key(k)) == "shared"  # fills cache
+        p = Store.get_or_reattach(store.name, store.connector).proxy_from_key(k)
+        factory = object.__getattribute__(p, "__factory__")
+        factory.evict_on_resolve = True
+        assert extract(p) == "shared"
+        assert not store.exists(k)
+
+    def test_mut_borrow_array_mutation_roundtrip(self, store):
+        from repro.core import mut_borrow, release, update
+
+        o = owned_proxy(store, np.arange(10, dtype=np.int64))
+        m = mut_borrow(o)
+        m[0] = 99  # writable private copy, not a read-only channel view
+        update(m)
+        release(m)
+        reset(o)
+        assert int(o[0]) == 99
+        free(o)
+
+    def test_plain_resolve_is_readonly_view(self, store):
+        arr = np.arange(8, dtype=np.float64)
+        p = store.proxy(arr)
+        got = extract(p)
+        assert not got.flags.writeable  # zero-copy alias of the channel
+
+    def test_shm_overwrite_does_not_mutate_resolved_array(self):
+        c = SharedMemoryConnector()
+        name = f"shmw-{id(c)}"
+        with Store(name, c) as s:
+            k = s.put(np.zeros(64, dtype=np.int64))
+            arr = extract(s.proxy_from_key(k))
+            assert int(arr[0]) == 0
+            s.put(np.ones(64, dtype=np.int64), key=k)  # fits the segment
+            assert int(arr[0]) == 0  # user-held result not rewritten
+            fresh = extract(s.proxy_from_key(k))
+            assert int(fresh[0]) == 1
+            del arr, fresh
+            s.evict(k)
+
+    def test_shm_resolved_array_is_readonly(self):
+        c = SharedMemoryConnector()
+        with Store(f"shmro-{id(c)}", c) as s:
+            k = s.put(np.arange(16, dtype=np.int64))
+            arr = extract(s.proxy_from_key(k))
+            assert not arr.flags.writeable  # cannot scribble on the segment
+            with pytest.raises(ValueError):
+                arr[0] = 99
+            del arr
+            s.evict(k)
+
+    def test_clone_carries_custom_deserializer(self):
+        from repro.core import clone
+
+        name = f"clone-codec-{id(object())}"
+        s = Store(
+            name,
+            InMemoryConnector(),
+            serializer=_tag_serializer,
+            deserializer=_tag_deserializer,
+        )
+        o = owned_proxy(s, [1, 2, 3])
+        c = clone(o)
+        factory = object.__getattribute__(c, "__factory__")
+        assert factory.deserializer is _tag_deserializer
+        assert extract(c) == [1, 2, 3]
+        free(o)
+        free(c)
+        s.close()
+
+    def test_get_propagates_deserializer_errors(self):
+        def bad_deserializer(data):
+            raise KeyError("unknown type tag")
+
+        with Store(
+            f"bad-{id(object())}",
+            InMemoryConnector(),
+            deserializer=bad_deserializer,
+        ) as s:
+            k = s.put("payload")
+            with pytest.raises(KeyError, match="unknown type tag"):
+                s.get(k, default="swallowed?")  # key exists: codec error surfaces
+            assert s.get("truly-missing", default="absent") == "absent"
+
+    def test_fresh_read_sees_other_writers(self):
+        # mutable-key pattern (dist lease renewal): another Store instance
+        # over the same channel re-puts the key; a fresh read must not be
+        # pinned to this store's cache
+        conn = InMemoryConnector()
+        writer = Store(f"hb-w-{id(conn)}", conn, register=False)
+        reader = Store(f"hb-r-{id(conn)}", conn, register=False)
+        k = writer.put({"expires": 100})
+        assert reader.get(k) == {"expires": 100}  # cached
+        writer.put({"expires": 200}, key=k)
+        assert reader.get(k) == {"expires": 100}  # documented cache behavior
+        assert reader.get(k, fresh=True) == {"expires": 200}
+        conn.close()
+
+    def test_heartbeat_lease_renewal_across_store_instances(self):
+        from repro.dist.fault import HeartbeatMonitor
+
+        conn = InMemoryConnector()
+        worker_side = HeartbeatMonitor(
+            Store(f"hbw-{id(conn)}", conn, register=False), ttl=30.0
+        )
+        monitor_side = HeartbeatMonitor(
+            Store(f"hbm-{id(conn)}", conn, register=False), ttl=30.0
+        )
+        worker_side.register("w0")
+        assert monitor_side.live_workers() == ["w0"]
+        worker_side.heartbeat("w0")  # renewal re-puts the lease key
+        assert monitor_side.live_workers() == ["w0"]  # not pinned to 1st read
+        conn.close()
+
+    def test_put_batch_accepts_generator(self, store):
+        keys = store.put_batch(({"i": i} for i in range(3)))
+        assert len(keys) == 3
+        for i, k in enumerate(keys):
+            assert store.exists(k)
+            assert store.get(k) == {"i": i}
+
+    def test_update_after_move_keeps_custom_codec(self):
+        from repro.core import mut_borrow, release, update
+
+        name = f"upd-codec-{id(object())}"
+        s = Store(
+            name,
+            InMemoryConnector(),
+            serializer=_tag_serializer,
+            deserializer=_tag_deserializer,
+        )
+        o = owned_proxy(s, {"n": 1})
+        blob = pickle.dumps(o)  # move to a "fresh process"
+        _STORE_REGISTRY.pop(name, None)
+        o2 = pickle.loads(blob)
+        m = mut_borrow(o2)
+        m["n"] = 99
+        update(m)  # must write with the carried custom serializer
+        release(m)
+        reset(o2)
+        assert o2["n"] == 99  # decoded by the carried custom deserializer
+        free(o2)
+        _STORE_REGISTRY.pop(name, None)
+        s.connector.close()
+
+    def test_cache_size_zero_disables(self):
+        c = _CountingConnector()
+        with Store(f"z-{id(c)}", c, cache_size=0) as s:
+            k = s.put("v")
+            assert s.get(k) == "v"
+            assert s.get(k) == "v"
+            assert c.gets == 2
+            assert s.metrics.cache_hits == 0
+
+
+# ---------------------------------------------------------------------------
+# Metrics symmetry
+# ---------------------------------------------------------------------------
+
+
+class TestMetrics:
+    def test_store_get_times_fetch(self, store):
+        k = store.put(np.zeros(10_000))
+        assert store.metrics.get_time == 0.0
+        store.get(k)
+        assert store.metrics.get_time > 0.0
+        assert store.metrics.get_count == 1
+
+    def test_blocking_resolve_times_wait(self, store):
+        f = store.future()
+        p = f.proxy()
+
+        def producer():
+            time.sleep(0.05)
+            f.set_result("late")
+
+        t = threading.Thread(target=producer)
+        t.start()
+        assert p == "late"
+        t.join()
+        # the ~50 ms the consumer blocked is fetch time, not invisible
+        assert store.metrics.get_time >= 0.04
+
+
+# ---------------------------------------------------------------------------
+# Reattach: atomicity + codec fidelity
+# ---------------------------------------------------------------------------
+
+
+def _tag_serializer(obj) -> bytes:
+    return b"TAG:" + default_serializer(obj)
+
+
+def _tag_deserializer(data) -> object:
+    data = bytes(data)
+    assert data.startswith(b"TAG:"), "custom-codec payload lost its tag"
+    return framing.decode(memoryview(data)[4:])
+
+
+class TestReattach:
+    def test_get_or_reattach_is_atomic(self):
+        name = f"race-{id(object())}"
+        conn = InMemoryConnector()
+        results = []
+        barrier = threading.Barrier(8)
+
+        def attach():
+            barrier.wait()
+            results.append(Store.get_or_reattach(name, conn))
+
+        threads = [threading.Thread(target=attach) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len({id(s) for s in results}) == 1  # no clobbered duplicates
+        results[0].close()
+
+    def test_store_pickle_carries_custom_codec(self):
+        name = f"codec-{id(object())}"
+        with Store(
+            name,
+            InMemoryConnector(),
+            serializer=_tag_serializer,
+            deserializer=_tag_deserializer,
+        ) as s:
+            blob = pickle.dumps(s)
+            # simulate a fresh process: the registry forgets the store
+            with threading.Lock():
+                _STORE_REGISTRY.pop(name, None)
+            s2 = pickle.loads(blob)
+            assert s2.serializer is _tag_serializer
+            assert s2.deserializer is _tag_deserializer
+            k = s2.put({"x": 1})
+            assert s2.get(k) == {"x": 1}
+            s2.close()
+
+    def test_proxy_resolves_with_custom_codec_after_reattach(self):
+        name = f"codecp-{id(object())}"
+        s = Store(
+            name,
+            InMemoryConnector(),
+            serializer=_tag_serializer,
+            deserializer=_tag_deserializer,
+        )
+        p = s.proxy([9, 9, 9])
+        blob = pickle.dumps(p)
+        # store forgotten (fresh-process simulation; channel data survives):
+        # resolution must use the codec the data was written with (carried
+        # by the factory), not the reattached store's defaults
+        _STORE_REGISTRY.pop(name, None)
+        q = pickle.loads(blob)
+        assert extract(q) == [9, 9, 9]
+        _STORE_REGISTRY.pop(name, None)
+        s.connector.close()
+
+    def test_reattach_upgrades_default_codecs_in_place(self):
+        # a plain resolve registers the store with defaults *before* the
+        # pickled original (carrying the real codec) arrives; the late
+        # carried codec must win, not be silently dropped
+        name = f"adopt-{id(object())}"
+        conn = InMemoryConnector()
+        try:
+            early = Store.get_or_reattach(name, conn)  # defaults
+            adopted = Store.get_or_reattach(
+                name, conn,
+                serializer=_tag_serializer, deserializer=_tag_deserializer,
+            )
+            assert adopted is early
+            assert early.serializer is _tag_serializer
+            assert early.deserializer is _tag_deserializer
+            k = early.put([1, 2])
+            assert early.get(k) == [1, 2]
+        finally:
+            Store.get_or_reattach(name, conn).close()
+
+    def test_reattach_conflicting_codecs_fails_loudly(self):
+        name = f"conflict-{id(object())}"
+        conn = InMemoryConnector()
+        try:
+            Store.get_or_reattach(name, conn, deserializer=_tag_deserializer)
+            with pytest.raises(ValueError):
+                Store.get_or_reattach(
+                    name, conn, deserializer=lambda b: framing.decode(b)
+                )
+        finally:
+            Store.get_or_reattach(name, conn).close()
+
+    def test_reattach_accepts_equal_partial_codecs(self):
+        import functools
+
+        name = f"partial-{id(object())}"
+        conn = InMemoryConnector()
+        try:
+            a = functools.partial(_tag_deserializer)
+            b = functools.partial(_tag_deserializer)  # equal, not identical
+            Store.get_or_reattach(name, conn, deserializer=a)
+            st = Store.get_or_reattach(name, conn, deserializer=b)  # no raise
+            assert st.deserializer is a
+        finally:
+            Store.get_or_reattach(name, conn).close()
+
+    def test_unpicklable_codec_fails_loudly(self):
+        with Store(
+            f"loud-{id(object())}",
+            InMemoryConnector(),
+            serializer=lambda o: default_serializer(o),
+            deserializer=lambda b: framing.decode(b),
+        ) as s:
+            with pytest.raises(Exception):  # pickling error, not silent defaults
+                pickle.dumps(s)
+
+
+# ---------------------------------------------------------------------------
+# Batched puts + streaming integration
+# ---------------------------------------------------------------------------
+
+
+class TestPutBatch:
+    def test_put_batch_roundtrip(self, store):
+        objs = [np.arange(i + 1) for i in range(5)]
+        keys = store.put_batch(objs)
+        assert len(keys) == len(set(keys)) == 5
+        assert store.metrics.put_count == 5
+        for k, want in zip(keys, objs):
+            np.testing.assert_array_equal(store.get(k), want)
+
+    def test_unpicklable_payload_passes_by_value_in_executor(self, store):
+        from concurrent.futures import ThreadPoolExecutor
+
+        from repro.core import StoreExecutor
+
+        with StoreExecutor(ThreadPoolExecutor(1), store) as ex:
+            # a big memoryview has .nbytes but cannot be serialized; it must
+            # fall through to pass-by-value on a thread engine, not crash
+            mv = memoryview(bytearray(200_000))
+            assert ex.submit(len, mv).result() == 200_000
+
+    def test_lambda_codec_stream_works_in_process(self):
+        from repro.core import QueuePublisher, QueueSubscriber
+
+        name = f"lam-{id(object())}"
+        s = Store(
+            name,
+            InMemoryConnector(),
+            serializer=lambda o: b"L:" + framing.join_parts(framing.encode(o)),
+            deserializer=lambda b: framing.decode(memoryview(bytes(b))[2:]),
+        )
+        ns = f"lam-ns-{id(s)}"
+        sub = QueueSubscriber("t", ns)
+        prod = StreamProducer(QueuePublisher(ns), {"t": s}, evict_on_resolve=False)
+        prod.send("t", {"x": 1})  # must not fail pickling the lambda codec
+        prod.flush()
+        p, _ = StreamConsumer(sub, timeout=5).next_with_metadata()
+        assert extract(p) == {"x": 1}  # resolved via the registered store
+        s.close()
+
+    def test_stream_batch_uses_put_batch(self, store):
+        from repro.core import QueuePublisher, QueueSubscriber
+
+        ns = f"pb-{id(store)}"
+        sub = QueueSubscriber("t", ns)
+        prod = StreamProducer(
+            QueuePublisher(ns), {"t": store}, batch_size=4, evict_on_resolve=False
+        )
+        for i in range(4):
+            prod.send("t", i)
+        prod.close_topic("t")
+        got = [extract(p) for p in StreamConsumer(sub, timeout=5)]
+        assert got == [0, 1, 2, 3]
+
+
+_PRODUCER_SCRIPT = """
+import sys
+import numpy as np
+from repro.core import FileConnector, FileLogPublisher, Store, StreamProducer
+
+data_dir, broker_dir = sys.argv[1], sys.argv[2]
+store = Store("xp-hot-stream", FileConnector(data_dir))
+prod = StreamProducer(FileLogPublisher(broker_dir), {"t": store})
+for i in range(3):
+    prod.send("t", np.full(64, i, dtype=np.int64), metadata={"i": i})
+prod.close_topic("t")
+"""
+
+
+class TestCrossProcessStream:
+    def test_file_stream_producer_subprocess_consumer_parent(self, tmp_path):
+        data_dir, broker_dir = str(tmp_path / "data"), str(tmp_path / "broker")
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _PRODUCER_SCRIPT, data_dir, broker_dir],
+            env=env,
+            stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE,
+        )
+        try:
+            sub = FileLogSubscriber("t", broker_dir)
+            got = {}
+            with StreamConsumer(sub, timeout=60) as cons:
+                for proxy in cons:
+                    meta = object.__getattribute__(proxy, "__proxy_metadata__")
+                    arr = extract(proxy)
+                    assert arr.dtype == np.int64 and arr.shape == (64,)
+                    got[meta["i"]] = int(arr[0])
+        finally:
+            out, err = proc.communicate(timeout=60)
+        assert proc.returncode == 0, err.decode()
+        assert got == {0: 0, 1: 1, 2: 2}
+        # default evict_on_resolve=True: resolved payloads were reclaimed
+        remaining = [f for f in os.listdir(data_dir) if ".tmp." not in f]
+        assert remaining == []
+        _STORE_REGISTRY.pop("xp-hot-stream", None)
