@@ -11,7 +11,9 @@ submits a compute task per item to a worker pool.  Configurations:
 
 Metric: completed compute tasks per second.  Paper: 4.6×/6.2× faster than
 Redis Pub/Sub at 1/10 MB and 256 workers; dispatcher caps at ~100 MB/s.
-Scaled here: 4 workers, 0.05 s tasks, 100 kB–5 MB items.
+Scaled here: 16 workers, 0.02 s tasks, 100 kB–5 MB items — like the paper's
+256-worker runs, the worker pool outpaces the dispatcher, so throughput is
+set by how much bulk data squeezes through the event path.
 """
 from __future__ import annotations
 
@@ -31,9 +33,9 @@ from repro.core.streaming import (
     StreamProducer,
 )
 
-WORKERS = 4
-TASK_S = 0.05
-ITEMS = 60
+WORKERS = 16
+TASK_S = 0.02
+ITEMS = 96
 SIZES = (100_000, 1_000_000, 5_000_000)
 
 
@@ -44,18 +46,20 @@ def _compute(item) -> int:
     return len(item)
 
 
-def run_direct(d: int) -> float:
+def run_direct(d: int, items: int = None, workers: int = None) -> float:
     """Bulk bytes through the dispatcher (pub/sub semantics)."""
+    items = items or ITEMS
+    workers = workers or WORKERS
     q: queue.Queue = queue.Queue(maxsize=8)
     item = payload(d)
 
     def producer():
-        for _ in range(ITEMS):
+        for _ in range(items):
             q.put(pickle.dumps(item))  # broker carries the full item
         q.put(None)
 
     done = []
-    with ThreadPoolExecutor(WORKERS) as pool, Timer() as t:
+    with ThreadPoolExecutor(workers) as pool, Timer() as t:
         threading.Thread(target=producer, daemon=True).start()
         futs = []
         while True:
@@ -67,11 +71,13 @@ def run_direct(d: int) -> float:
             futs.append(pool.submit(lambda b: _compute(pickle.loads(b)), task_payload))
         done = [f.result() for f in futs]
     assert all(done)
-    return ITEMS / t.elapsed
+    return items / t.elapsed
 
 
-def run_proxystream(d: int) -> float:
+def run_proxystream(d: int, items: int = None, workers: int = None) -> float:
     """Metadata through the dispatcher; bulk store→worker."""
+    items = items or ITEMS
+    workers = workers or WORKERS
     ns = f"fig6-{d}"
     store = Store(f"fig6-store-{d}")
     producer = StreamProducer(
@@ -81,18 +87,18 @@ def run_proxystream(d: int) -> float:
     item = payload(d)
 
     def produce():
-        for i in range(ITEMS):
+        for i in range(items):
             producer.send("items", item, metadata={"i": i})
             producer.flush_topic("items")
         producer.close_topic("items")
 
-    with ThreadPoolExecutor(WORKERS) as pool, Timer() as t:
+    with ThreadPoolExecutor(workers) as pool, Timer() as t:
         threading.Thread(target=produce, daemon=True).start()
         futs = [pool.submit(_compute, proxy) for proxy in consumer]
         wait(futs)
         assert all(f.result() for f in futs)
     store.close()
-    return ITEMS / t.elapsed
+    return items / t.elapsed
 
 
 def main() -> BenchResult:
@@ -106,13 +112,13 @@ def main() -> BenchResult:
         )
     small, large = res.rows[0], res.rows[-1]
     res.claim(
-        small["speedup"] > 0.8,
-        f"small items (100 kB): comparable throughput (paper: ≈equal; "
-        f"got {small['speedup']:.2f}×)",
+        small["speedup"] >= 1.0,
+        f"small items (100 kB): ProxyStream at least matches direct pub/sub "
+        f"(paper: ≈equal; got {small['speedup']:.2f}×)",
     )
     res.claim(
-        large["speedup"] > 1.15,
-        f"large items ({large['item_bytes']//1_000_000} MB): ProxyStream beats "
+        large["speedup"] >= 2.0,
+        f"large items ({large['item_bytes']//1_000_000} MB): ProxyStream ≥2× "
         f"direct pub/sub (paper: 4.6–7.3× at cluster scale; got "
         f"{large['speedup']:.2f}× at {WORKERS} workers)",
     )

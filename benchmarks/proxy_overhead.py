@@ -19,7 +19,7 @@ import time
 
 from benchmarks.common import BenchResult, payload
 from repro.core import Store, framing
-from repro.core.connectors import get_view, put_payload
+from repro.core.connectors import get_payload, put_payload
 from repro.core.proxy import extract, reset
 
 SIZES = (1_000, 10_000, 100_000, 1_000_000, 10_000_000)
@@ -41,10 +41,10 @@ def _best(fn, reps: int, trials: int = 3) -> float:
     return best
 
 
-def main(quick: bool = False) -> BenchResult:
+def measure_rows(quick: bool = False) -> list[dict]:
+    """One measurement pass: a row of timings per object size."""
     sizes = QUICK_SIZES if quick else SIZES
-    res = BenchResult("proxy_overhead")
-    crossover = None
+    rows: list[dict] = []
     with Store("overhead") as store:
         for size in sizes:
             # sub-100-µs round trips need more reps for a stable ratio; at
@@ -79,17 +79,17 @@ def main(quick: bool = False) -> BenchResult:
             t0 = time.perf_counter()
             for _ in range(reps):
                 put_payload(conn, "bd", parts)
-                view = get_view(conn, "bd")
+                pl = get_payload(conn, "bd")  # parts tuple or contiguous view
                 conn.evict("bd")  # mirrors the evict_on_resolve round trip
             t_tra = (time.perf_counter() - t0) / reps
 
             put_payload(conn, "bd", parts)
-            view = get_view(conn, "bd")
+            pl = get_payload(conn, "bd")
             t0 = time.perf_counter()
             for _ in range(reps):
-                _ = framing.decode(view)
+                _ = framing.decode(pl)
             t_des = (time.perf_counter() - t0) / reps
-            del view
+            del pl
             conn.evict("bd")
 
             # -- resolve cache: cold first hit vs warm re-resolve -----------
@@ -104,13 +104,39 @@ def main(quick: bool = False) -> BenchResult:
             t_warm = (time.perf_counter() - t0) / reps
             store.evict(object.__getattribute__(p, "__proxy_metadata__")["key"])
 
-            res.add(bytes=size, pass_by_value_s=t_value, proxy_s=t_proxy,
-                    ratio=t_value / t_proxy,
-                    serialize_s=t_ser, transport_s=t_tra, deserialize_s=t_des,
-                    resolve_cold_s=t_cold, resolve_warm_s=t_warm,
-                    warm_speedup=t_cold / t_warm)
-            if crossover is None and t_proxy <= t_value:
-                crossover = size
+            rows.append(dict(
+                bytes=size, pass_by_value_s=t_value, proxy_s=t_proxy,
+                ratio=t_value / t_proxy,
+                serialize_s=t_ser, transport_s=t_tra, deserialize_s=t_des,
+                resolve_cold_s=t_cold, resolve_warm_s=t_warm,
+                warm_speedup=t_cold / t_warm))
+    return rows
+
+
+def main(quick: bool = False, runs: int = 1) -> BenchResult:
+    """Measure (``runs`` passes, element-wise median) and validate claims.
+
+    The committed BENCH_proxy.json baseline is produced with ``--runs 3``
+    so claims and rows come from the *same* merged data.
+    """
+    import statistics
+
+    all_rows = [measure_rows(quick) for _ in range(runs)]
+    rows = []
+    for idx in range(len(all_rows[0])):
+        merged = {
+            k: (all_rows[0][idx][k] if k == "bytes"
+                else statistics.median(r[idx][k] for r in all_rows))
+            for k in all_rows[0][idx]
+        }
+        rows.append(merged)
+    res = BenchResult("proxy_overhead")
+    res.rows = rows
+    sizes = tuple(r["bytes"] for r in rows)
+    crossover = None
+    for r in rows:
+        if crossover is None and r["proxy_s"] <= r["pass_by_value_s"]:
+            crossover = r["bytes"]
     res.claim(
         crossover is not None and crossover <= 10_000,
         f"proxy wins by ≤10 kB objects (paper: ~10 kB; crossover here: "
@@ -122,16 +148,21 @@ def main(quick: bool = False) -> BenchResult:
         f"{big['bytes'] // 1_000_000} MB objects: proxy {big['ratio']:.1f}× "
         f"cheaper than pass-by-value",
     )
-    warm_target = 5.0 if quick else 10.0  # few-rep quick timings are noisier
+    # The in-memory cold path is itself zero-copy now (parts pass-by-
+    # reference), so the cache's edge over cold compressed from ~10× to the
+    # residual frame-parse + frombuffer cost it still skips.
+    warm_target = 1.5 if quick else 2.0
     res.claim(
         big["warm_speedup"] >= warm_target,
-        f"resolve cache: warm re-resolve {big['warm_speedup']:.0f}× faster "
-        f"than cold at {big['bytes'] // 1_000_000} MB (target ≥{warm_target:.0f}×)",
+        f"resolve cache: warm re-resolve {big['warm_speedup']:.1f}× faster "
+        f"than the zero-copy cold resolve at {big['bytes'] // 1_000_000} MB "
+        f"(target ≥{warm_target:.1f}×)",
     )
     return res
 
 
-def write_bench_json(res: BenchResult, *, quick: bool = False) -> str:
+def write_bench_json(res: BenchResult, *, quick: bool = False,
+                     runs: int = 1) -> str:
     """Machine-readable perf-trajectory artifact at the repo root.
 
     One JSON per PR generation; the driver diffs successive BENCH_proxy.json
@@ -150,6 +181,7 @@ def write_bench_json(res: BenchResult, *, quick: bool = False) -> str:
             {
                 "bench": res.name,
                 "quick": quick,
+                "runs": runs,  # rows are element-wise medians across runs
                 "unix_time": _time.time(),
                 "rows": res.rows,
                 "claims": res.claims,
@@ -168,11 +200,14 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes/reps for the CI smoke (scripts/check.sh)")
+    ap.add_argument("--runs", type=int, default=1,
+                    help="measurement passes; rows are element-wise medians "
+                         "(the committed baseline uses 3)")
     args = ap.parse_args()
-    r = main(quick=args.quick)
+    r = main(quick=args.quick, runs=args.runs)
     print(r.dump())
     r.save()
-    print(f"[bench] wrote {write_bench_json(r, quick=args.quick)}")
+    print(f"[bench] wrote {write_bench_json(r, quick=args.quick, runs=args.runs)}")
     # quick mode is a CI smoke: 5-rep timings are informational, so only a
     # crash fails the gate; full runs still report claim status via exit code
     sys.exit(0 if (r.ok or args.quick) else 1)

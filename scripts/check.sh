@@ -21,6 +21,17 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo
     echo "== perf gate: quick ratios vs committed BENCH_proxy.json =="
     python scripts/compare_bench.py
+    echo
+    echo "== perf smoke: stream_bench --quick =="
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.stream_bench --quick
+    echo
+    echo "== perf gate: quick metrics vs committed BENCH_stream.json =="
+    # 40% tolerance: this box is CPU-share throttled and even same-run
+    # ratios carry scheduler weather; the regressions this gate exists to
+    # catch (a reintroduced polling loop, a lost batching path) are step
+    # functions far beyond 40%.
+    python scripts/compare_bench.py --stream --tolerance 0.4
 fi
 
 echo

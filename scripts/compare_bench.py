@@ -1,13 +1,24 @@
 #!/usr/bin/env python
-"""Perf-trajectory gate: fail on proxy-vs-value ratio regression.
+"""Perf-trajectory gate: fail on hot-path regression vs committed baselines.
 
-Compares a freshly produced quick benchmark (``BENCH_proxy.quick.json``)
-against the committed full-run baseline (``BENCH_proxy.json``) at every
-object size both runs cover.  A fresh ratio more than ``--tolerance``
-(default 25%) below the baseline ratio at any size fails the check, so the
-store/proxy hot path can only ratchet forward.
+Two modes:
 
-Usage: scripts/compare_bench.py [fresh.json] [baseline.json] [--tolerance 0.25]
+- default: compares a freshly produced quick proxy benchmark
+  (``BENCH_proxy.quick.json``) against the committed full-run baseline
+  (``BENCH_proxy.json``) at every object size both runs cover.  A fresh
+  proxy-vs-value ratio more than ``--tolerance`` (default 25%) below the
+  baseline ratio at any size fails the check.
+- ``--stream``: compares ``BENCH_stream.quick.json`` against the committed
+  ``BENCH_stream.json`` metric-by-metric.  Gated metrics are same-run
+  ratios (load-immune on a CPU-share-throttled box) plus the wake latency;
+  metrics prefixed ``info_`` (absolute rates) are printed but never gated.
+  Metrics named ``*_us``/``*_s``/``*_latency*`` are lower-is-better (a rise
+  beyond tolerance fails); everything else is higher-is-better.
+
+Either way the hot paths can only ratchet forward.
+
+Usage: scripts/compare_bench.py [fresh.json] [baseline.json]
+                                [--stream] [--tolerance 0.25]
 """
 from __future__ import annotations
 
@@ -25,25 +36,17 @@ def load_ratios(path: str) -> dict[int, float]:
     return {int(r["bytes"]): float(r["ratio"]) for r in doc.get("rows", [])}
 
 
-def main(argv: list[str] | None = None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("fresh", nargs="?",
-                    default=os.path.join(REPO, "BENCH_proxy.quick.json"))
-    ap.add_argument("baseline", nargs="?",
-                    default=os.path.join(REPO, "BENCH_proxy.json"))
-    ap.add_argument("--tolerance", type=float, default=0.25,
-                    help="allowed fractional ratio drop vs baseline "
-                         "(quick runs use few reps; leave headroom for noise)")
-    ap.add_argument("--cap", type=float, default=10.0,
-                    help="saturate ratios at this value before comparing: "
-                         "beyond it the proxy has decisively won and the "
-                         "variance is pass-by-value allocator noise, not "
-                         "hot-path signal")
-    args = ap.parse_args(argv)
+def load_metrics(path: str) -> dict[str, float]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {k: float(v) for k, v in doc.get("metrics", {}).items()}
 
-    if not os.path.exists(args.baseline):
-        print(f"[compare_bench] no baseline at {args.baseline}; skipping")
-        return 0
+
+def _lower_is_better(name: str) -> bool:
+    return name.endswith(("_us", "_s")) or "latency" in name
+
+
+def compare_proxy(args) -> int:
     fresh, base = load_ratios(args.fresh), load_ratios(args.baseline)
     shared = sorted(set(fresh) & set(base))
     if not shared:
@@ -66,6 +69,69 @@ def main(argv: list[str] | None = None) -> int:
         return 1
     print("[compare_bench] OK: no ratio regression")
     return 0
+
+
+def compare_stream(args) -> int:
+    fresh, base = load_metrics(args.fresh), load_metrics(args.baseline)
+    shared = sorted(set(fresh) & set(base))
+    if not shared:
+        print("[compare_bench] no shared metrics between fresh and baseline")
+        return 1
+
+    failed = False
+    for name in shared:
+        f_v, b_v = fresh[name], base[name]
+        if name.startswith("info_"):
+            print(f"[compare_bench] {name:>26}: fresh {f_v:12.2f} "
+                  f"vs baseline {b_v:12.2f} (informational, not gated)")
+            continue
+        if _lower_is_better(name):
+            limit = b_v * (1.0 + args.tolerance)
+            ok = f_v <= limit
+            bound = f"ceil {limit:12.2f}"
+        else:
+            limit = b_v * (1.0 - args.tolerance)
+            ok = f_v >= limit
+            bound = f"floor {limit:11.2f}"
+        failed |= not ok
+        print(f"[compare_bench] {name:>26}: fresh {f_v:12.2f} "
+              f"vs baseline {b_v:12.2f} ({bound}) "
+              f"{'OK' if ok else 'REGRESSION'}")
+    if failed:
+        print(f"[compare_bench] FAIL: stream/futures hot path regressed >"
+              f"{args.tolerance:.0%} vs committed BENCH_stream.json")
+        return 1
+    print("[compare_bench] OK: no stream metric regression")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", nargs="?", default=None)
+    ap.add_argument("baseline", nargs="?", default=None)
+    ap.add_argument("--stream", action="store_true",
+                    help="compare BENCH_stream metric dictionaries instead "
+                         "of BENCH_proxy size/ratio rows")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional regression vs baseline "
+                         "(quick runs use few reps; leave headroom for noise)")
+    ap.add_argument("--cap", type=float, default=10.0,
+                    help="proxy mode: saturate ratios at this value before "
+                         "comparing — beyond it the proxy has decisively won "
+                         "and the variance is pass-by-value allocator noise, "
+                         "not hot-path signal")
+    args = ap.parse_args(argv)
+
+    stem = "BENCH_stream" if args.stream else "BENCH_proxy"
+    if args.fresh is None:
+        args.fresh = os.path.join(REPO, f"{stem}.quick.json")
+    if args.baseline is None:
+        args.baseline = os.path.join(REPO, f"{stem}.json")
+
+    if not os.path.exists(args.baseline):
+        print(f"[compare_bench] no baseline at {args.baseline}; skipping")
+        return 0
+    return compare_stream(args) if args.stream else compare_proxy(args)
 
 
 if __name__ == "__main__":

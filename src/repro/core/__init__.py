@@ -14,6 +14,9 @@ from repro.core.connectors import (
     get_view,
     put_batch_payloads,
     put_payload,
+    put_payload_new,
+    wait_for,
+    wait_for_any,
     wait_for_key,
     wait_for_view,
 )
@@ -55,6 +58,7 @@ from repro.core.streaming import (
     QueueSubscriber,
     StreamConsumer,
     StreamProducer,
+    publish_event,
 )
 
 __all__ = [
@@ -97,12 +101,16 @@ __all__ = [
     "is_resolved",
     "mut_borrow",
     "owned_proxy",
+    "publish_event",
     "put_batch_payloads",
     "put_payload",
+    "put_payload_new",
     "release",
     "reset",
     "update",
     "wait_all",
+    "wait_for",
+    "wait_for_any",
     "wait_for_key",
     "wait_for_view",
 ]

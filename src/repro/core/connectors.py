@@ -13,13 +13,21 @@ All satisfy the :class:`Connector` protocol so higher layers (Store, streams,
 futures, ownership) are transport-agnostic, exactly as in the paper.
 
 Hot-path extensions (all optional; duck-typed with protocol-level fallbacks
-via :func:`put_payload` / :func:`put_batch_payloads` / :func:`get_view`):
+via :func:`put_payload` / :func:`put_batch_payloads` / :func:`get_view` /
+:func:`put_payload_new` / :func:`wait_for` / :func:`wait_for_any`):
 
 - ``put_parts(key, parts)`` — vectored put of a framed-parts payload, so the
   connector writes header + raw buffers without a join copy;
 - ``put_batch(items)``      — amortized multi-object put (stream batches);
 - ``get_view(key)``         — zero-copy read: a memoryview over channel
-  memory (dict bytes, shm segment, mmap'd file) instead of a bytes copy.
+  memory (dict bytes, shm segment, mmap'd file) instead of a bytes copy;
+- ``put_parts_new(key, parts)`` — atomic put-if-absent (``None`` when the
+  key already exists): the single-round-trip future ``set_result`` path;
+- ``wait_for(key, timeout)`` / ``wait_for_any(keys, timeout)`` — blocking
+  existence waits that are *notified* instead of polled: condition-variable
+  wake-ups in memory, directory mtime/size watches on files, segment
+  watches on shared memory.  Connectors without them fall back to the
+  exponential-backoff existence poll.
 """
 from __future__ import annotations
 
@@ -34,14 +42,19 @@ from repro.core.framing import join_parts, parts_nbytes
 
 
 # Key generation sits on the put hot path; uuid4 costs a getrandom syscall
-# per key (tens of µs on older kernels), so draw entropy once per process
-# and append a monotonic counter.  Forked children re-seed their prefix.
-_KEY_STATE = {"prefix": uuid.uuid4().hex[:16], "count": itertools.count()}
+# per key (tens of µs on older kernels), so draw entropy once per process,
+# append a monotonic counter, and render keys in preallocated blocks (one
+# list-comprehension format pass per _KEY_BLOCK keys beats a dict-lookup +
+# f-string per call).  Forked children re-seed their prefix.
+_KEY_BLOCK = 256
+_KEY_STATE = {"prefix": uuid.uuid4().hex[:16], "count": itertools.count(),
+              "pool": []}
 
 
 def _reseed_key_prefix() -> None:
     _KEY_STATE["prefix"] = uuid.uuid4().hex[:16]
     _KEY_STATE["count"] = itertools.count()
+    _KEY_STATE["pool"] = []
 
 
 if hasattr(os, "register_at_fork"):
@@ -49,7 +62,15 @@ if hasattr(os, "register_at_fork"):
 
 
 def new_key() -> str:
-    return f"{_KEY_STATE['prefix']}{next(_KEY_STATE['count']):012x}"
+    try:
+        return _KEY_STATE["pool"].pop()
+    except IndexError:
+        # Racing refills are safe: the shared counter keeps every rendered
+        # key unique, and list.pop/extend are atomic under the GIL.
+        prefix, count = _KEY_STATE["prefix"], _KEY_STATE["count"]
+        pool = [f"{prefix}{n:012x}" for n in itertools.islice(count, _KEY_BLOCK)]
+        _KEY_STATE["pool"].extend(pool[:-1])
+        return pool[-1]
 
 
 @runtime_checkable
@@ -107,6 +128,148 @@ def get_view(connector: Connector, key: str) -> memoryview | None:
     return None if data is None else memoryview(data)
 
 
+def get_payload(connector: Connector, key: str):
+    """Read a payload in its cheapest native form.
+
+    Returns a framed *parts* tuple when the connector stores parts
+    (``get_parts``: the fully zero-copy in-memory path — no join ever
+    happens), else a memoryview via ``get_view``, else ``None`` when the
+    key is missing.  ``framing.decode`` accepts both forms.
+    """
+    gp = getattr(connector, "get_parts", None)
+    if gp is not None:
+        parts = gp(key)
+        if parts is not None:
+            return parts
+        return None
+    return get_view(connector, key)
+
+
+def put_payload_new(connector: Connector, key: str, parts: Sequence) -> int | None:
+    """Atomic put-if-absent of a framed-parts payload.
+
+    Returns the wire size on success, ``None`` when ``key`` already exists.
+    Native connectors implement ``put_parts_new`` atomically (dict setdefault,
+    ``link(2)``, shm ``O_EXCL`` create); the generic fallback is a non-atomic
+    exists-then-put (documented: last resort for bytes-only connectors).
+    """
+    ppn = getattr(connector, "put_parts_new", None)
+    if ppn is not None:
+        return ppn(key, parts)
+    pn = getattr(connector, "put_new", None)
+    if pn is not None:
+        data = join_parts(parts)
+        return len(data) if pn(key, data) else None
+    if connector.exists(key):
+        return None
+    return put_payload(connector, key, parts)
+
+
+def wait_for(
+    connector: Connector,
+    key: str,
+    timeout: float | None = None,
+    poll_min: float = 1e-4,
+    poll_max: float = 0.01,
+) -> None:
+    """Block until ``key`` exists in the channel.
+
+    Dispatches to the connector's native ``wait_for`` (notification-based:
+    condition variables, directory watches, segment watches) when present;
+    otherwise falls back to an exponential-backoff existence poll.  Raises
+    ``TimeoutError`` when the deadline passes first.
+    """
+    wf = getattr(connector, "wait_for", None)
+    if wf is not None:
+        wf(key, timeout)
+        return
+    deadline = None if timeout is None else time.monotonic() + timeout
+    delay = poll_min
+    while not connector.exists(key):
+        if deadline is not None and time.monotonic() > deadline:
+            raise TimeoutError(f"key {key!r} not set within {timeout}s")
+        time.sleep(delay)
+        delay = min(delay * 2.0, poll_max)
+
+
+def wait_for_any(
+    connector: Connector,
+    keys: Sequence[str],
+    timeout: float | None = None,
+    poll_min: float = 1e-4,
+    poll_max: float = 0.01,
+) -> str:
+    """Block until *some* key in ``keys`` exists; returns the first ready one.
+
+    One multi-key wait (a single condition sleep / directory watch covers
+    every key), not N sequential single-key waits — the ``wait_all`` barrier
+    over futures is built on this.
+    """
+    keys = list(keys)
+    if not keys:
+        raise ValueError("wait_for_any requires at least one key")
+    wfa = getattr(connector, "wait_for_any", None)
+    if wfa is not None:
+        return wfa(keys, timeout)
+    deadline = None if timeout is None else time.monotonic() + timeout
+    delay = poll_min
+    while True:
+        for k in keys:
+            if connector.exists(k):
+                return k
+        if deadline is not None and time.monotonic() > deadline:
+            raise TimeoutError(f"none of {len(keys)} keys set within {timeout}s")
+        time.sleep(delay)
+        delay = min(delay * 2.0, poll_max)
+
+
+def _watch_dir(
+    directory: str,
+    ready,
+    timeout: float | None,
+    what: str,
+    poll_min: float = 5e-5,
+    poll_max: float = 0.01,
+):
+    """Wait until ``ready()`` returns truthy, watching ``directory`` for
+    change.
+
+    A directory's (mtime_ns, size) signature changes whenever an entry is
+    created, renamed in, or removed — one ``stat(2)`` covers every key in
+    the channel.  While the signature is stable we back off exponentially;
+    any change re-checks immediately and resets the backoff, so wake-up
+    latency tracks filesystem timestamp granularity instead of a fixed
+    polling interval.
+    """
+    deadline = None if timeout is None else time.monotonic() + timeout
+    delay = poll_min
+    last_sig = None
+    first = True
+    while True:
+        hit = ready()
+        if hit:
+            return hit
+        try:
+            st = os.stat(directory)
+            sig = (st.st_mtime_ns, st.st_size)
+        except FileNotFoundError:
+            sig = None
+        changed = sig != last_sig
+        last_sig = sig
+        if changed:
+            delay = poll_min  # activity: re-check soon, backoff resets
+        # The deadline is checked every iteration — continuous churn from
+        # unrelated keys must not starve the timeout (or pin a CPU).
+        if deadline is not None and time.monotonic() > deadline:
+            raise TimeoutError(f"{what} not set within {timeout}s")
+        if changed and first:
+            first = False
+            continue  # first signature read: re-check ready() immediately
+        time.sleep(delay)
+        if not changed:
+            delay = min(delay * 2.0, poll_max)
+
+
 class InMemoryConnector:
     """Thread-shared in-process object store (the 'Redis' of one process).
 
@@ -115,12 +278,19 @@ class InMemoryConnector:
     """
 
     _registry: dict[str, dict[str, bytes]] = {}
+    # namespace → (condition, waiter-count cell) shared by every connector
+    # instance attached to the namespace, so a put in one instance wakes
+    # blocked waits in another (same mediated channel).
+    _conds: dict[str, tuple[threading.Condition, list]] = {}
     _lock = threading.Lock()
 
     def __init__(self, namespace: str | None = None):
         self.namespace = namespace or new_key()
         with InMemoryConnector._lock:
             InMemoryConnector._registry.setdefault(self.namespace, {})
+            self._cond, self._waiters = InMemoryConnector._conds.setdefault(
+                self.namespace, (threading.Condition(), [0])
+            )
 
     @property
     def _store(self) -> dict[str, bytes]:
@@ -128,17 +298,112 @@ class InMemoryConnector:
 
     def put(self, key: str, data: bytes) -> None:
         self._store[key] = data
+        # Waiter-count guard keeps the no-waiter hot path lock-free; the
+        # GIL orders the dict write before the count read, and a waiter
+        # re-checks the dict under the condition before sleeping, so a
+        # wake-up can never be lost.
+        if self._waiters[0]:
+            with self._cond:
+                self._cond.notify_all()
 
-    # no put_parts/put_batch here: the generic fallbacks (join once into an
-    # immutable bytes snapshot, then plain put) are already optimal for a
-    # dict-backed channel; get_view over the stored bytes is zero-copy.
+    def put_parts(self, key: str, parts: Sequence) -> int:
+        """Zero-copy vectored put: store the parts tuple itself.
+
+        The dominant payload (framed array) is ``[header, memoryview]``
+        where the memoryview aliases the producer's buffer — an in-process
+        channel is the process heap, so a put is pass-by-reference: O(1)
+        in payload size, no join copy, no allocation churn.  Consequence
+        (documented, mirrors the shm write-once caveat): a producer must
+        treat array payloads as frozen after ``put`` — resolves alias its
+        memory until the key is evicted *and* resolved views die.  Callers
+        needing snapshot semantics use plain ``put(key, bytes)``.
+        """
+        entry = tuple(parts)
+        self._store[key] = entry
+        if self._waiters[0]:
+            with self._cond:
+                self._cond.notify_all()
+        return parts_nbytes(entry)
+
+    def get_parts(self, key: str):
+        """Payload as a framed-parts tuple (zero-copy; see ``put_parts``)."""
+        data = self._store.get(key)
+        if data is None:
+            return None
+        return data if isinstance(data, tuple) else (memoryview(data),)
+
+    def put_new(self, key: str, data: bytes) -> bool:
+        """Atomic put-if-absent (dict setdefault is atomic under the GIL).
+
+        The entry is wrapped in a fresh 1-tuple so the insertion-identity
+        check can never be fooled by interned payloads (``b""`` is a
+        singleton: two racing setters would otherwise both claim the win).
+        """
+        entry = (data,)
+        if self._store.setdefault(key, entry) is not entry:
+            return False
+        if self._waiters[0]:
+            with self._cond:
+                self._cond.notify_all()
+        return True
+
+    def wait_for(self, key: str, timeout: float | None = None) -> None:
+        store = self._store
+        if key in store:  # fast path: no lock when already present
+            return
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            self._waiters[0] += 1
+            try:
+                while key not in store:
+                    remaining = (
+                        None if deadline is None else deadline - time.monotonic()
+                    )
+                    if remaining is not None and remaining <= 0:
+                        raise TimeoutError(f"key {key!r} not set within {timeout}s")
+                    self._cond.wait(remaining)
+            finally:
+                self._waiters[0] -= 1
+
+    def wait_for_any(self, keys: Sequence[str], timeout: float | None = None) -> str:
+        store = self._store
+        for k in keys:
+            if k in store:
+                return k
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            self._waiters[0] += 1
+            try:
+                while True:
+                    for k in keys:
+                        if k in store:
+                            return k
+                    remaining = (
+                        None if deadline is None else deadline - time.monotonic()
+                    )
+                    if remaining is not None and remaining <= 0:
+                        raise TimeoutError(
+                            f"none of {len(keys)} keys set within {timeout}s"
+                        )
+                    self._cond.wait(remaining)
+            finally:
+                self._waiters[0] -= 1
 
     def get(self, key: str) -> bytes | None:
-        return self._store.get(key)
+        data = self._store.get(key)
+        if data is None or not isinstance(data, tuple):
+            return data
+        return join_parts(data)  # parts entry: join on demand (bytes copy)
 
     def get_view(self, key: str) -> memoryview | None:
         data = self._store.get(key)
-        return None if data is None else memoryview(data)
+        if data is None:
+            return None
+        if isinstance(data, tuple):
+            # contiguous view of a parts entry: one join copy (only paid by
+            # custom-codec reads; the default resolve path uses get_parts)
+            data = join_parts(data)
+        return memoryview(data)
 
     def exists(self, key: str) -> bool:
         return key in self._store
@@ -152,6 +417,7 @@ class InMemoryConnector:
     def close(self) -> None:
         with InMemoryConnector._lock:
             InMemoryConnector._registry.pop(self.namespace, None)
+            InMemoryConnector._conds.pop(self.namespace, None)
 
     # picklable: same namespace reattaches in-process; this mirrors the
     # paper's connectors whose pickled form carries server address info.
@@ -192,6 +458,51 @@ class FileConnector:
 
     def put_batch(self, items: Sequence[tuple[str, Sequence]]) -> int:
         return sum(self.put_parts(key, parts) for key, parts in items)
+
+    def put_parts_new(self, key: str, parts: Sequence) -> int | None:
+        """Atomic put-if-absent: ``link(2)`` the temp file into place.
+
+        Unlike ``rename``, ``link`` fails with EEXIST when the target is
+        already present — the kernel arbitrates racing producers.
+        """
+        final = self._path(key)
+        if os.path.exists(final):
+            return None  # cheap pre-check; the link below is the arbiter
+        tmp = final + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        total = 0
+        with open(tmp, "wb") as f:
+            for part in parts:
+                total += f.write(part)
+            f.flush()
+            os.fsync(f.fileno())
+        try:
+            os.link(tmp, final)
+        except FileExistsError:
+            return None
+        finally:
+            os.remove(tmp)
+        return total
+
+    def wait_for(self, key: str, timeout: float | None = None) -> None:
+        path = self._path(key)
+        if os.path.exists(path):
+            return
+        _watch_dir(
+            self.directory, lambda: os.path.exists(path), timeout, f"key {key!r}"
+        )
+
+    def wait_for_any(self, keys: Sequence[str], timeout: float | None = None) -> str:
+        paths = [(k, self._path(k)) for k in keys]
+
+        def ready():
+            for k, p in paths:
+                if os.path.exists(p):
+                    return k
+            return None
+
+        return _watch_dir(
+            self.directory, ready, timeout, f"any of {len(keys)} keys"
+        )
 
     def get(self, key: str) -> bytes | None:
         try:
@@ -242,6 +553,13 @@ class SharedMemoryConnector:
     ``psx_<namespace>_<key>``; an index is not needed because keys are
     content-addressed by the caller (Store).  This is the high-bandwidth
     'UCX-like' transport of the single-node setting.
+
+    Commit protocol: the 8-byte length header stores ``total + 1`` and is
+    written *after* the payload bytes (x86-TSO store order makes this
+    visible cross-process in order).  A zero header means "created but not
+    yet published" — readers and the segment watch treat it as absent, so
+    a notification-latency wake between ``shm_open`` and the payload write
+    can never observe a torn or empty object.
 
     Overwriting an existing key reuses the segment in place when the new
     payload fits — unless *this process* holds live zero-copy views of it
@@ -310,18 +628,82 @@ class SharedMemoryConnector:
             # else: resize-safe reuse — overwrite in place (the length
             # header below masks any trailing stale bytes)
         try:
-            seg.buf[:8] = total.to_bytes(8, "little")
+            seg.buf[:8] = bytes(8)  # mark unready while the body is written
             off = 8
             for part in parts:
                 n = part.nbytes if isinstance(part, memoryview) else len(part)
                 seg.buf[off : off + n] = part
                 off += n
+            seg.buf[:8] = (total + 1).to_bytes(8, "little")  # publish last
         finally:
             seg.close()
         return total
 
     def put_batch(self, items: Sequence[tuple[str, Sequence]]) -> int:
         return sum(self.put_parts(key, parts) for key, parts in items)
+
+    def put_parts_new(self, key: str, parts: Sequence) -> int | None:
+        """Atomic put-if-absent: shm segments are created ``O_EXCL``."""
+        from multiprocessing import shared_memory
+
+        total = parts_nbytes(parts)
+        try:
+            seg = shared_memory.SharedMemory(
+                name=self._name(key), create=True, size=max(total, 1) + 8
+            )
+        except FileExistsError:
+            return None
+        try:
+            off = 8
+            for part in parts:
+                n = part.nbytes if isinstance(part, memoryview) else len(part)
+                seg.buf[off : off + n] = part
+                off += n
+            seg.buf[:8] = (total + 1).to_bytes(8, "little")  # publish last
+        except BaseException:
+            # A half-written exclusive segment must not survive: retries
+            # would hit FileExistsError (None → "already set") while the
+            # zero header keeps readers waiting forever — the wedged-key
+            # state.  Unlink so the key is cleanly absent again.
+            try:
+                seg.unlink()
+            except Exception:
+                pass
+            raise
+        finally:
+            seg.close()
+        return total
+
+    def _seg_ready(self, key: str):
+        # Segment watch: a segment is *ready* once its commit header is
+        # nonzero — existence alone would wake a reader into the
+        # create→write window.  On Linux POSIX shm is a /dev/shm file, so
+        # the header check is one open+read, no map/unmap round trip.
+        path = os.path.join("/dev/shm", self._name(key))
+        if os.path.isdir("/dev/shm"):
+            try:
+                with open(path, "rb") as f:
+                    head = f.read(8)
+            except FileNotFoundError:
+                return False
+            return len(head) == 8 and head != bytes(8)
+        return self.exists(key)
+
+    def wait_for(self, key: str, timeout: float | None = None) -> None:
+        if self._seg_ready(key):
+            return
+        # When /dev/shm is absent, _watch_dir degrades to the plain
+        # adaptive-backoff poll (a missing watch dir never changes signature).
+        _watch_dir("/dev/shm", lambda: self._seg_ready(key), timeout, f"key {key!r}")
+
+    def wait_for_any(self, keys: Sequence[str], timeout: float | None = None) -> str:
+        def ready():
+            for k in keys:
+                if self._seg_ready(k):
+                    return k
+            return None
+
+        return _watch_dir("/dev/shm", ready, timeout, f"any of {len(keys)} keys")
 
     def get(self, key: str) -> bytes | None:
         from multiprocessing import shared_memory
@@ -331,8 +713,10 @@ class SharedMemoryConnector:
         except FileNotFoundError:
             return None
         try:
-            n = int.from_bytes(bytes(seg.buf[:8]), "little")
-            return bytes(seg.buf[8 : 8 + n])
+            h = int.from_bytes(bytes(seg.buf[:8]), "little")
+            if h == 0:
+                return None  # created but not yet published
+            return bytes(seg.buf[8 : 8 + h - 1])
         finally:
             seg.close()
 
@@ -343,10 +727,13 @@ class SharedMemoryConnector:
             seg = shared_memory.SharedMemory(name=self._name(key))
         except FileNotFoundError:
             return None
-        n = int.from_bytes(bytes(seg.buf[:8]), "little")
+        h = int.from_bytes(bytes(seg.buf[:8]), "little")
+        if h == 0:  # created but not yet published
+            seg.close()
+            return None
         # read-only: a plain resolve must not be able to scribble on the
         # shared segment (mutators get private copies via decode(writable=))
-        view = seg.buf[8 : 8 + n].toreadonly()
+        view = seg.buf[8 : 8 + h - 1].toreadonly()
         with self._retained_lock:
             self._retained.append((key, seg))
         self._reap_retained(limit=64)
@@ -382,8 +769,11 @@ class SharedMemoryConnector:
             seg = shared_memory.SharedMemory(name=self._name(key))
         except FileNotFoundError:
             return False
-        seg.close()
-        return True
+        try:
+            # unpublished segments are invisible (commit protocol above)
+            return bytes(seg.buf[:8]) != bytes(8)
+        finally:
+            seg.close()
 
     def evict(self, key: str) -> None:
         from multiprocessing import shared_memory
@@ -406,6 +796,21 @@ class SharedMemoryConnector:
         return (SharedMemoryConnector, (self.namespace,))
 
 
+def _wait_then_read(connector, key, timeout, poll_min, poll_max, getter):
+    """Shared wait-then-read loop: :func:`wait_for` the key, read it with
+    ``getter``, and re-wait if an evict raced the wake-up."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    while True:
+        remaining = None if deadline is None else max(0.0, deadline - time.monotonic())
+        wait_for(connector, key, remaining if timeout is not None else None,
+                 poll_min, poll_max)
+        payload = getter(connector, key)
+        if payload is not None:
+            return payload
+        if deadline is not None and time.monotonic() > deadline:
+            raise TimeoutError(f"future target {key!r} not set within {timeout}s")
+
+
 def wait_for_key(
     connector: Connector,
     key: str,
@@ -413,22 +818,17 @@ def wait_for_key(
     poll_min: float = 1e-4,
     poll_max: float = 0.01,
 ) -> bytes:
-    """Block until ``key`` exists in the channel, with exponential backoff.
+    """Block until ``key`` exists in the channel and return its payload.
 
     This is the mediated-channel analogue of `Future.result()` used by
     ProxyFuture resolution (paper §IV-A): producer and consumer synchronize
-    *through the store*, never through engine-specific primitives.
+    *through the store*, never through engine-specific primitives.  The wait
+    is notification-driven via :func:`wait_for` (condition variables in
+    memory, directory/segment watches cross-process); the read is retried in
+    case an evict races the wake-up.
     """
-    deadline = None if timeout is None else time.monotonic() + timeout
-    delay = poll_min
-    while True:
-        data = connector.get(key)
-        if data is not None:
-            return data
-        if deadline is not None and time.monotonic() > deadline:
-            raise TimeoutError(f"future target {key!r} not set within {timeout}s")
-        time.sleep(delay)
-        delay = min(delay * 2.0, poll_max)
+    return _wait_then_read(connector, key, timeout, poll_min, poll_max,
+                           lambda c, k: c.get(k))
 
 
 def wait_for_view(
@@ -439,13 +839,17 @@ def wait_for_view(
     poll_max: float = 0.01,
 ) -> memoryview:
     """Like :func:`wait_for_key` but returns a zero-copy view of the payload."""
-    deadline = None if timeout is None else time.monotonic() + timeout
-    delay = poll_min
-    while True:
-        view = get_view(connector, key)
-        if view is not None:
-            return view
-        if deadline is not None and time.monotonic() > deadline:
-            raise TimeoutError(f"future target {key!r} not set within {timeout}s")
-        time.sleep(delay)
-        delay = min(delay * 2.0, poll_max)
+    return _wait_then_read(connector, key, timeout, poll_min, poll_max, get_view)
+
+
+def wait_for_payload(
+    connector: Connector,
+    key: str,
+    timeout: float | None = None,
+    poll_min: float = 1e-4,
+    poll_max: float = 0.01,
+):
+    """Like :func:`wait_for_view` but in the connector's cheapest native
+    form (parts tuple or memoryview — see :func:`get_payload`)."""
+    return _wait_then_read(connector, key, timeout, poll_min, poll_max,
+                           get_payload)

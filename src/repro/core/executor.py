@@ -6,7 +6,11 @@ Dask/Parsl/Globus Compute in the paper) and:
 1. auto-proxies task arguments/results larger than a policy threshold,
 2. tracks Ref/RefMut borrows passed into a task and releases them via a
    done-callback on the task's future — "a reference passed to a task goes
-   out of scope when the task completes".
+   out of scope when the task completes",
+3. offers :meth:`submit_future`, which returns a :class:`ProxyFuture`
+   *immediately*: downstream tasks take ``future.proxy()`` and submit
+   without waiting, so Fig-5-style producer/consumer chains overlap compute
+   with transport by default.
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ from dataclasses import dataclass
 from typing import Any, Callable
 
 from repro.core import framing
+from repro.core.futures import ProxyFuture
 from repro.core.ownership import (
     OwnedProxy,
     RefMutProxy,
@@ -37,10 +42,48 @@ class ProxyPolicy:
     def should_proxy(self, obj: Any) -> bool:
         if isinstance(obj, Proxy):
             return False
+        # Tiny knowns skip the framing estimate entirely: scalars can never
+        # reach a real threshold, and str/bytes sizes bound their payloads
+        # (a str is ≤4 B/char encoded; the +64 covers pickle overhead).
+        t = type(obj)
+        if obj is None or t in (bool, float, complex) or (
+            t is int and obj.bit_length() <= 512  # ints are unbounded
+        ):
+            if self.min_bytes > 64:
+                return False
+        elif t is bytes or t is bytearray:
+            if len(obj) >= self.min_bytes:
+                return True
+            if len(obj) + 64 < self.min_bytes:
+                return False
+        elif t is str:
+            if 4 * len(obj) + 64 < self.min_bytes:
+                return False
         # framing's estimate is copy-free for array-likes (reads .nbytes)
         # and out-of-band for everything else — no full in-band dumps here.
         size = framing.estimated_nbytes(obj)
         return size >= self.min_bytes
+
+
+def _publish_error(result: ProxyFuture, exc: BaseException) -> None:
+    """Best-effort: make *some* error payload reach the channel.
+
+    A consumer blocked on the future can only be released through the
+    store — if the real exception (or result) is unpicklable, publish a
+    picklable stand-in rather than leaving the key forever unset (the
+    silent-hang failure mode the notification protocol exists to kill).
+    """
+    try:
+        result.set_exception(exc)
+    except RuntimeError:
+        pass  # already set: nothing to release
+    except BaseException:
+        try:
+            result.set_exception(
+                RuntimeError(f"task failed with unpicklable payload: {exc!r}")
+            )
+        except BaseException:
+            pass
 
 
 def _proxy_result_wrapper(fn: Callable, store: Store, policy: ProxyPolicy):
@@ -67,7 +110,8 @@ class StoreExecutor:
         self.store = store
         self.policy = policy or ProxyPolicy()
 
-    def submit(self, fn: Callable, *args, **kwargs) -> Future:
+    def _transform_args(self, args, kwargs):
+        """Proxy large args, collect Ref/RefMut borrows for auto-release."""
         borrows: list[tuple[Any, str]] = []  # (_RefState, token)
 
         def xform(obj):
@@ -81,13 +125,14 @@ class StoreExecutor:
                 return self.store.proxy(obj, evict_on_resolve=True)
             return obj
 
-        args = tuple(xform(a) for a in args)
-        kwargs = {k: xform(v) for k, v in kwargs.items()}
-
-        fut = self.engine.submit(
-            _proxy_result_wrapper(fn, self.store, self.policy), *args, **kwargs
+        return (
+            tuple(xform(a) for a in args),
+            {k: xform(v) for k, v in kwargs.items()},
+            borrows,
         )
 
+    @staticmethod
+    def _attach_release(fut: Future, borrows) -> None:
         if borrows:
 
             def _release(_f: Future, borrows=borrows):
@@ -95,7 +140,47 @@ class StoreExecutor:
                     release_by_token(st, token)
 
             fut.add_done_callback(_release)
+
+    def submit(self, fn: Callable, *args, **kwargs) -> Future:
+        args, kwargs, borrows = self._transform_args(args, kwargs)
+        fut = self.engine.submit(
+            _proxy_result_wrapper(fn, self.store, self.policy), *args, **kwargs
+        )
+        self._attach_release(fut, borrows)
         return fut
+
+    def submit_future(self, fn: Callable, *args, **kwargs) -> ProxyFuture:
+        """Submit ``fn`` and return a :class:`ProxyFuture` of its result.
+
+        The future exists before the task runs: mint proxies from it and
+        submit consumers immediately — they block just-in-time in the store
+        (paper §IV-A pipelining).  The task's result travels through the
+        channel via ``set_result``; a task exception is propagated with
+        ``set_exception`` and re-raised by ``result()``/proxy resolution.
+        The engine-side handle is exposed as ``future.task``.
+        """
+        result = self.store.future()
+        args, kwargs, borrows = self._transform_args(args, kwargs)
+
+        def run(*a, **kw):
+            try:
+                out = fn(*a, **kw)
+            except BaseException as e:
+                _publish_error(result, e)
+                raise
+            try:
+                result.set_result(out)
+            except RuntimeError:
+                raise  # double-set: a genuine protocol violation
+            except BaseException as e:
+                # e.g. an unserializable result: consumers must still wake
+                _publish_error(result, e)
+                raise
+
+        task = self.engine.submit(run, *args, **kwargs)
+        self._attach_release(task, borrows)
+        result.task = task
+        return result
 
     def map(self, fn: Callable, *iterables):
         futs = [self.submit(fn, *xs) for xs in zip(*iterables)]

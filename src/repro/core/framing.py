@@ -143,7 +143,13 @@ def decode(data, *, writable: bool = False) -> Any:
     copies each raw buffer once (into a private bytearray) so reconstructed
     arrays are mutable and independent of the channel; mutation-bearing
     paths (ownership Owned/RefMut proxies) use this.
+
+    Also accepts a framed *parts* sequence as produced by :func:`encode`
+    (see :func:`decode_parts`) — the fully zero-copy path for channels that
+    store parts instead of a joined payload.
     """
+    if isinstance(data, (tuple, list)):
+        return decode_parts(data, writable=writable)
     view = data if isinstance(data, memoryview) else memoryview(data)
     if view.ndim != 1 or view.format != "B":
         view = view.cast("B")
@@ -173,6 +179,56 @@ def decode(data, *, writable: bool = False) -> Any:
         bufs.append(memoryview(bytearray(buf)) if writable else buf)
         off += n
     return pickle.loads(pkl, buffers=bufs)
+
+
+def decode_parts(parts: Sequence, *, writable: bool = False) -> Any:
+    """Deserialize a framed *parts* sequence without joining it.
+
+    ``encode`` emits ``[header, pickle, *bufs]`` (or ``[header, buf]`` for
+    the bare-array frame); a connector that stores the parts as-is hands
+    them back here and the out-of-band buffers are consumed *in place* —
+    no join copy, resolved arrays alias the producer's original memory
+    (read-only).  Parts that don't match the encode layout (single part,
+    foreign split) fall back to join + :func:`decode`.
+    """
+    if len(parts) == 1:
+        return decode(parts[0], writable=writable)
+    head = parts[0]
+    hview = head if isinstance(head, memoryview) else memoryview(head)
+    if hview.ndim != 1 or hview.format != "B":
+        hview = hview.cast("B")
+
+    def _buf(part):
+        mv = part if isinstance(part, memoryview) else memoryview(part)
+        if writable:
+            return memoryview(bytearray(mv))
+        return mv.toreadonly()
+
+    if hview[:4] == MAGIC_ARR and len(parts) == 2:
+        import numpy as np
+
+        dt_len, ndim = hview[4], hview[5]
+        off = 6 + dt_len
+        if hview.nbytes == off + ndim * 8:  # header part is exactly the header
+            dtype = np.dtype(bytes(hview[6:off]).decode())
+            shape = struct.unpack_from(f"<{ndim}Q", hview, off)
+            return np.frombuffer(_buf(parts[1]), dtype=dtype).reshape(shape)
+    elif hview[:4] == MAGIC:
+        nbuf, plen = _HEAD.unpack_from(hview, 4)
+        lens_end = 4 + _HEAD.size + nbuf * _LEN.size
+        if (
+            len(parts) == 2 + nbuf
+            and hview.nbytes == lens_end
+            and all(
+                _LEN.unpack_from(hview, 4 + _HEAD.size + i * _LEN.size)[0]
+                == (parts[2 + i].nbytes if isinstance(parts[2 + i], memoryview)
+                    else len(parts[2 + i]))
+                for i in range(nbuf)
+            )
+        ):
+            bufs = [_buf(p) for p in parts[2:]]
+            return pickle.loads(parts[1], buffers=bufs)
+    return decode(join_parts(parts), writable=writable)
 
 
 def parts_nbytes(parts: Sequence) -> int:

@@ -2,22 +2,44 @@
 
 A :class:`ProxyFuture` is created for an eventual value ``x``; any number of
 proxies can be minted from it *before* ``x`` exists.  A consumer resolving
-such a proxy blocks (in the store, with backoff polling — engine-agnostic)
-until the producer calls :meth:`set_result`.  Both the future and its
-proxies are picklable and self-contained, so they cross process/engine
-boundaries freely — the key property distinguishing them from
-``concurrent.futures`` / Dask / Ray futures (paper §VII).
+such a proxy blocks (in the store, on the connector's notification-based
+``wait_for`` — engine-agnostic) until the producer calls :meth:`set_result`.
+Both the future and its proxies are picklable and self-contained, so they
+cross process/engine boundaries freely — the key property distinguishing
+them from ``concurrent.futures`` / Dask / Ray futures (paper §VII).
 """
 from __future__ import annotations
 
 import time
 from typing import Generic, TypeVar
 
-from repro.core.connectors import wait_for_key
+from repro.core.connectors import wait_for_any
 from repro.core.proxy import Proxy
 from repro.core.store import Store, StoreFactory
 
 T = TypeVar("T")
+
+
+class _FutureError:
+    """Channel payload standing in for a result when the producer raised.
+
+    Travels through the store like any value; the consuming side
+    (``result()`` or a future-minted proxy) re-raises the original
+    exception instead of handing the wrapper to user code.
+    """
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+class _FutureResultFactory(StoreFactory):
+    """StoreFactory that unwraps producer errors on resolution."""
+
+    def __call__(self):
+        out = super().__call__()
+        if isinstance(out, _FutureError):
+            raise out.exc
+        return out
 
 
 class ProxyFuture(Generic[T]):
@@ -27,26 +49,38 @@ class ProxyFuture(Generic[T]):
         self.store = store
         self.key = key
         self.timeout = timeout
+        # Optional engine-side handle (StoreExecutor.submit_future); local
+        # only — never pickled, the channel is the source of truth.
+        self.task = None
 
     # -- producer side ---------------------------------------------------------
     def set_result(self, obj: T) -> None:
-        if self.done():
+        # One atomic put-if-absent round trip (connector-arbitrated), not a
+        # done()-then-put pair that races a concurrent setter.
+        if not self.store.put_if_absent(obj, self.key):
             raise RuntimeError(f"future {self.key!r} already set")
-        self.store.put(obj, key=self.key)
+
+    def set_exception(self, exc: BaseException) -> None:
+        """Propagate a producer-side failure through the channel."""
+        if not self.store.put_if_absent(_FutureError(exc), self.key):
+            raise RuntimeError(f"future {self.key!r} already set")
 
     # -- consumer side (explicit) ------------------------------------------------
     def done(self) -> bool:
         return self.store.exists(self.key)
 
     def result(self, timeout: float | None = None) -> T:
-        return self.store.resolve(
+        out = self.store.resolve(
             self.key, block=True, timeout=timeout or self.timeout
         )
+        if isinstance(out, _FutureError):
+            raise out.exc
+        return out
 
     # -- consumer side (implicit: the paper's contribution) ------------------------
     def proxy(self) -> Proxy[T]:
         """Mint a transparent proxy that blocks just-in-time on first use."""
-        factory = StoreFactory(
+        factory = _FutureResultFactory(
             self.key,
             self.store.name,
             self.store.connector,
@@ -74,8 +108,24 @@ def _rebuild_future(store, key, timeout):
 
 
 def wait_all(futures: list[ProxyFuture], timeout: float | None = None) -> None:
-    """Block until every future is set (barrier over the mediated channel)."""
+    """Block until every future is set (barrier over the mediated channel).
+
+    Futures are grouped by connector and each group drains through
+    ``wait_for_any`` — one multi-key notification wait per connector (a
+    single condition sleep / directory watch covers all pending keys), not
+    N sequential single-key polls.
+    """
     deadline = None if timeout is None else time.monotonic() + timeout
+    groups: dict[int, tuple] = {}
     for f in futures:
-        remaining = None if deadline is None else max(0.0, deadline - time.monotonic())
-        wait_for_key(f.store.connector, f.key, timeout=remaining if timeout else None)
+        conn = f.store.connector
+        groups.setdefault(id(conn), (conn, set()))[1].add(f.key)
+    for conn, pending in groups.values():
+        while pending:
+            remaining = (
+                None if deadline is None else max(0.0, deadline - time.monotonic())
+            )
+            ready = wait_for_any(
+                conn, list(pending), remaining if timeout is not None else None
+            )
+            pending.discard(ready)

@@ -27,11 +27,12 @@ from repro.core import framing
 from repro.core.connectors import (
     Connector,
     InMemoryConnector,
-    get_view,
+    get_payload,
     new_key,
     put_batch_payloads,
     put_payload,
-    wait_for_view,
+    put_payload_new,
+    wait_for_payload,
 )
 from repro.core.proxy import Factory, Proxy
 
@@ -228,6 +229,7 @@ class Store(Generic[T]):
         serializer: Callable[[Any], bytes] = default_serializer,
         deserializer: Callable[[bytes], Any] = default_deserializer,
         cache_size: int = 16,
+        timed_metrics: bool = True,
         register: bool = True,
     ):
         self.name = name
@@ -237,6 +239,10 @@ class Store(Generic[T]):
         self.cache_size = cache_size
         self._cache = _ResolveCache(cache_size)
         self.metrics = StoreMetrics()
+        # One-bool guard around the perf_counter pairs on put/resolve:
+        # counts/bytes are always kept (cheap adds), the clock reads are
+        # skippable fixed overhead on the tiny-object hot path.
+        self._timed = timed_metrics
         self._closed = False
         if register:
             with _REGISTRY_LOCK:
@@ -304,19 +310,23 @@ class Store(Generic[T]):
 
     def _decode(
         self,
-        view,
+        payload,
         deserializer: Callable[[bytes], Any] | None = None,
         *,
         writable: bool = False,
     ) -> Any:
         deserializer = deserializer or self.deserializer
         if deserializer is default_deserializer:
-            return framing.decode(view, writable=writable)
-        if isinstance(view, memoryview) and not getattr(
+            # framing.decode consumes both forms zero-copy: a contiguous
+            # view *or* a framed-parts tuple (in-memory pass-by-reference)
+            return framing.decode(payload, writable=writable)
+        if isinstance(payload, (tuple, list)):
+            payload = framing.join_parts(payload)
+        elif isinstance(payload, memoryview) and not getattr(
             deserializer, "accepts_buffers", False
         ):
-            view = view.tobytes()  # custom codecs get an owned copy
-        return deserializer(view)
+            payload = payload.tobytes()  # custom codecs get an owned copy
+        return deserializer(payload)
 
     def _carried_deserializer(self) -> Callable[[bytes], Any] | None:
         return None if self.deserializer is default_deserializer else self.deserializer
@@ -326,28 +336,66 @@ class Store(Generic[T]):
 
     # -- raw k/v --------------------------------------------------------------
     def put(self, obj: Any, key: str | None = None) -> str:
-        key = key or new_key()
+        # A freshly minted key can never have a cached resolve (nobody has
+        # seen it), so the invalidate — a lock acquire plus a generation
+        # bump that would kill unrelated in-flight cache fills — only runs
+        # for caller-supplied keys (potential overwrites).
+        fresh = key is None
+        if fresh:
+            key = new_key()
         parts = self._encode(obj)
-        t0 = time.perf_counter()
-        nbytes = put_payload(self.connector, key, parts)
-        self.metrics.put_time += time.perf_counter() - t0
-        self.metrics.put_count += 1
-        self.metrics.put_bytes += nbytes
-        self._cache.invalidate(key)  # overwrite must not serve a stale resolve
+        m = self.metrics
+        if self._timed:
+            t0 = time.perf_counter()
+            nbytes = put_payload(self.connector, key, parts)
+            m.put_time += time.perf_counter() - t0
+        else:
+            nbytes = put_payload(self.connector, key, parts)
+        m.put_count += 1
+        m.put_bytes += nbytes
+        if not fresh:
+            self._cache.invalidate(key)  # overwrite must not serve a stale resolve
         return key
+
+    def put_if_absent(self, obj: Any, key: str) -> bool:
+        """Atomic put-unless-exists; ``False`` when the key was already set.
+
+        One connector round trip (``put_parts_new``: dict setdefault,
+        ``link(2)``, shm exclusive create) — the single-writer arbitration
+        behind ``ProxyFuture.set_result``.
+        """
+        parts = self._encode(obj)
+        m = self.metrics
+        if self._timed:
+            t0 = time.perf_counter()
+            nbytes = put_payload_new(self.connector, key, parts)
+            if nbytes is None:
+                return False
+            m.put_time += time.perf_counter() - t0
+        else:
+            nbytes = put_payload_new(self.connector, key, parts)
+            if nbytes is None:
+                return False
+        m.put_count += 1
+        m.put_bytes += nbytes
+        self._cache.invalidate(key)  # key may have been cached before an evict
+        return True
 
     def put_batch(self, objs: Sequence[Any], *, keys: Sequence[str] | None = None) -> list[str]:
         """Amortized multi-object put (one connector round for the batch)."""
         objs = list(objs)  # a generator must not be exhausted minting keys
+        fresh = keys is None
         keys = list(keys) if keys is not None else [new_key() for _ in objs]
         items = [(k, self._encode(o)) for k, o in zip(keys, objs)]
         t0 = time.perf_counter()
         nbytes = put_batch_payloads(self.connector, items)
-        self.metrics.put_time += time.perf_counter() - t0
-        self.metrics.put_count += len(items)
-        self.metrics.put_bytes += nbytes
-        for k in keys:
-            self._cache.invalidate(k)
+        m = self.metrics
+        m.put_time += time.perf_counter() - t0
+        m.put_count += len(items)
+        m.put_bytes += nbytes
+        if not fresh:  # minted keys can't be cached anywhere yet
+            for k in keys:
+                self._cache.invalidate(k)
         return keys
 
     def resolve(
@@ -391,22 +439,29 @@ class Store(Generic[T]):
         else:
             self.metrics.cache_misses += 1
             gen = self._cache.generation
-            t0 = time.perf_counter()  # before any wait: blocking is fetch time
+            timed = self._timed
+            if timed:
+                t0 = time.perf_counter()  # before any wait: blocking is fetch time
             if block:
-                view = wait_for_view(self.connector, key, timeout=timeout)
+                payload = wait_for_payload(self.connector, key, timeout=timeout)
             else:
-                view = get_view(self.connector, key)
-                if view is None:
+                payload = get_payload(self.connector, key)
+                if payload is None:
                     if default is not _RAISE:
                         return default
                     raise KeyError(
                         f"proxy target {key!r} missing from store "
                         f"{self.name!r} (freed early? see ownership rules)"
                     )
-            obj = self._decode(view, deserializer, writable=writable)
+            obj = self._decode(payload, deserializer, writable=writable)
             self.metrics.get_count += 1
-            self.metrics.get_bytes += view.nbytes
-            self.metrics.get_time += time.perf_counter() - t0
+            self.metrics.get_bytes += (
+                framing.parts_nbytes(payload)
+                if isinstance(payload, (tuple, list))
+                else payload.nbytes
+            )
+            if timed:
+                self.metrics.get_time += time.perf_counter() - t0
             if not (evict_on_resolve or bypass):
                 self._cache.set_if((key, deserializer), obj, gen)
         if evict_on_resolve:

@@ -10,17 +10,31 @@ resolves the proxy — a dispatcher in between touches metadata only.
 Brokers provided: in-process queue (Redis-pub/sub stand-in) and append-only
 file log (Kafka stand-in, cross-process).  The Publisher/Subscriber
 protocols mirror the paper so real Kafka/Redis/ZeroMQ shims would slot in.
+
+Hot path:
+
+- an in-process publisher that implements ``send_event_obj`` receives the
+  event *dict itself* — one shared object fans out to every subscriber with
+  no pickle round trip (events are read-only by contract);
+- :class:`FileLogSubscriber` keeps a persistent handle on the topic log and
+  drains every complete frame per ``read`` into an event buffer (one
+  syscall for N events), waiting for new frames with a size watch instead
+  of a fixed-interval reopen-and-sleep loop;
+- ``StreamConsumer(prefetch=N)`` resolves bulk payloads ahead of iteration
+  on a bounded background pipeline (backpressure at N in-flight), so
+  consumer compute overlaps transport.
 """
 from __future__ import annotations
 
 import os
 import pickle
+import queue
 import threading
 import time
 from collections import deque
 from typing import Any, Callable, Iterator, Protocol, runtime_checkable
 
-from repro.core.proxy import Proxy
+from repro.core.proxy import Proxy, extract
 from repro.core.store import Store, StoreFactory, invalidate_resolve_cache
 
 _END = "__stream_end__"
@@ -38,6 +52,25 @@ class Subscriber(Protocol):
     def next_event(self, timeout: float | None = None) -> bytes: ...
 
     def close(self) -> None: ...
+
+
+def publish_event(publisher: Publisher, topic: str, event: dict) -> None:
+    """Publish an event dict via the cheapest protocol the broker speaks.
+
+    In-process brokers implementing ``send_event_obj`` get the dict itself
+    (zero serialization, one shared object for every subscriber); byte
+    brokers get a pickle.  Consumers must treat received events as
+    read-only — the same dict may be visible to other subscribers.
+    """
+    seo = getattr(publisher, "send_event_obj", None)
+    if seo is not None:
+        seo(topic, event)
+    else:
+        publisher.send_event(topic, pickle.dumps(event))
+
+
+def _load_event(raw) -> dict:
+    return raw if isinstance(raw, dict) else pickle.loads(raw)
 
 
 # ---------------------------------------------------------------------------
@@ -60,7 +93,10 @@ class _QueueBroker:
                 cls._registry[namespace] = _QueueBroker()
             return cls._registry[namespace]
 
-    def publish(self, topic: str, event: bytes) -> None:
+    def publish(self, topic: str, event) -> None:
+        # Fanout enqueues the one event object (bytes or dict) into every
+        # subscriber deque — per-subscriber copies never happen; consumers
+        # treat events as read-only.
         with self.cond:
             for q in self.subscribers.get(topic, []):
                 q.append(event)
@@ -72,7 +108,7 @@ class _QueueBroker:
             self.subscribers.setdefault(topic, []).append(q)
         return q
 
-    def pop(self, q: deque, timeout: float | None) -> bytes:
+    def pop(self, q: deque, timeout: float | None):
         deadline = None if timeout is None else time.monotonic() + timeout
         with self.cond:
             while not q:
@@ -92,6 +128,10 @@ class QueuePublisher:
     def send_event(self, topic: str, event: bytes) -> None:
         _QueueBroker.instance(self.namespace).publish(topic, event)
 
+    def send_event_obj(self, topic: str, event: dict) -> None:
+        """In-process fast path: fan the dict out unpickled (shared object)."""
+        _QueueBroker.instance(self.namespace).publish(topic, event)
+
     def close(self) -> None:
         pass
 
@@ -103,7 +143,7 @@ class QueueSubscriber:
         self._broker = _QueueBroker.instance(namespace)
         self._q = self._broker.subscribe(topic)
 
-    def next_event(self, timeout: float | None = None) -> bytes:
+    def next_event(self, timeout: float | None = None):
         return self._broker.pop(self._q, timeout)
 
     def close(self) -> None:
@@ -144,41 +184,114 @@ class FileLogPublisher:
 
 
 class FileLogSubscriber:
-    """Tails a topic log from a given offset (default: beginning)."""
+    """Tails a topic log from a given offset (default: beginning).
 
-    def __init__(self, topic: str, directory: str, poll: float = 0.002):
+    Persistent-handle batched reader: one ``read()`` drains every byte
+    appended since the last drain and parses all complete frames into an
+    event buffer — one syscall for N events instead of an open/seek/read×2
+    round per event.  Waiting for new frames is a file-size watch with
+    adaptive backoff (wake latency tracks the producer, bounded by
+    ``poll``), not a fixed 2 ms sleep.
+
+    ``offset`` is the byte offset of the next *unconsumed* event: pickling
+    the subscriber mid-stream resumes exactly after the last event returned
+    (buffered-but-unreturned frames are re-read by the clone).
+    """
+
+    def __init__(self, topic: str, directory: str, poll: float = 0.002,
+                 offset: int = 0):
         self.topic = topic
         self.directory = directory
-        self.offset = 0
+        self.offset = offset
         self.poll = poll
+        self._file = None
+        self._tail = b""  # bytes read past the last complete frame
+        self._read_pos = offset  # file position our reads have reached
+        self._events: deque = deque()  # (payload, end_offset), parsed ahead
 
     def _path(self) -> str:
         return os.path.join(self.directory, f"{self.topic}.log")
 
-    def next_event(self, timeout: float | None = None) -> bytes:
-        deadline = None if timeout is None else time.monotonic() + timeout
-        while True:
+    def _open(self) -> bool:
+        if self._file is None:
             try:
-                with open(self._path(), "rb") as f:
-                    f.seek(self.offset)
-                    header = f.read(8)
-                    if len(header) == 8:
-                        n = int.from_bytes(header, "little")
-                        payload = f.read(n)
-                        if len(payload) == n:
-                            self.offset += 8 + n
-                            return payload
+                self._file = open(self._path(), "rb")
             except FileNotFoundError:
-                pass
+                return False
+            self._file.seek(self.offset)
+            self._read_pos = self.offset
+            self._tail = b""
+        return True
+
+    # Per-drain read bound: one syscall still batches thousands of frames,
+    # but a fresh subscriber attaching to a multi-GB topic log must not
+    # materialize the whole tail in memory at once (next_event drains
+    # chunk-by-chunk on demand).
+    _DRAIN_CHUNK = 4 * 1024 * 1024
+
+    def _drain(self) -> bool:
+        """Read the next chunk of appended bytes; parse complete frames."""
+        if not self._open():
+            return bool(self._events)
+        chunk = self._file.read(self._DRAIN_CHUNK)
+        if chunk:
+            self._read_pos += len(chunk)
+            buf = self._tail + chunk if self._tail else chunk
+            off, end = 0, len(buf)
+            base = self._read_pos - end  # file offset of buf[0]
+            events = self._events
+            while end - off >= 8:
+                n = int.from_bytes(buf[off : off + 8], "little")
+                if end - off - 8 < n:
+                    break  # incomplete frame: producer append in flight
+                off += 8 + n
+                events.append((buf[off - n : off], base + off))
+            self._tail = buf[off:] if off < end else b""
+        return bool(self._events)
+
+    def _pop(self) -> bytes:
+        payload, end = self._events.popleft()
+        self.offset = end
+        return payload
+
+    def next_event(self, timeout: float | None = None) -> bytes:
+        if self._events or self._drain():
+            return self._pop()
+        deadline = None if timeout is None else time.monotonic() + timeout
+        delay = min(5e-5, self.poll)
+        path = self._path()
+        last_size = self._read_pos
+        while True:
+            # Size watch: the log only ever grows, so one fstat/stat tells
+            # whether a drain can find anything new.
+            try:
+                if self._file is not None:
+                    size = os.fstat(self._file.fileno()).st_size
+                else:
+                    size = os.stat(path).st_size
+            except FileNotFoundError:
+                size = -1
+            if size != last_size:
+                last_size = size
+                delay = min(5e-5, self.poll)  # growth: reset the backoff
+                if self._drain():
+                    return self._pop()
+                continue
             if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError("no stream event within timeout")
-            time.sleep(self.poll)
+            time.sleep(delay)
+            delay = min(delay * 2.0, self.poll)
 
     def close(self) -> None:
-        pass
+        if self._file is not None:
+            self._file.close()
+            self._file = None
 
     def __reduce__(self):
-        return (FileLogSubscriber, (self.topic, self.directory, self.poll))
+        # Carry the consumption offset: an unpickled consumer resumes after
+        # the last returned event instead of silently re-reading the topic.
+        return (FileLogSubscriber, (self.topic, self.directory, self.poll,
+                                    self.offset))
 
 
 # ---------------------------------------------------------------------------
@@ -276,13 +389,16 @@ class StreamProducer:
                 "key": key,
                 "store": store.name,
                 "connector": store.connector,
-                "metadata": metadata,
+                # snapshot: the obj fast path shares the event unpickled,
+                # so a producer mutating its metadata dict after send()
+                # must not retroactively edit published events
+                "metadata": dict(metadata),
                 "seq": seq,
                 "evict_on_resolve": self.evict_on_resolve,
             }
             if deserializer is not None:
                 event["deserializer"] = deserializer
-            self.publisher.send_event(topic, pickle.dumps(event))
+            publish_event(self.publisher, topic, event)
         self._buffers[topic] = []
 
     def flush(self) -> None:
@@ -291,15 +407,13 @@ class StreamProducer:
 
     def close_topic(self, topic: str) -> None:
         self.flush_topic(topic)
-        self.publisher.send_event(topic, pickle.dumps({_END: True, "topic": topic}))
+        publish_event(self.publisher, topic, {_END: True, "topic": topic})
 
     def close(self, *, close_topics: bool = True) -> None:
         self.flush()
         if close_topics:
             for topic in set(self._buffers) | set(self._seq):
-                self.publisher.send_event(
-                    topic, pickle.dumps({_END: True, "topic": topic})
-                )
+                publish_event(self.publisher, topic, {_END: True, "topic": topic})
         self.publisher.close()
 
     def __enter__(self):
@@ -309,11 +423,23 @@ class StreamProducer:
         self.close()
 
 
+_ITEM, _DONE, _ERR = "item", "done", "err"
+
+
 class StreamConsumer:
     """Iterates a topic, yielding lazy proxies of streamed objects.
 
     ``next()`` waits only for *metadata*; the bulk object is fetched where —
     and only if — the proxy is resolved.
+
+    ``prefetch=N`` turns on consumer-side pipelining: a background thread
+    pulls events and resolves their bulk payloads ahead of iteration, with
+    at most N resolved items in flight (the thread blocks — backpressure —
+    until the consumer catches up).  Yielded proxies arrive already
+    resolved, in event order, so per-item transport overlaps the consumer's
+    compute.  A resolution or subscriber error surfaces on the next
+    ``__next__``.  Give the consumer a ``timeout`` when prefetching from a
+    topic that may never close, so the background thread can exit.
     """
 
     def __init__(
@@ -322,17 +448,30 @@ class StreamConsumer:
         *,
         filter_: Callable[[dict], bool] | None = None,
         timeout: float | None = None,
+        prefetch: int = 0,
     ):
         self.subscriber = subscriber
         self.filter = filter_
         self.timeout = timeout
+        self.prefetch = prefetch
         self._closed = False
+        self._stop = False
+        self._ready = None
+        if prefetch:
+            self._ready = queue.Queue(maxsize=prefetch)
+            self._thread = threading.Thread(
+                target=self._prefetch_loop, daemon=True
+            )
+            self._thread.start()
 
     def _next_event(self) -> dict:
         while True:
-            event = pickle.loads(self.subscriber.next_event(timeout=self.timeout))
+            event = _load_event(self.subscriber.next_event(timeout=self.timeout))
             if event.get(_END):
-                self._closed = True
+                # prefetch mode: items may still sit in the ready queue —
+                # only the dequeue of the DONE marker closes the consumer
+                if self._ready is None:
+                    self._closed = True
                 raise StopIteration
             if self.filter is not None and not self.filter(event.get("metadata", {})):
                 # skipped events still evict their payload to avoid leaks
@@ -342,7 +481,7 @@ class StreamConsumer:
                 continue
             return event
 
-    def next_with_metadata(self) -> tuple[Proxy, dict]:
+    def _pull(self) -> tuple[Proxy, dict]:
         event = self._next_event()
         factory = StoreFactory(
             event["key"],
@@ -352,16 +491,67 @@ class StreamConsumer:
             block=True,
             deserializer=event.get("deserializer"),
         )
+        # Private copy: in-process events are one dict shared by every
+        # subscriber (and the producer), so the metadata handed to user
+        # code must be theirs to mutate.
+        meta = dict(event["metadata"])
         proxy = Proxy(
             factory,
             metadata=dict(
-                event["metadata"],
+                meta,
                 seq=event["seq"],
                 key=event["key"],
                 store=event["store"],
             ),
         )
-        return proxy, event["metadata"]
+        return proxy, meta
+
+    # -- prefetch pipeline -------------------------------------------------
+    def _prefetch_loop(self) -> None:
+        while not self._stop:
+            try:
+                proxy, meta = self._pull()
+            except StopIteration:
+                self._enqueue((_DONE, None))
+                return
+            except BaseException as e:
+                self._enqueue((_ERR, e))
+                return
+            try:
+                extract(proxy)  # resolve the bulk ahead of the consumer
+            except BaseException as e:
+                self._enqueue((_ERR, e))
+                return
+            if not self._enqueue((_ITEM, (proxy, meta))):
+                return
+
+    def _enqueue(self, item) -> bool:
+        # Bounded put with a stop check so close() can always unblock the
+        # pipeline thread (backpressure must not outlive the consumer).
+        while not self._stop:
+            try:
+                self._ready.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def next_with_metadata(self) -> tuple[Proxy, dict]:
+        if self._ready is not None:
+            kind, val = self._ready.get()
+            if kind != _ITEM:
+                # Terminal markers are sticky: the pipeline thread has
+                # exited, so put the marker back — a retry after
+                # exhaustion/error must re-raise, never block on an empty
+                # queue forever.  (The marker is always the last entry, so
+                # the queue has room.)
+                self._ready.put((kind, val))
+                if kind == _DONE:
+                    self._closed = True
+                    raise StopIteration
+                raise val
+            return val
+        return self._pull()
 
     def __iter__(self) -> Iterator[Proxy]:
         return self
@@ -373,6 +563,7 @@ class StreamConsumer:
         return proxy
 
     def close(self) -> None:
+        self._stop = True
         self.subscriber.close()
 
     def __enter__(self):

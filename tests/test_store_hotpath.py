@@ -194,6 +194,10 @@ class _CountingConnector(InMemoryConnector):
         self.gets += 1
         return super().get_view(key)
 
+    def get_parts(self, key):
+        self.gets += 1
+        return super().get_parts(key)
+
     def get(self, key):
         self.gets += 1
         return super().get(key)

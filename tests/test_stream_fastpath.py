@@ -1,0 +1,779 @@
+"""Event-driven streaming & futures fast-path tests (PR 3).
+
+Covers the notification-based ``wait_for``/``wait_for_any`` connector
+protocol (in-memory condition variables, file directory watches, the
+backoff-poll fallback, cross-process wake-ups), the atomic
+``put_if_absent`` future set path, the batched persistent-handle
+``FileLogSubscriber`` (offset pickling included), consumer prefetch
+ordering/backpressure, ``StoreExecutor.submit_future`` pipelining, and the
+in-memory zero-copy parts channel.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FileConnector,
+    FileLogPublisher,
+    FileLogSubscriber,
+    InMemoryConnector,
+    QueuePublisher,
+    QueueSubscriber,
+    SharedMemoryConnector,
+    Store,
+    StoreExecutor,
+    StreamConsumer,
+    StreamProducer,
+    extract,
+    framing,
+    is_resolved,
+    wait_all,
+    wait_for,
+    wait_for_any,
+)
+from repro.core.connectors import new_key, put_payload_new
+from repro.core.store import _STORE_REGISTRY
+
+
+@pytest.fixture()
+def store():
+    with Store(f"sfp-{id(object())}", InMemoryConnector()) as s:
+        yield s
+
+
+class _BytesOnlyConnector:
+    """Minimal protocol connector: exercises every duck-typed fallback."""
+
+    def __init__(self):
+        self.d = {}
+
+    def put(self, key, data):
+        self.d[key] = bytes(data)
+
+    def get(self, key):
+        return self.d.get(key)
+
+    def exists(self, key):
+        return key in self.d
+
+    def evict(self, key):
+        self.d.pop(key, None)
+
+    def close(self):
+        pass
+
+
+# ---------------------------------------------------------------------------
+# wait_for / wait_for_any
+# ---------------------------------------------------------------------------
+
+
+class TestWaitFor:
+    @pytest.mark.parametrize("conn_factory", [
+        InMemoryConnector,
+        _BytesOnlyConnector,
+    ])
+    def test_wake_on_put(self, conn_factory):
+        conn = conn_factory()
+        key = new_key()
+        woke = threading.Event()
+
+        def waiter():
+            wait_for(conn, key, timeout=5)
+            woke.set()
+
+        th = threading.Thread(target=waiter)
+        th.start()
+        time.sleep(0.02)
+        assert not woke.is_set()
+        conn.put(key, b"v")
+        th.join(timeout=5)
+        assert woke.is_set()
+
+    def test_already_present_returns_immediately(self):
+        conn = InMemoryConnector()
+        conn.put("k", b"v")
+        t0 = time.perf_counter()
+        wait_for(conn, "k", timeout=5)
+        assert time.perf_counter() - t0 < 0.05
+
+    @pytest.mark.parametrize("conn_factory", [
+        InMemoryConnector,
+        _BytesOnlyConnector,
+    ])
+    def test_timeout(self, conn_factory):
+        conn = conn_factory()
+        t0 = time.perf_counter()
+        with pytest.raises(TimeoutError):
+            wait_for(conn, new_key(), timeout=0.05)
+        # timed out close to the deadline, not after a huge backoff sleep
+        assert time.perf_counter() - t0 < 1.0
+
+    def test_file_connector_wake(self, tmp_path):
+        conn = FileConnector(str(tmp_path / "ch"))
+        key = new_key()
+        got = {}
+
+        def waiter():
+            wait_for(conn, key, timeout=5)
+            got["woke"] = time.perf_counter()
+
+        th = threading.Thread(target=waiter)
+        th.start()
+        time.sleep(0.02)
+        conn.put(key, b"payload")
+        t_set = time.perf_counter()
+        th.join(timeout=5)
+        assert "woke" in got
+        # directory watch wakes far faster than the old 10 ms poll ceiling
+        assert got["woke"] - t_set < 0.3
+
+    def test_file_connector_timeout(self, tmp_path):
+        conn = FileConnector(str(tmp_path / "ch"))
+        with pytest.raises(TimeoutError):
+            wait_for(conn, new_key(), timeout=0.05)
+
+    def test_file_connector_timeout_under_churn(self, tmp_path):
+        """Unrelated-key churn must not starve the deadline (or spin)."""
+        conn = FileConnector(str(tmp_path / "ch"))
+        stop = threading.Event()
+
+        def churn():
+            i = 0
+            while not stop.is_set():
+                conn.put(f"other-{i % 4}", b"x")
+                i += 1
+                time.sleep(0.001)
+
+        th = threading.Thread(target=churn)
+        th.start()
+        try:
+            t0 = time.perf_counter()
+            with pytest.raises(TimeoutError):
+                wait_for(conn, new_key(), timeout=0.2)
+            assert time.perf_counter() - t0 < 2.0
+        finally:
+            stop.set()
+            th.join()
+
+    def test_shm_unpublished_segment_is_invisible(self):
+        """Commit protocol: a created-but-unwritten segment (zero header)
+        must look absent to get/get_view/exists and the segment watch."""
+        from multiprocessing import shared_memory
+
+        conn = SharedMemoryConnector()
+        key = new_key()
+        seg = shared_memory.SharedMemory(
+            name=conn._name(key), create=True, size=64
+        )
+        try:  # header is zero-filled: segment exists but is unpublished
+            assert conn.get(key) is None
+            assert conn.get_view(key) is None
+            assert not conn.exists(key)
+            assert not conn._seg_ready(key)
+            with pytest.raises(TimeoutError):
+                wait_for(conn, key, timeout=0.05)
+        finally:
+            seg.close()
+            seg.unlink()
+
+    def test_shm_failed_exclusive_put_leaves_key_absent(self):
+        """A put_parts_new that dies mid-body must not wedge the key
+        (half-written O_EXCL segment: retries see 'exists', readers see
+        'absent', forever)."""
+        conn = SharedMemoryConnector()
+        key = new_key()
+
+        class ExplodingPart:  # sized, but not bytes-like: body write raises
+            def __len__(self):
+                return 8
+
+        with pytest.raises(TypeError):
+            conn.put_parts_new(key, [b"ok", ExplodingPart()])
+        assert not conn.exists(key)
+        assert conn.put_parts_new(key, (b"retry",)) == 5  # key recovered
+        assert conn.get(key) == b"retry"
+        conn.evict(key)
+
+    def test_shm_roundtrip_after_commit_protocol(self):
+        conn = SharedMemoryConnector()
+        key = new_key()
+        conn.put(key, b"hello")
+        assert conn.exists(key)
+        assert conn.get(key) == b"hello"
+        assert bytes(conn.get_view(key)) == b"hello"
+        assert conn.put_parts_new(key, (b"x",)) is None  # still write-once
+        conn.evict(key)
+
+    def test_shm_connector_wake(self):
+        conn = SharedMemoryConnector()
+        key = new_key()
+        woke = threading.Event()
+
+        def waiter():
+            wait_for(conn, key, timeout=5)
+            woke.set()
+
+        th = threading.Thread(target=waiter)
+        th.start()
+        time.sleep(0.02)
+        conn.put(key, b"x")
+        th.join(timeout=5)
+        assert woke.is_set()
+        conn.evict(key)
+
+
+class TestWaitForAny:
+    @pytest.mark.parametrize("conn_factory", [
+        InMemoryConnector,
+        _BytesOnlyConnector,
+    ])
+    def test_returns_ready_key(self, conn_factory):
+        conn = conn_factory()
+        keys = [new_key() for _ in range(4)]
+        conn.put(keys[2], b"v")
+        assert wait_for_any(conn, keys, timeout=1) == keys[2]
+
+    def test_wakes_on_any_later_put(self):
+        conn = InMemoryConnector()
+        keys = [new_key() for _ in range(3)]
+        result = {}
+
+        def waiter():
+            result["key"] = wait_for_any(conn, keys, timeout=5)
+
+        th = threading.Thread(target=waiter)
+        th.start()
+        time.sleep(0.02)
+        conn.put(keys[1], b"v")
+        th.join(timeout=5)
+        assert result["key"] == keys[1]
+
+    @pytest.mark.parametrize("conn_factory", [
+        InMemoryConnector,
+        _BytesOnlyConnector,
+    ])
+    def test_timeout_when_none_ready(self, conn_factory):
+        conn = conn_factory()
+        t0 = time.perf_counter()
+        with pytest.raises(TimeoutError):
+            wait_for_any(conn, [new_key(), new_key()], timeout=0.05)
+        assert time.perf_counter() - t0 < 1.0
+
+    def test_timeout_zero_with_ready_key_returns(self):
+        conn = InMemoryConnector()
+        k = new_key()
+        conn.put(k, b"v")
+        assert wait_for_any(conn, [new_key(), k], timeout=0) == k
+
+    def test_empty_keys_raises(self):
+        with pytest.raises(ValueError):
+            wait_for_any(InMemoryConnector(), [], timeout=1)
+
+    def test_file_connector_wait_any(self, tmp_path):
+        conn = FileConnector(str(tmp_path / "ch"))
+        keys = [new_key() for _ in range(3)]
+        result = {}
+
+        def waiter():
+            result["key"] = wait_for_any(conn, keys, timeout=5)
+
+        th = threading.Thread(target=waiter)
+        th.start()
+        time.sleep(0.02)
+        conn.put(keys[0], b"v")
+        th.join(timeout=5)
+        assert result["key"] == keys[0]
+
+
+_XP_PRODUCER = """
+import sys, time
+from repro.core import FileConnector
+
+directory, key = sys.argv[1], sys.argv[2]
+time.sleep(0.2)
+FileConnector(directory).put(key, b"from-subprocess")
+"""
+
+
+class TestCrossProcessWait:
+    def test_subprocess_producer_wakes_parent(self, tmp_path):
+        directory = str(tmp_path / "ch")
+        conn = FileConnector(directory)
+        key = new_key()
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _XP_PRODUCER, directory, key],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        try:
+            wait_for(conn, key, timeout=30)
+            assert conn.get(key) == b"from-subprocess"
+        finally:
+            out, err = proc.communicate(timeout=30)
+        assert proc.returncode == 0, err.decode()
+
+    def test_blocking_resolve_across_processes(self, tmp_path):
+        directory = str(tmp_path / "ch2")
+        key = new_key()
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        script = """
+import sys, time
+from repro.core import FileConnector, Store
+
+directory, key = sys.argv[1], sys.argv[2]
+time.sleep(0.2)
+Store("xp-wait-res", FileConnector(directory)).put({"n": 7}, key=key)
+"""
+        proc = subprocess.Popen(
+            [sys.executable, "-c", script, directory, key],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        try:
+            with Store("xp-wait-par", FileConnector(directory)) as s:
+                assert s.resolve(key, block=True, timeout=30) == {"n": 7}
+        finally:
+            out, err = proc.communicate(timeout=30)
+        assert proc.returncode == 0, err.decode()
+        _STORE_REGISTRY.pop("xp-wait-res", None)
+
+
+# ---------------------------------------------------------------------------
+# Atomic put-if-absent / future set_result
+# ---------------------------------------------------------------------------
+
+
+class TestPutIfAbsent:
+    @pytest.mark.parametrize("make", [
+        lambda tmp: InMemoryConnector(),
+        lambda tmp: FileConnector(str(tmp / "pia")),
+        lambda tmp: SharedMemoryConnector(),
+        lambda tmp: _BytesOnlyConnector(),
+    ])
+    def test_first_wins(self, tmp_path, make):
+        conn = make(tmp_path)
+        key = new_key()
+        assert put_payload_new(conn, key, (b"first",)) == 5
+        assert put_payload_new(conn, key, (b"second",)) is None
+        assert bytes(conn.get(key)) == b"first"
+        conn.evict(key)
+
+    def test_interned_empty_payload_single_winner(self):
+        """Regression: b"" is a singleton — identity-based setdefault
+        detection must still let exactly one setter win."""
+        conn = InMemoryConnector()
+        key = new_key()
+        assert conn.put_new(key, b"") is True
+        assert conn.put_new(key, b"") is False
+        assert conn.get(key) == b""
+
+    def test_store_level(self, store):
+        assert store.put_if_absent([1], "k")
+        assert not store.put_if_absent([2], "k")
+        assert store.get("k") == [1]
+
+    def test_double_set_result_raises_and_preserves(self, store):
+        f = store.future()
+        f.set_result("winner")
+        with pytest.raises(RuntimeError):
+            f.set_result("loser")
+        assert f.result() == "winner"
+
+    def test_racing_setters_exactly_one_wins(self, store):
+        f = store.future()
+        errors = []
+        barrier = threading.Barrier(4)
+
+        def setter(i):
+            barrier.wait()
+            try:
+                f.set_result(i)
+            except RuntimeError as e:
+                errors.append(e)
+
+        threads = [threading.Thread(target=setter, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(errors) == 3  # exactly one set succeeded
+        assert f.result() in range(4)
+
+    def test_set_exception_propagates(self, store):
+        f = store.future()
+        f.set_exception(ValueError("boom"))
+        with pytest.raises(ValueError, match="boom"):
+            f.result()
+        with pytest.raises(ValueError, match="boom"):
+            extract(f.proxy())
+
+
+class TestWaitAll:
+    def test_multi_key_single_wait(self, store):
+        fs = [store.future() for _ in range(5)]
+
+        def setter():
+            for i, f in enumerate(reversed(fs)):  # out of order on purpose
+                time.sleep(0.01)
+                f.set_result(i)
+
+        th = threading.Thread(target=setter)
+        th.start()
+        wait_all(fs, timeout=5)
+        assert all(f.done() for f in fs)
+        th.join()
+
+    def test_timeout(self, store):
+        fs = [store.future() for _ in range(2)]
+        fs[0].set_result(1)
+        with pytest.raises(TimeoutError):
+            wait_all(fs, timeout=0.05)
+
+
+# ---------------------------------------------------------------------------
+# FileLogSubscriber: batched drain + offset pickling
+# ---------------------------------------------------------------------------
+
+
+class TestFileLogSubscriber:
+    def test_batched_drain_many_events(self, tmp_path):
+        pub = FileLogPublisher(str(tmp_path))
+        events = [f"e{i}".encode() for i in range(200)]
+        for e in events:
+            pub.send_event("t", e)
+        sub = FileLogSubscriber("t", str(tmp_path))
+        got = [sub.next_event(timeout=5) for _ in range(200)]
+        assert got == events
+        sub.close()
+
+    def test_waits_for_appends(self, tmp_path):
+        pub = FileLogPublisher(str(tmp_path))
+        sub = FileLogSubscriber("t", str(tmp_path))
+
+        def later():
+            time.sleep(0.05)
+            pub.send_event("t", b"late")
+
+        th = threading.Thread(target=later)
+        th.start()
+        assert sub.next_event(timeout=5) == b"late"
+        th.join()
+        sub.close()
+
+    def test_partial_frame_then_completion(self, tmp_path):
+        path = os.path.join(str(tmp_path), "t.log")
+        body = b"x" * 32
+        with open(path, "wb") as f:  # half a frame: header + truncated body
+            f.write(len(body).to_bytes(8, "little") + body[:10])
+        sub = FileLogSubscriber("t", str(tmp_path))
+        with pytest.raises(TimeoutError):
+            sub.next_event(timeout=0.05)
+        with open(path, "ab") as f:
+            f.write(body[10:])
+        assert sub.next_event(timeout=5) == body
+        sub.close()
+
+    def test_reduce_carries_offset(self, tmp_path):
+        """Regression: an unpickled consumer must not re-read the topic."""
+        pub = FileLogPublisher(str(tmp_path))
+        for i in range(4):
+            pub.send_event("t", f"e{i}".encode())
+        sub = FileLogSubscriber("t", str(tmp_path))
+        assert sub.next_event(timeout=5) == b"e0"
+        assert sub.next_event(timeout=5) == b"e1"
+        clone = pickle.loads(pickle.dumps(sub))
+        assert clone.offset == sub.offset
+        assert clone.next_event(timeout=5) == b"e2"  # resumes, no re-read
+        assert sub.next_event(timeout=5) == b"e2"  # original unaffected
+        sub.close()
+        clone.close()
+
+    def test_offset_excludes_buffered_unreturned(self, tmp_path):
+        """Pickle mid-buffer: frames drained but not returned are re-read."""
+        pub = FileLogPublisher(str(tmp_path))
+        for i in range(3):
+            pub.send_event("t", f"e{i}".encode())
+        sub = FileLogSubscriber("t", str(tmp_path))
+        assert sub.next_event(timeout=5) == b"e0"  # drains all 3, returns 1
+        clone = pickle.loads(pickle.dumps(sub))
+        assert clone.next_event(timeout=5) == b"e1"
+        assert clone.next_event(timeout=5) == b"e2"
+        sub.close()
+        clone.close()
+
+
+# ---------------------------------------------------------------------------
+# Shared-event fanout (in-process broker)
+# ---------------------------------------------------------------------------
+
+
+class TestSharedEventFanout:
+    def test_subscribers_share_one_event_object(self, store):
+        ns = f"fan-{id(store)}"
+        subs = [QueueSubscriber("t", ns) for _ in range(3)]
+        prod = StreamProducer(QueuePublisher(ns), {"t": store},
+                              evict_on_resolve=False)
+        prod.send("t", 42)
+        prod.flush()
+        raws = [s.next_event(timeout=5) for s in subs]
+        assert all(isinstance(r, dict) for r in raws)  # never pickled
+        assert raws[0] is raws[1] is raws[2]  # one shared object
+
+    def test_consumers_resolve_from_shared_events(self, store):
+        ns = f"fan2-{id(store)}"
+        subs = [QueueSubscriber("t", ns) for _ in range(2)]
+        prod = StreamProducer(QueuePublisher(ns), {"t": store},
+                              evict_on_resolve=False)
+        prod.send("t", np.arange(8))
+        prod.flush()
+        for sub in subs:
+            p, _ = StreamConsumer(sub, timeout=5).next_with_metadata()
+            np.testing.assert_array_equal(extract(p), np.arange(8))
+
+
+# ---------------------------------------------------------------------------
+# StreamConsumer prefetch
+# ---------------------------------------------------------------------------
+
+
+class TestPrefetch:
+    def test_order_preserved_and_items_preresolved(self, store):
+        ns = f"pf-{id(store)}"
+        sub = QueueSubscriber("t", ns)
+        with StreamProducer(QueuePublisher(ns), {"t": store}) as prod:
+            for i in range(20):
+                prod.send("t", {"i": i})
+            prod.close_topic("t")
+            got = []
+            with StreamConsumer(sub, timeout=5, prefetch=4) as cons:
+                time.sleep(0.05)  # let the pipeline run ahead
+                for p in cons:
+                    assert is_resolved(p)  # resolved before the consumer saw it
+                    got.append(extract(p)["i"])
+        assert got == list(range(20))
+
+    def test_backpressure_bounds_inflight(self, store):
+        """A slow consumer must cap resolutions at prefetch + 1 in flight."""
+        resolved = []
+        orig = store.resolve
+
+        def counting_resolve(key, **kw):
+            out = orig(key, **kw)
+            resolved.append(key)
+            return out
+
+        store.resolve = counting_resolve
+        ns = f"bp-{id(store)}"
+        sub = QueueSubscriber("t", ns)
+        prod = StreamProducer(QueuePublisher(ns), {"t": store},
+                              evict_on_resolve=False)
+        for i in range(16):
+            prod.send("t", i)
+        prod.close_topic("t")
+        cons = StreamConsumer(sub, timeout=5, prefetch=3)
+        time.sleep(0.3)  # consumer not iterating: pipeline must stall
+        # ≤ N queued + 1 being held by the blocked _enqueue
+        assert len(resolved) <= 4
+        got = [extract(p) for p in cons]
+        assert got == list(range(16))
+        assert len(resolved) == 16
+        cons.close()
+
+    def test_prefetch_with_filter_and_eviction(self, store):
+        ns = f"pff-{id(store)}"
+        sub = QueueSubscriber("t", ns)
+        prod = StreamProducer(QueuePublisher(ns), {"t": store},
+                              evict_on_resolve=True)
+        for i in range(8):
+            prod.send("t", i, metadata={"i": i})
+        prod.close_topic("t")
+        cons = StreamConsumer(sub, timeout=5, prefetch=2,
+                              filter_=lambda m: m["i"] % 2 == 0)
+        assert [extract(p) for p in cons] == [0, 2, 4, 6]
+
+    def test_prefetch_error_surfaces(self, store):
+        ns = f"pfe-{id(store)}"
+        sub = QueueSubscriber("t", ns)
+        cons = StreamConsumer(sub, timeout=0.1, prefetch=2)
+        with pytest.raises(TimeoutError):
+            next(iter(cons))  # no producer: subscriber timeout propagates
+        cons.close()
+
+    def test_retry_after_error_reraises_not_hangs(self, store):
+        """Terminal pipeline states are sticky: retries must not block."""
+        ns = f"pfr-{id(store)}"
+        sub = QueueSubscriber("t", ns)
+        cons = StreamConsumer(sub, timeout=0.1, prefetch=2)
+        for _ in range(3):  # every retry re-raises promptly
+            with pytest.raises(TimeoutError):
+                cons.next_with_metadata()
+        cons.close()
+
+    def test_retry_after_exhaustion_stops_not_hangs(self, store):
+        ns = f"pfx-{id(store)}"
+        sub = QueueSubscriber("t", ns)
+        prod = StreamProducer(QueuePublisher(ns), {"t": store})
+        prod.send("t", 1)
+        prod.close_topic("t")
+        cons = StreamConsumer(sub, timeout=5, prefetch=2)
+        assert [extract(p) for p in cons] == [1]
+        for _ in range(2):
+            with pytest.raises(StopIteration):
+                cons.next_with_metadata()
+        cons.close()
+
+    def test_metadata_dict_is_private_copy(self, store):
+        """In-process shared events: one consumer's mutation must not leak."""
+        ns = f"pfm-{id(store)}"
+        subs = [QueueSubscriber("t", ns) for _ in range(2)]
+        prod = StreamProducer(QueuePublisher(ns), {"t": store},
+                              evict_on_resolve=False)
+        src_meta = {"tag": "orig"}
+        prod.send("t", 1, metadata=src_meta)
+        prod.flush()
+        _, meta_a = StreamConsumer(subs[0], timeout=5).next_with_metadata()
+        meta_a["tag"] = "mutated"
+        _, meta_b = StreamConsumer(subs[1], timeout=5).next_with_metadata()
+        assert meta_b["tag"] == "orig"
+        assert src_meta["tag"] == "orig"  # producer's dict untouched too
+
+
+# ---------------------------------------------------------------------------
+# StoreExecutor.submit_future
+# ---------------------------------------------------------------------------
+
+
+class TestSubmitFuture:
+    def test_returns_future_immediately(self, store):
+        from concurrent.futures import ThreadPoolExecutor
+
+        gate = threading.Event()
+
+        def slow():
+            gate.wait(5)
+            return 21
+
+        with StoreExecutor(ThreadPoolExecutor(2), store) as ex:
+            fut = gate_fut = ex.submit_future(slow)
+            assert not fut.done()  # returned before the task ran
+            gate.set()
+            assert fut.result(timeout=5) == 21
+            assert gate_fut.task.done()
+
+    def test_chained_pipeline_overlaps(self, store):
+        from concurrent.futures import ThreadPoolExecutor
+
+        def stage(x):
+            return extract(x) + 1 if is_proxy(x) else x + 1
+
+        def is_proxy(x):
+            from repro.core import Proxy
+
+            return isinstance(x, Proxy)
+
+        with StoreExecutor(ThreadPoolExecutor(4), store) as ex:
+            f1 = ex.submit_future(stage, 0)
+            f2 = ex.submit_future(stage, f1.proxy())  # submitted before f1 done
+            f3 = ex.submit_future(stage, f2.proxy())
+            assert f3.result(timeout=5) == 3
+
+    def test_task_exception_reaches_consumer(self, store):
+        from concurrent.futures import ThreadPoolExecutor
+
+        def boom():
+            raise KeyError("kaput")
+
+        with StoreExecutor(ThreadPoolExecutor(1), store) as ex:
+            fut = ex.submit_future(boom)
+            with pytest.raises(KeyError, match="kaput"):
+                fut.result(timeout=5)
+
+    def test_unpicklable_result_releases_consumer(self, store):
+        """A set_result failure must still publish an error payload —
+        consumers blocked on the future can only be woken via the store."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        with StoreExecutor(ThreadPoolExecutor(1), store) as ex:
+            fut = ex.submit_future(lambda: threading.Lock())  # unpicklable
+            with pytest.raises(Exception):
+                fut.result(timeout=5)  # releases promptly, no hang
+
+    def test_unpicklable_exception_releases_consumer(self, store):
+        from concurrent.futures import ThreadPoolExecutor
+
+        class EvilError(Exception):
+            def __reduce__(self):
+                raise TypeError("not today")
+
+        def boom():
+            raise EvilError()
+
+        with StoreExecutor(ThreadPoolExecutor(1), store) as ex:
+            fut = ex.submit_future(boom)
+            with pytest.raises(RuntimeError, match="unpicklable"):
+                fut.result(timeout=5)
+
+    def test_future_not_pickled_with_task(self, store):
+        from concurrent.futures import ThreadPoolExecutor
+
+        with StoreExecutor(ThreadPoolExecutor(1), store) as ex:
+            fut = ex.submit_future(lambda: "v")
+            fut.result(timeout=5)
+            clone = pickle.loads(pickle.dumps(fut))
+            assert clone.task is None
+            assert clone.result() == "v"
+
+
+# ---------------------------------------------------------------------------
+# In-memory zero-copy parts channel
+# ---------------------------------------------------------------------------
+
+
+class TestInMemoryZeroCopyParts:
+    def test_resolve_aliases_producer_buffer(self, store):
+        src = np.arange(1024, dtype=np.int64)
+        key = store.put(src)
+        out = store.resolve(key, fresh=True)
+        assert not out.flags.writeable  # read-only channel alias
+        assert np.shares_memory(out, src)  # pass-by-reference, no copy
+
+    def test_get_joins_to_exact_bytes(self, store):
+        src = np.arange(16, dtype=np.int64)
+        key = store.put(src)
+        data = store.connector.get(key)
+        assert isinstance(data, bytes)
+        np.testing.assert_array_equal(framing.decode(data), src)
+
+    def test_get_view_over_parts_entry(self, store):
+        key = store.put(np.arange(16))
+        view = store.connector.get_view(key)
+        assert isinstance(view, memoryview)
+        np.testing.assert_array_equal(framing.decode(view), np.arange(16))
+
+    def test_plain_put_keeps_snapshot_semantics(self, store):
+        src = np.arange(8, dtype=np.int64)
+        store.connector.put("snap", framing.join_parts(framing.encode(src)))
+        src[0] = 99
+        out = framing.decode(store.connector.get("snap"))
+        assert out[0] == 0  # bytes put is a snapshot
+
+    def test_decode_parts_writable_copies(self, store):
+        src = np.arange(32, dtype=np.int64)
+        key = store.put(src)
+        out = store.resolve(key, writable=True)
+        assert out.flags.writeable
+        assert not np.shares_memory(out, src)
+        out[0] = -1
+        assert src[0] == 0
