@@ -11,7 +11,13 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 echo "== tier-1: pytest =="
-python -m pytest -x -q
+# Subprocess/chaos tests (@pytest.mark.multiproc) run under a per-test
+# SIGALRM watchdog (tests/conftest.py): a wedged child fails its test fast
+# instead of hanging the whole gate.  The env var is a hard CAP over every
+# multiproc test's budget (including per-test overrides); 300 s bounds the
+# gate's worst case while leaving the chaos suite slack on a loaded box.
+REPRO_MULTIPROC_TIMEOUT="${REPRO_MULTIPROC_TIMEOUT:-300}" \
+    python -m pytest -x -q
 
 if [[ "${1:-}" != "--fast" ]]; then
     echo

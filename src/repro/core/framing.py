@@ -93,7 +93,10 @@ def encode(obj: Any) -> list:
                 struct.pack(f"<{obj.ndim}Q", *obj.shape),
             )
         )
-        return [header, memoryview(obj).cast("B")]
+        # cast("B") rejects views with a 0 in shape/strides; a zero-size
+        # array's payload is simply empty
+        buf = memoryview(obj).cast("B") if obj.size else memoryview(b"")
+        return [header, buf]
 
     bufs: list[memoryview] = []
 

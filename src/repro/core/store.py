@@ -34,6 +34,10 @@ from repro.core.connectors import (
     put_payload_new,
     wait_for_payload,
 )
+from repro.core.connectors import (
+    wait_for as connectors_wait_for,
+    wait_for_any as connectors_wait_for_any,
+)
 from repro.core.proxy import Factory, Proxy
 
 T = TypeVar("T")
@@ -477,6 +481,14 @@ class Store(Generic[T]):
     def exists(self, key: str) -> bool:
         return self.connector.exists(key)
 
+    def wait_for(self, key: str, timeout: float | None = None) -> None:
+        """Block until ``key`` exists (connector-native notification wait)."""
+        connectors_wait_for(self.connector, key, timeout)
+
+    def wait_for_any(self, keys: Sequence[str], timeout: float | None = None) -> str:
+        """Block until some key exists; returns the first ready one."""
+        return connectors_wait_for_any(self.connector, keys, timeout)
+
     def evict(self, key: str) -> None:
         self.connector.evict(key)
         self._cache.invalidate(key)
@@ -506,13 +518,16 @@ class Store(Generic[T]):
             lifetime.add(self, key)
         return p
 
-    def proxy_from_key(self, key: str, *, block: bool = False) -> Proxy[T]:
+    def proxy_from_key(
+        self, key: str, *, block: bool = False, evict_on_resolve: bool = False
+    ) -> Proxy[T]:
         """Build a proxy for an object already (or eventually) in the channel."""
         factory = StoreFactory(
             key,
             self.name,
             self.connector,
             block=block,
+            evict_on_resolve=evict_on_resolve,
             deserializer=self._carried_deserializer(),
             serializer=self._carried_serializer(),
         )

@@ -13,7 +13,10 @@ function actually consumes the tensors.
 """
 from __future__ import annotations
 
+import queue
 import threading
+import time
+from dataclasses import dataclass, field
 from typing import Callable, Iterator
 
 import numpy as np
@@ -27,6 +30,7 @@ from repro.core.streaming import (
     StreamConsumer,
     StreamProducer,
 )
+from repro.dist.fault import StragglerPolicy
 from repro.models.api import synth_batch
 
 
@@ -116,6 +120,252 @@ class StreamingDataLoader:
 
     def stop(self):
         self._stop.set()
+        self._sem.release()
+
+    def metrics(self) -> dict:
+        return self.store.metrics.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# Shard dispatch with redispatch (the multi-host fault path's data plane)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Assignment:
+    """One in-flight shard: who has it, since when, how many issues."""
+
+    step: int
+    worker: str
+    issued: float
+    attempts: int = 1
+    history: list[str] = field(default_factory=list)
+
+
+class DispatchingDataLoader:
+    """Shard-dispatching loader: shards are *assigned* to named workers and
+    re-issued when a worker straggles or dies.
+
+    This is the PR 1 ``StragglerPolicy`` acted on instead of recorded (the
+    ROADMAP's "redispatch wiring into the data loader"):
+
+    - a dispatcher assigns shard ``step`` to a live worker (round-robin,
+      liveness from an optional lease ``monitor``);
+    - workers publish each shard with an atomic ``Store.put_if_absent``
+      keyed by step, so a re-issued shard computed twice commits exactly
+      once (the connector arbitrates, same protocol as ``ProxyFuture.
+      set_result``);
+    - a supervisor grades every in-flight shard's elapsed time with
+      ``StragglerPolicy.grade`` (non-recording — partial durations must not
+      poison the trailing median) and re-issues on a ``"redispatch"`` grade
+      or a dead worker, preferring a *different* live worker;
+    - the consumer iterates steps in order, blocking on the connector's
+      notification-based ``wait_for``, and yields one-shot proxies
+      (``evict_on_resolve`` — a consumed shard's payload is reclaimed).
+
+    Workers here are threads with an injectable ``worker_fn`` (tests hang
+    one to force a redispatch); on a real deployment each worker loop runs
+    in its own process against the same connector — the commit protocol is
+    already cross-process.
+    """
+
+    def __init__(
+        self,
+        batch_factory: Callable[[int], dict],
+        *,
+        num_steps: int,
+        store: Store | None = None,
+        workers: int | list[str] = 2,
+        policy: StragglerPolicy | None = None,
+        monitor=None,
+        prefetch: int = 2,
+        shard_timeout: float = 120.0,
+        worker_fn: Callable[[str, int], dict] | None = None,
+        supervise_every: float = 0.02,
+    ):
+        self.batch_factory = batch_factory
+        self.num_steps = num_steps
+        self.store = store or Store(f"dispatch-{id(self)}")
+        self.policy = policy or StragglerPolicy()
+        self.monitor = monitor
+        self.prefetch = prefetch
+        self.shard_timeout = shard_timeout
+        self.worker_fn = worker_fn or (lambda w, step: self.batch_factory(step))
+        self.supervise_every = supervise_every
+        self.workers = (
+            [f"dw{i}" for i in range(workers)]
+            if isinstance(workers, int)
+            else list(workers)
+        )
+        self.redispatches: list[dict] = []  # (step, from, to, reason) records
+        self.errors: list[dict] = []  # worker-side exceptions (step, worker, error)
+        self._ns = f"shard-{id(self)}"
+        self._queues: dict[str, queue.Queue] = {w: queue.Queue() for w in self.workers}
+        self._inflight: dict[int, _Assignment] = {}
+        self._done: set[int] = set()  # worker-side commit acknowledgements
+        self._failed: set[int] = set()  # steps whose current issue errored
+        self._lock = threading.Lock()
+        self._sem = threading.Semaphore(prefetch)
+        self._stop = threading.Event()
+        self._rr = 0
+        self._started = False
+        self._threads: list[threading.Thread] = []
+
+    def _shard_key(self, step: int) -> str:
+        return f"{self._ns}-s{step}"
+
+    # -- membership -------------------------------------------------------------
+    def _live_workers(self) -> list[str]:
+        if self.monitor is None:
+            return self.workers
+        live_fn = getattr(self.monitor, "live_workers", None) or getattr(
+            self.monitor, "live"
+        )
+        live = set(live_fn())
+        return [w for w in self.workers if w in live]
+
+    def _pick_worker(
+        self, *, exclude: str | None = None, live: list[str] | None = None
+    ) -> str | None:
+        live = self._live_workers() if live is None else live
+        if not live:
+            return None
+        pool = [w for w in live if w != exclude] or live
+        self._rr += 1
+        return pool[self._rr % len(pool)]
+
+    # -- worker / dispatcher / supervisor loops -----------------------------------
+    def _worker_loop(self, name: str):
+        q = self._queues[name]
+        while not self._stop.is_set():
+            step = q.get()
+            if step is None:
+                return
+            try:
+                batch = self.worker_fn(name, step)
+                with self._lock:
+                    if step in self._done:
+                        # a redispatched twin already committed AND the
+                        # consumer may have evicted the key — publishing now
+                        # would leak an orphaned payload nobody reads
+                        continue
+                # exactly-once commit: a redispatched shard may be computed
+                # by two workers; the connector lets exactly one win
+                self.store.put_if_absent(batch, self._shard_key(step))
+                with self._lock:
+                    self._done.add(step)
+            except Exception as e:  # noqa: BLE001 - the worker must survive
+                # a dead worker thread would strand every step queued to it;
+                # record the error and flag the step for immediate re-issue
+                with self._lock:
+                    self._failed.add(step)
+                self.errors.append(
+                    {"step": step, "worker": name, "error": repr(e)}
+                )
+
+    def _dispatch_loop(self):
+        for step in range(self.num_steps):
+            if self._stop.is_set():
+                return
+            self._sem.acquire()
+            worker = None
+            while worker is None and not self._stop.is_set():
+                worker = self._pick_worker()
+                if worker is None:
+                    time.sleep(self.supervise_every)  # no live workers yet
+            if worker is None:
+                return
+            with self._lock:
+                self._inflight[step] = _Assignment(step, worker, time.perf_counter())
+            self._queues[worker].put(step)
+
+    def _supervise_loop(self):
+        while not self._stop.is_set():
+            time.sleep(self.supervise_every)
+            now = time.perf_counter()
+            with self._lock:
+                inflight = list(self._inflight.values())
+                done = set(self._done)
+                failed = set(self._failed)
+            # one membership read per tick, not per assignment: a
+            # lease-backed monitor answers from the channel (file stats /
+            # shm opens), and liveness cannot change within a tick anyway
+            live = self._live_workers()
+            for a in inflight:
+                if a.step in done:
+                    # completed: its duration feeds the trailing median
+                    self.policy.observe(now - a.issued)
+                    with self._lock:
+                        self._inflight.pop(a.step, None)
+                    continue
+                dead = self.monitor is not None and a.worker not in live
+                errored = a.step in failed
+                grade = self.policy.grade(now - a.issued)
+                if not dead and not errored and grade != "redispatch":
+                    continue
+                target = self._pick_worker(exclude=a.worker, live=live)
+                if target is None:
+                    continue  # nobody to re-issue to; keep waiting
+                reason = (
+                    "worker-error" if errored
+                    else "dead-worker" if dead
+                    else "straggler"
+                )
+                self.redispatches.append(
+                    {"step": a.step, "from": a.worker, "to": target,
+                     "reason": reason, "attempt": a.attempts + 1}
+                )
+                with self._lock:
+                    a.history.append(a.worker)
+                    a.worker = target
+                    a.attempts += 1
+                    a.issued = now  # grade the new issue, not the stuck one
+                    self._failed.discard(a.step)  # the re-issue gets a clean slate
+                self._queues[target].put(a.step)
+
+    # -- consumer ---------------------------------------------------------------
+    def start(self) -> None:
+        """Launch worker/dispatcher/supervisor threads (idempotent;
+        ``__iter__`` calls it, tests call it early to stage failures)."""
+        if self._started:
+            return
+        self._started = True
+        self._threads = [
+            threading.Thread(target=self._worker_loop, args=(w,), daemon=True)
+            for w in self.workers
+        ]
+        self._threads.append(
+            threading.Thread(target=self._dispatch_loop, daemon=True)
+        )
+        self._threads.append(
+            threading.Thread(target=self._supervise_loop, daemon=True)
+        )
+        for t in self._threads:
+            t.start()
+
+    def __iter__(self) -> Iterator[Proxy]:
+        self.start()
+        for step in range(self.num_steps):
+            try:
+                self.store.wait_for(
+                    self._shard_key(step), timeout=self.shard_timeout
+                )
+            except TimeoutError as e:
+                if self.errors:  # surface the root cause, not a bare timeout
+                    raise RuntimeError(
+                        f"shard {step} never committed within "
+                        f"{self.shard_timeout}s; worker errors: {self.errors}"
+                    ) from e
+                raise
+            self._sem.release()  # dispatcher may run ahead again
+            yield self.store.proxy_from_key(
+                self._shard_key(step), evict_on_resolve=True
+            )
+
+    def stop(self):
+        self._stop.set()
+        for q in self._queues.values():
+            q.put(None)
         self._sem.release()
 
     def metrics(self) -> dict:

@@ -7,6 +7,9 @@ Two modules pair the paper's proxy patterns with an actual data plane:
   deterministic parameter materialization (mesh-shape independent init).
 - :mod:`repro.dist.fault` — heartbeat leases over a Store (mediated channel),
   straggler policy, and elastic mesh re-planning after capacity loss.
+- :mod:`repro.dist.lease` — the cross-process lease service behind the
+  heartbeats: CAS generation claims (fencing tokens), CAS-append registry,
+  notification-driven membership watch.
 
 Every model/optimizer/trainer/server layer consumes this package; keep the
 contract here stable (see ROADMAP.md §repro.dist).
@@ -16,6 +19,14 @@ from repro.dist.fault import (  # noqa: F401
     MeshPlan,
     StragglerPolicy,
     elastic_plan,
+)
+from repro.dist.lease import (  # noqa: F401
+    Lease,
+    LeaseError,
+    LeaseExpired,
+    LeaseLost,
+    LeaseService,
+    MembershipSnapshot,
 )
 from repro.dist.sharding import (  # noqa: F401
     DEFAULT_RULES,

@@ -5,20 +5,26 @@ Scaled to this container but written for the production mesh:
 - :class:`HeartbeatMonitor` keeps worker *leases* in a Store (the paper's
   mediated channel), so the monitor and the workers need not share a
   process: a worker that misses its TTL is dead until it re-registers —
-  exactly the lease protocol a 1000-node deployment runs over etcd.
+  exactly the lease protocol a 1000-node deployment runs over etcd.  The
+  implementation is :class:`repro.dist.lease.LeaseService` (PR 4): CAS
+  generation claims, CAS-append registry, fenced renewals.
 - :class:`StragglerPolicy` grades step durations against a trailing median:
   ``warn`` (log + count) below ``redispatch`` (re-issue the work elsewhere).
-  The Trainer's watchdog delegates here.
+  The Trainer's watchdog and the data layer's shard dispatcher delegate
+  here (``DispatchingDataLoader`` re-issues a shard on a "redispatch"
+  grade).
 - :func:`elastic_plan` re-plans the (pod, data, model) mesh after capacity
   loss: model parallelism is pinned (weights are sharded that way), data
   parallelism degrades to the largest power of two that still fits — the
-  path ``Trainer.remesh`` takes when a pod drops.
+  path ``Trainer.remesh`` takes when a pod drops
+  (``launch.mesh.ElasticMeshDriver`` drives it from lease membership).
 """
 from __future__ import annotations
 
 import statistics
-import time
 from dataclasses import dataclass, field
+
+from repro.dist.lease import LeaseService
 
 
 # ---------------------------------------------------------------------------
@@ -33,61 +39,38 @@ class HeartbeatMonitor:
     A lease that expires makes the worker *dead*: further heartbeats raise
     ``TimeoutError`` until the worker re-registers (so a partitioned node
     cannot silently rejoin with stale state).
+
+    Thin adapter keeping the PR 1 API; the protocol lives in
+    :class:`repro.dist.lease.LeaseService` — atomic generation claims
+    instead of the old read-modify-write registry, so concurrent
+    registrations can't lose updates and a fenced-out stale worker can't
+    silently resurrect (``LeaseLost``).
     """
 
-    _REGISTRY_KEY = "hb-workers"
-
     def __init__(self, store, ttl: float = 5.0):
-        self.store = store
-        self.ttl = float(ttl)
+        self.leases = LeaseService(store, ttl=ttl)
 
-    def _key(self, worker: str) -> str:
-        return f"hb-lease-{worker}"
+    @property
+    def store(self):
+        return self.leases.store
 
-    def _lease(self, worker: str) -> dict | None:
-        # fresh: leases are *mutable* keys renewed by other processes/store
-        # instances; a cached read would pin the first lease forever and
-        # declare a heartbeating worker dead
-        return self.store.get(self._key(worker), fresh=True)
-
-    def _registry(self) -> list[str]:
-        return self.store.get(self._REGISTRY_KEY, [], fresh=True)
+    @property
+    def ttl(self) -> float:
+        return self.leases.ttl
 
     def register(self, worker: str) -> None:
-        # registry lives in the Store too, so monitors in other processes
-        # see workers they did not register (read-modify-write: fine for
-        # the single-registrar stub; a real fleet registers through one
-        # membership service).  Wall clock, not monotonic: lease expiries
-        # cross processes, and monotonic epochs are only meaningful locally.
-        reg = self._registry()
-        if worker not in reg:
-            self.store.put(reg + [worker], key=self._REGISTRY_KEY)
-        self.store.put(
-            {"worker": worker, "expires": time.time() + self.ttl},
-            key=self._key(worker),
-        )
+        self.leases.register(worker)
 
     def heartbeat(self, worker: str) -> None:
-        lease = self._lease(worker)
-        now = time.time()
-        if lease is None or now > lease["expires"]:
-            self.store.evict(self._key(worker))
-            raise TimeoutError(
-                f"worker {worker!r} lease expired (ttl={self.ttl}s); re-register"
-            )
-        self.store.put(
-            {"worker": worker, "expires": now + self.ttl}, key=self._key(worker)
-        )
-
-    def _alive(self, worker: str) -> bool:
-        lease = self._lease(worker)
-        return lease is not None and time.time() <= lease["expires"]
+        # raises LeaseExpired (a TimeoutError — the PR 1 contract) on a
+        # missed TTL and LeaseLost when a newer registration fenced us out
+        self.leases.renew(worker)
 
     def live_workers(self) -> list[str]:
-        return sorted(w for w in self._registry() if self._alive(w))
+        return self.leases.live()
 
     def dead_workers(self) -> list[str]:
-        return sorted(w for w in self._registry() if not self._alive(w))
+        return self.leases.dead()
 
 
 # ---------------------------------------------------------------------------
@@ -112,16 +95,28 @@ class StragglerPolicy:
     warnings: int = 0
     redispatches: int = 0
 
+    def grade(self, dt: float) -> str | None:
+        """Judge ``dt`` against the current baseline WITHOUT recording it.
+
+        The dispatcher's supervisor grades *in-flight* elapsed times with
+        this — an unfinished shard's partial duration must not poison the
+        trailing median that completed shards build.
+        """
+        if len(self.durations) < self.min_samples:
+            return None
+        med = statistics.median(self.durations[-self.window :])
+        if dt > self.redispatch_factor * med:
+            return "redispatch"
+        if dt > self.warn_factor * med:
+            return "warn"
+        return None
+
     def observe(self, dt: float) -> str | None:
-        decision = None
-        if len(self.durations) >= self.min_samples:
-            med = statistics.median(self.durations[-self.window :])
-            if dt > self.redispatch_factor * med:
-                decision = "redispatch"
-                self.redispatches += 1
-            elif dt > self.warn_factor * med:
-                decision = "warn"
-                self.warnings += 1
+        decision = self.grade(dt)
+        if decision == "redispatch":
+            self.redispatches += 1
+        elif decision == "warn":
+            self.warnings += 1
         self.durations.append(dt)
         return decision
 

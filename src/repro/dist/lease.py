@@ -1,0 +1,303 @@
+"""Cross-process lease service over a Store (the multi-host fault path).
+
+This is the membership substrate behind :class:`repro.dist.fault.
+HeartbeatMonitor`: worker liveness as *leases* in a mediated channel, so the
+monitor and the workers never share a process — File/SharedMemory connectors
+carry it cross-process today, an etcd/network connector would carry it
+cross-host with zero changes here.
+
+Design (every mutation is either a CAS or fenced by one):
+
+- **Generations** — a worker's identity is claimed per *generation*: cell
+  ``{prefix}-gen-{worker}-{g}`` is written with an atomic put-if-absent
+  (``put_parts_new``: dict setdefault / ``link(2)`` / shm ``O_EXCL``), so
+  exactly one process owns generation ``g`` of a worker name.  A partitioned
+  node that re-registers claims ``g+1`` and *fences out* the old owner: the
+  stale process's next renewal sees a newer head generation and raises
+  :class:`LeaseLost` instead of silently resurrecting (the fencing-token
+  protocol etcd/Chubby leases run).
+- **Registry** — membership is a chain of immutable versioned cells
+  ``{prefix}-reg-{n}``, each holding the full member list.  Appending is a
+  CAS retry loop on ``put_if_absent`` at ``n+1`` (the loser re-reads and
+  retries), replacing the read-modify-write list the single-host stub used
+  — concurrent registrations can no longer lose updates.  Cells are
+  write-once, so plain (cached) reads are safe; readers discover the head
+  by probing forward from their last known version.
+- **Renewals** — the generation claim doubles as the initial lease (it
+  carries ``expires``); renewals overwrite a per-generation renewal cell.
+  That cell has exactly one legal writer — the process that won the
+  generation CAS — so the overwrite is race-free *by construction*, and
+  every renewal first validates the fence (head generation unchanged) and
+  the TTL (an expired lease raises :class:`LeaseExpired`; the worker must
+  re-register, claiming a fresh generation).
+- **Watch** — :meth:`watch` blocks on the connector's notification-based
+  ``wait_for_any`` over the *next* registry cell and the *next* generation
+  cell of every known member (registrations and re-registrations are key
+  creations → native wake-ups), with the deadline capped at the earliest
+  live-lease expiry (deaths are the absence of writes — only time reveals
+  them).  No polling loop; one blocking wait per round.
+
+Wall clock, not monotonic: expiries cross processes, and monotonic epochs
+are only meaningful locally (same rationale as the PR 1 stub).  Renewal
+cells are mutable keys, so every renewal read is ``fresh=True`` (the
+resolve cache is in-process only — ROADMAP §Store hot path).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+from repro.core.connectors import wait_for_any
+
+
+class LeaseError(RuntimeError):
+    """Base class for lease-protocol violations."""
+
+
+class LeaseLost(LeaseError):
+    """A newer generation claimed this worker: the caller has been fenced
+    out (its writes must stop; a split-brain node cannot keep renewing)."""
+
+
+class LeaseExpired(TimeoutError):
+    """The lease's TTL passed before the renewal: the worker is dead until
+    it re-registers.  Subclasses ``TimeoutError`` — the exception the
+    original ``HeartbeatMonitor.heartbeat`` contract promised."""
+
+
+@dataclass(frozen=True)
+class Lease:
+    """A worker's current lease: fencing generation + wall-clock expiry."""
+
+    worker: str
+    generation: int
+    expires: float
+
+    def live(self, now: float | None = None) -> bool:
+        return (now if now is not None else time.time()) <= self.expires
+
+
+@dataclass(frozen=True)
+class MembershipSnapshot:
+    """Comparable point-in-time view of the cluster (the watch currency)."""
+
+    version: int  # registry head version
+    members: tuple[str, ...]
+    live: tuple[str, ...]
+    generations: tuple[tuple[str, int], ...]
+
+    @property
+    def dead(self) -> tuple[str, ...]:
+        alive = set(self.live)
+        return tuple(w for w in self.members if w not in alive)
+
+
+class LeaseService:
+    """Lease table over any Store connector (see module docstring).
+
+    One instance per process side (worker or monitor); instances sharing a
+    connector see one membership.  ``prefix`` namespaces the cells so
+    several services can share a channel.
+    """
+
+    def __init__(self, store, ttl: float = 5.0, *, prefix: str = "hb"):
+        self.store = store
+        self.ttl = float(ttl)
+        self.prefix = prefix
+        self._lock = threading.Lock()
+        self._reg_head = 0  # last registry version this instance has seen
+        self._gen_heads: dict[str, int] = {}  # worker → last seen generation
+        self._owned: dict[str, int] = {}  # worker → generation won *here*
+
+    # -- keys -----------------------------------------------------------------
+    def _reg_key(self, n: int) -> str:
+        return f"{self.prefix}-reg-{n:08d}"
+
+    def _gen_key(self, worker: str, g: int) -> str:
+        return f"{self.prefix}-gen-{worker}-{g:08d}"
+
+    def _renew_key(self, worker: str, g: int) -> str:
+        return f"{self.prefix}-rn-{worker}-{g:08d}"
+
+    # -- head discovery (probe forward; cells are write-once) -----------------
+    def _registry_head(self) -> tuple[int, list[str]]:
+        with self._lock:
+            n = self._reg_head
+        while self.store.exists(self._reg_key(n + 1)):
+            n += 1
+        with self._lock:
+            self._reg_head = max(self._reg_head, n)
+        if n == 0:
+            return 0, []
+        members = self.store.get(self._reg_key(n))
+        # a concurrent chain GC is impossible (cells are never evicted), so
+        # a missing head cell means the probe raced a slow writer: settle on
+        # the newest cell that is actually readable
+        while members is None and n > 1:
+            n -= 1
+            members = self.store.get(self._reg_key(n))
+        return n, list(members or [])
+
+    def _generation_head(self, worker: str) -> int:
+        with self._lock:
+            g = self._gen_heads.get(worker, 0)
+        while self.store.exists(self._gen_key(worker, g + 1)):
+            g += 1
+        with self._lock:
+            prev = self._gen_heads.get(worker, 0)
+            self._gen_heads[worker] = max(prev, g)
+        return g
+
+    # -- membership (CAS-append registry) --------------------------------------
+    def members(self) -> list[str]:
+        return self._registry_head()[1]
+
+    def _ensure_member(self, worker: str) -> None:
+        while True:
+            n, members = self._registry_head()
+            if worker in members:
+                return
+            proposed = sorted(members + [worker])
+            if self.store.put_if_absent(proposed, self._reg_key(n + 1)):
+                with self._lock:
+                    self._reg_head = max(self._reg_head, n + 1)
+                return
+            # lost the CAS: someone else appended first — re-read, retry
+
+    # -- registration / renewal -------------------------------------------------
+    def register(self, worker: str) -> int:
+        """Claim the next generation of ``worker``; returns the fencing token.
+
+        Exactly one racing registrant wins each generation (connector-level
+        put-if-absent); the loser retries at the next one, fencing the
+        winner out in turn — last registrant holds the lease.
+        """
+        while True:
+            g = self._generation_head(worker) + 1
+            claim = {"expires": time.time() + self.ttl}
+            if self.store.put_if_absent(claim, self._gen_key(worker, g)):
+                with self._lock:
+                    self._gen_heads[worker] = max(
+                        self._gen_heads.get(worker, 0), g
+                    )
+                    self._owned[worker] = g
+                self._ensure_member(worker)
+                return g
+
+    def renew(self, worker: str, generation: int | None = None) -> None:
+        """Extend the lease by ``ttl``; the heartbeat.
+
+        Raises :class:`LeaseLost` when a newer generation exists (this
+        caller was fenced out) and :class:`LeaseExpired` when the TTL
+        already passed (dead until re-register).
+        """
+        g = generation if generation is not None else self._owned.get(worker)
+        head = self._generation_head(worker)
+        if g is None:
+            g = head  # monitor-side renewal: act on the current lease
+        if head == 0:
+            raise LeaseError(f"worker {worker!r} was never registered")
+        if g < head:
+            raise LeaseLost(
+                f"worker {worker!r} generation {g} fenced out by {head}"
+            )
+        now = time.time()
+        lease = self._lease_at(worker, g)
+        if lease is None or now > lease.expires:
+            # No evict: the renewal cell's only legal writer is the
+            # generation owner, and a monitor-side renew (generation=None)
+            # may be acting on a lease it does not own — with wall-clock
+            # skew, evicting here could delete an owner's just-landed
+            # renewal.  Liveness reads validate expiry anyway.
+            raise LeaseExpired(
+                f"worker {worker!r} lease expired (ttl={self.ttl}s); re-register"
+            )
+        self.store.put({"expires": now + self.ttl}, key=self._renew_key(worker, g))
+
+    # -- reads ------------------------------------------------------------------
+    def _lease_at(self, worker: str, g: int) -> Lease | None:
+        # renewal cell is mutable → fresh read; the claim cell is write-once
+        renewal = self.store.get(self._renew_key(worker, g), fresh=True)
+        if renewal is not None:
+            return Lease(worker, g, float(renewal["expires"]))
+        claim = self.store.get(self._gen_key(worker, g))
+        if claim is None:
+            return None
+        return Lease(worker, g, float(claim["expires"]))
+
+    def lease(self, worker: str) -> Lease | None:
+        g = self._generation_head(worker)
+        return None if g == 0 else self._lease_at(worker, g)
+
+    def is_live(self, worker: str) -> bool:
+        lease = self.lease(worker)
+        return lease is not None and lease.live()
+
+    def live(self) -> list[str]:
+        return sorted(w for w in self.members() if self.is_live(w))
+
+    def dead(self) -> list[str]:
+        return sorted(w for w in self.members() if not self.is_live(w))
+
+    def snapshot(self) -> MembershipSnapshot:
+        version, members = self._registry_head()
+        leases = {w: self.lease(w) for w in members}
+        now = time.time()
+        return MembershipSnapshot(
+            version=version,
+            members=tuple(members),
+            live=tuple(
+                sorted(w for w, l in leases.items() if l is not None and l.live(now))
+            ),
+            generations=tuple(
+                sorted((w, l.generation if l else 0) for w, l in leases.items())
+            ),
+        )
+
+    # -- subscription -------------------------------------------------------------
+    def _next_event_keys(self, snap: MembershipSnapshot) -> list[str]:
+        keys = [self._reg_key(snap.version + 1)]  # next membership append
+        gens = dict(snap.generations)
+        keys += [
+            self._gen_key(w, gens.get(w, 0) + 1) for w in snap.members
+        ]  # next re-registration of any known member
+        return keys
+
+    def _earliest_expiry(self, snap: MembershipSnapshot) -> float | None:
+        expiries = []
+        for w in snap.live:
+            lease = self.lease(w)
+            if lease is not None:
+                expiries.append(lease.expires)
+        return min(expiries) if expiries else None
+
+    def watch(
+        self,
+        known: MembershipSnapshot | None = None,
+        timeout: float | None = None,
+    ) -> MembershipSnapshot:
+        """Block until membership *may* differ from ``known``; return the
+        fresh snapshot (the caller compares — an unchanged return is a
+        heartbeat-shaped wake, loop again).
+
+        One ``wait_for_any`` round over the next registry/generation cells,
+        deadline-capped at the earliest live-lease expiry: registrations
+        wake us by notification, deaths by the TTL clock.  Never a poll
+        loop.
+        """
+        snap = self.snapshot()
+        if known is None or snap != known:
+            return snap
+        wait = timeout
+        expiry = self._earliest_expiry(snap)
+        if expiry is not None:
+            # +5% ttl slack so we wake just *after* the lease dies, not just
+            # before it (an on-time renewal moves the next deadline anyway)
+            until_death = max(0.0, expiry - time.time()) + 0.05 * self.ttl
+            wait = until_death if wait is None else min(wait, until_death)
+        try:
+            wait_for_any(self.store.connector, self._next_event_keys(snap), wait)
+        except TimeoutError:
+            pass  # deadline wake: a lease may have expired — re-snapshot
+        return self.snapshot()

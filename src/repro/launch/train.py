@@ -19,7 +19,11 @@ import time
 import jax
 
 from repro.configs import arch_names, get_config, get_smoke_config
-from repro.data.pipeline import StreamingDataLoader, SyntheticCorpus
+from repro.data.pipeline import (
+    DispatchingDataLoader,
+    StreamingDataLoader,
+    SyntheticCorpus,
+)
 from repro.launch.mesh import make_host_mesh, rules_for
 from repro.models.layers import ModelContext
 from repro.optim.adamw import AdamWConfig
@@ -38,6 +42,9 @@ def main(argv=None) -> int:
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--ckpt-dir", default="/tmp/repro-train-ckpt")
+    ap.add_argument("--dispatch-workers", type=int, default=0,
+                    help="feed via the shard-dispatching loader (redispatch "
+                         "on straggle/death) instead of the plain stream")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args(argv)
@@ -57,9 +64,15 @@ def main(argv=None) -> int:
         trainer.init_state()
 
     corpus = SyntheticCorpus(cfg, args.batch, args.seq)
-    loader = StreamingDataLoader(
-        corpus.next_batch, num_steps=args.steps + 8, prefetch=2
-    )
+    if args.dispatch_workers > 0:
+        loader = DispatchingDataLoader(
+            corpus.next_batch, num_steps=args.steps + 8,
+            workers=args.dispatch_workers, prefetch=2,
+        )
+    else:
+        loader = StreamingDataLoader(
+            corpus.next_batch, num_steps=args.steps + 8, prefetch=2
+        )
     t0 = time.perf_counter()
     history = trainer.train(loader, args.steps)
     wall = time.perf_counter() - t0

@@ -19,6 +19,7 @@ the production mesh:
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -84,6 +85,9 @@ class Trainer:
         self.step_num = 0
         self.failures = 0
         self.history: list[dict] = []
+        self.remeshes: list[dict] = []
+        self._remesh_lock = threading.Lock()
+        self._pending_remesh: tuple[ModelContext, Any] | None = None
 
     # -- state ------------------------------------------------------------
     def init_state(self, seed: int = 0):
@@ -116,6 +120,32 @@ class Trainer:
         }
 
     # -- elastic ------------------------------------------------------------
+    def request_remesh(self, new_ctx: ModelContext, *, plan=None) -> None:
+        """Queue an elastic re-mesh (thread-safe; e.g. from the
+        ``ElasticMeshDriver`` watch thread).
+
+        Applied at the next step *boundary* — a remesh re-device_puts the
+        live state, which must never race the jit'd step that is consuming
+        (and donating) those buffers.  Last request wins: membership may
+        change again before the boundary, and only the newest plan matters.
+        """
+        with self._remesh_lock:
+            self._pending_remesh = (new_ctx, plan)
+
+    def _apply_pending_remesh(self, log: Callable[[str], None]) -> None:
+        with self._remesh_lock:
+            pending, self._pending_remesh = self._pending_remesh, None
+        if pending is None:
+            return
+        new_ctx, plan = pending
+        self.remesh(new_ctx)
+        self.remeshes.append(
+            {"step": self.step_num, "plan": None if plan is None else str(plan),
+             "mesh_axes": tuple(new_ctx.mesh.axis_names)}
+        )
+        log(f"[trainer] remesh at step {self.step_num} → "
+            f"{plan if plan is not None else new_ctx.mesh}")
+
     def remesh(self, new_ctx: ModelContext):
         """Re-shard live state onto a new mesh and re-jit (elastic scaling)."""
         host_state = jax.tree.map(np.asarray, self.state)  # device→host
@@ -144,6 +174,7 @@ class Trainer:
                 self.init_state()
         data_iter = iter(data_iter)
         while self.step_num < num_steps:
+            self._apply_pending_remesh(log)  # elastic: apply at step boundary
             batch_proxy = next(data_iter)
             batch = (
                 extract(batch_proxy) if isinstance(batch_proxy, Proxy) else batch_proxy

@@ -1,11 +1,22 @@
-"""Suite bootstrap: src/ on sys.path + hypothesis fallback.
+"""Suite bootstrap: src/ on sys.path, hypothesis fallback, multiproc guard.
 
 The sys.path insert duplicates pyproject's ``pythonpath`` on purpose: this
 conftest imports ``repro`` itself (for the hypothesis stub) and must not
 depend on ini-option processing order.
+
+``@pytest.mark.multiproc`` tests spawn subprocesses (lease workers, chaos
+victims) and could wedge the tier-1 gate if a child never writes the key
+the parent is blocked on.  A SIGALRM watchdog turns any such hang into a
+prompt failure: default 120 s per test, raised per-test via
+``pytest.mark.multiproc(timeout=...)``; the ``REPRO_MULTIPROC_TIMEOUT``
+env var, when set, is a hard *cap* over both (scripts/check.sh sets it so
+the gate's worst-case hang is bounded regardless of per-test budgets).
 """
 import os
+import signal
 import sys
+
+import pytest
 
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 if _SRC not in sys.path:
@@ -17,3 +28,36 @@ except ImportError:
     from repro._compat import hypothesis_stub
 
     hypothesis_stub.install()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multiproc(timeout=120): spawns subprocesses; a SIGALRM watchdog "
+        "fails the test after `timeout` seconds instead of wedging the gate",
+    )
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("multiproc")
+    if marker is None or not hasattr(signal, "SIGALRM"):
+        return (yield)
+    timeout = int(marker.kwargs.get("timeout", 120))
+    cap = os.environ.get("REPRO_MULTIPROC_TIMEOUT")
+    if cap is not None:
+        timeout = min(timeout, int(cap))  # env is a hard cap, not a default
+
+    def on_alarm(signum, frame):
+        raise TimeoutError(
+            f"multiproc test exceeded its {timeout}s watchdog "
+            f"(a subprocess is likely wedged): {item.nodeid}"
+        )
+
+    old_handler = signal.signal(signal.SIGALRM, on_alarm)
+    signal.alarm(timeout)
+    try:
+        return (yield)
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old_handler)

@@ -1,0 +1,265 @@
+"""Lease-service tests: CAS registry/generations, fencing, expiry,
+notification-driven watch — including the cross-process worker (PR 4).
+
+The subprocess tests mirror the producer-subprocess pattern of
+``tests/test_stream_fastpath.py``: the worker heartbeats over a
+``FileConnector`` from its own interpreter while the parent's monitor
+observes the live → dead → re-register transitions through the channel.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.core import FileConnector, InMemoryConnector, Store
+from repro.dist.fault import HeartbeatMonitor
+from repro.dist.lease import (
+    LeaseExpired,
+    LeaseLost,
+    LeaseService,
+    MembershipSnapshot,
+)
+
+
+def _store(name, conn=None):
+    return Store(name, conn or InMemoryConnector(), register=False)
+
+
+def _svc(conn=None, ttl=5.0, name=None):
+    return LeaseService(_store(name or f"ls-{id(object())}", conn), ttl=ttl)
+
+
+def _subprocess_env():
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _wait_until(predicate, timeout, what):
+    deadline = time.time() + timeout
+    while not predicate():
+        assert time.time() < deadline, f"timed out waiting for {what}"
+        time.sleep(0.02)
+
+
+# ---------------------------------------------------------------------------
+# Core protocol
+# ---------------------------------------------------------------------------
+
+
+class TestLeaseProtocol:
+    def test_register_renew_expire_reregister(self):
+        svc = _svc(ttl=0.3)
+        g = svc.register("w0")
+        assert g == 1
+        assert svc.live() == ["w0"]
+        svc.renew("w0")
+        time.sleep(0.45)
+        assert svc.dead() == ["w0"]
+        with pytest.raises(TimeoutError):  # LeaseExpired IS a TimeoutError
+            svc.renew("w0")
+        g2 = svc.register("w0")
+        assert g2 == 2  # a fresh generation, not a resurrected lease
+        assert svc.live() == ["w0"]
+
+    def test_fencing_newer_generation_wins(self):
+        """A re-registration fences the old owner out (split-brain guard)."""
+        conn = InMemoryConnector()
+        old = _svc(conn, ttl=5.0)
+        new = _svc(conn, ttl=5.0)
+        g1 = old.register("w0")
+        g2 = new.register("w0")
+        assert g2 == g1 + 1
+        with pytest.raises(LeaseLost):
+            old.renew("w0")  # stale generation must not silently renew
+        new.renew("w0")  # the current owner still can
+
+    def test_lease_carries_generation_and_expiry(self):
+        svc = _svc(ttl=1.0)
+        svc.register("w0")
+        lease = svc.lease("w0")
+        assert lease.worker == "w0" and lease.generation == 1
+        assert lease.live()
+        assert svc.lease("ghost") is None
+
+    def test_snapshot_is_comparable(self):
+        svc = _svc(ttl=5.0)
+        a = svc.snapshot()
+        assert isinstance(a, MembershipSnapshot)
+        svc.register("w0")
+        b = svc.snapshot()
+        assert a != b and b.live == ("w0",)
+        assert b == svc.snapshot()  # no membership event ⇒ equal snapshots
+
+    def test_registry_concurrent_registration_race(self):
+        """The PR 1 read-modify-write registry lost concurrent updates; the
+        CAS-append chain must keep every racing registrant."""
+        conn = InMemoryConnector()
+        names = [f"w{i}" for i in range(8)]
+        barrier = threading.Barrier(len(names))
+        errors = []
+
+        def reg(name):
+            svc = _svc(conn, ttl=30.0, name=f"race-{name}")
+            barrier.wait()
+            try:
+                svc.register(name)
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=reg, args=(n,)) for n in names]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+        assert not errors
+        assert _svc(conn, ttl=30.0).members() == sorted(names)
+
+    def test_heartbeat_monitor_api_preserved(self):
+        """The PR 1 HeartbeatMonitor surface rides on the lease service."""
+        store = _store(f"hbapi-{id(object())}")
+        mon = HeartbeatMonitor(store, ttl=0.3)
+        mon.register("a")
+        mon.heartbeat("a")
+        assert mon.live_workers() == ["a"]
+        time.sleep(0.45)
+        assert mon.dead_workers() == ["a"]
+        with pytest.raises(TimeoutError):
+            mon.heartbeat("a")
+        mon.register("a")
+        assert mon.live_workers() == ["a"]
+
+
+# ---------------------------------------------------------------------------
+# Watch (notification-driven membership subscription)
+# ---------------------------------------------------------------------------
+
+
+class TestWatch:
+    def test_watch_wakes_on_registration(self):
+        conn = InMemoryConnector()
+        svc = _svc(conn, ttl=30.0)
+        snap = svc.snapshot()
+        woke = {}
+
+        def watcher():
+            t0 = time.perf_counter()
+            woke["snap"] = svc.watch(snap, timeout=10.0)
+            woke["dt"] = time.perf_counter() - t0
+
+        th = threading.Thread(target=watcher)
+        th.start()
+        time.sleep(0.1)
+        _svc(conn, ttl=30.0).register("w0")
+        th.join(timeout=10)
+        assert not th.is_alive()
+        assert "w0" in woke["snap"].live
+        assert woke["dt"] < 5.0  # notification wake, not the 10 s timeout
+
+    def test_watch_returns_after_lease_deadline(self):
+        """Deaths are the absence of writes: the watch deadline is capped at
+        the earliest live-lease expiry, so an expired worker is noticed
+        without any registration event."""
+        svc = _svc(ttl=0.3)
+        svc.register("w0")
+        snap = svc.snapshot()
+        assert snap.live == ("w0",)
+        t0 = time.perf_counter()
+        out = svc.watch(snap, timeout=10.0)
+        assert time.perf_counter() - t0 < 5.0  # woke at the TTL, not the cap
+        assert out.live == () and out.dead == ("w0",)
+
+    def test_watch_changed_snapshot_returns_immediately(self):
+        svc = _svc(ttl=30.0)
+        stale = svc.snapshot()
+        svc.register("w0")
+        t0 = time.perf_counter()
+        out = svc.watch(stale, timeout=10.0)
+        assert time.perf_counter() - t0 < 1.0
+        assert out.live == ("w0",)
+
+
+# ---------------------------------------------------------------------------
+# Cross-process: worker heartbeats from a subprocess over FileConnector
+# ---------------------------------------------------------------------------
+
+
+_XP_WORKER = """
+import sys, time
+from repro.core import FileConnector, Store
+from repro.dist.lease import LeaseService
+
+directory, name, ttl, beats = sys.argv[1], sys.argv[2], float(sys.argv[3]), int(sys.argv[4])
+svc = LeaseService(
+    Store(f"xp-worker-{name}", FileConnector(directory), register=False), ttl=ttl
+)
+svc.register(name)
+for _ in range(beats):
+    time.sleep(ttl / 4)
+    svc.renew(name)
+"""
+
+
+@pytest.mark.multiproc
+class TestCrossProcessLease:
+    def test_subprocess_worker_live_dead_reregister(self, tmp_path):
+        directory = str(tmp_path / "leases")
+        ttl = 0.8
+        monitor = LeaseService(
+            _store("xp-monitor", FileConnector(directory)), ttl=ttl
+        )
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _XP_WORKER, directory, "w0", str(ttl), "6"],
+            env=_subprocess_env(),
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        try:
+            # live: the subprocess registered and keeps beating (~1.2 s)
+            _wait_until(lambda: monitor.live() == ["w0"], 15, "worker live")
+            gen_live = monitor.lease("w0").generation
+            assert gen_live == 1
+            # dead: the subprocess exits; its lease must lapse after ttl
+            _wait_until(lambda: monitor.dead() == ["w0"], 15, "worker dead")
+            assert monitor.live() == []
+        finally:
+            out, err = proc.communicate(timeout=30)
+        assert proc.returncode == 0, err.decode()
+        # re-register: a second incarnation claims the next generation
+        proc2 = subprocess.Popen(
+            [sys.executable, "-c", _XP_WORKER, directory, "w0", str(ttl), "2"],
+            env=_subprocess_env(),
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        try:
+            _wait_until(lambda: monitor.is_live("w0"), 15, "worker re-registered")
+            assert monitor.lease("w0").generation == gen_live + 1
+        finally:
+            out, err = proc2.communicate(timeout=30)
+        assert proc2.returncode == 0, err.decode()
+
+    def test_parent_fences_subprocess_worker(self, tmp_path):
+        """Parent re-registers the worker name mid-beat: the subprocess's
+        next renewal must die on LeaseLost (exit code ≠ 0)."""
+        directory = str(tmp_path / "fence")
+        ttl = 1.0
+        monitor = LeaseService(
+            _store("xp-fencer", FileConnector(directory)), ttl=ttl
+        )
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _XP_WORKER, directory, "w0", str(ttl), "8"],
+            env=_subprocess_env(),
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        try:
+            _wait_until(lambda: monitor.is_live("w0"), 15, "worker live")
+            monitor.register("w0")  # fence the subprocess out
+        finally:
+            out, err = proc.communicate(timeout=30)
+        assert proc.returncode != 0
+        assert b"LeaseLost" in err

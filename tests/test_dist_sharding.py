@@ -130,6 +130,41 @@ class TestMaterializeDeterminism:
             a, b,
         )
 
+    def test_profile_mesh_matrix_bitwise_identical(self):
+        """Across every RULE_PROFILES profile × mesh shape, materialized
+        (and device_put-sharded) params are bitwise the same logical
+        arrays — the exact invariant the PR 4 remesh driver and resharded
+        checkpoint restore rely on (a remesh may swap both the mesh axes
+        and the rules profile; the weights must not move a ULP)."""
+        from repro.dist.sharding import ParamSpec, sharding_tree
+
+        specs = {
+            "emb": ParamSpec((64, 32), ("vocab", "embed"), np.float32, 0.02),
+            "w": ParamSpec((32, 128), ("embed", "mlp"), np.float32),
+            "heads": ParamSpec((32, 4, 8), ("embed", "heads", None), np.float32),
+            "scale": ParamSpec((32,), ("embed",), np.float32, 1.0),
+        }
+        ref = jax.tree.map(
+            np.asarray, materialize_params(specs, jax.random.PRNGKey(3))
+        )
+        meshes = [
+            jax.make_mesh((1, 1), ("data", "model")),
+            jax.make_mesh((1,), ("model",)),
+            jax.make_mesh((1, 1, 1), ("pod", "data", "model")),
+        ]
+        for profile in RULE_PROFILES:
+            for mesh in meshes:
+                rules = rules_for(mesh, profile)
+                with mesh:
+                    params = materialize_params(specs, jax.random.PRNGKey(3))
+                    placed = jax.device_put(
+                        params, sharding_tree(specs, rules, mesh)
+                    )
+                jax.tree.map(
+                    lambda r, x: np.testing.assert_array_equal(r, np.asarray(x)),
+                    ref, placed,
+                )
+
     def test_init_scale_semantics(self):
         from repro.dist.sharding import ParamSpec
 

@@ -150,6 +150,50 @@ class TestOwnershipInvariants:
         free(b)
 
 
+class TestElasticPlanInvariants:
+    """The re-plan properties the remesh driver relies on (PR 4)."""
+
+    @SETTINGS
+    @given(
+        chips=st.integers(1, 4096),
+        mp=st.sampled_from([1, 2, 4, 8, 16]),
+        cpp=st.sampled_from([64, 128, 256]),
+    )
+    def test_plan_invariants(self, chips, mp, cpp):
+        from repro.dist.fault import elastic_plan
+
+        try:
+            plan = elastic_plan(chips, model_parallel=mp, chips_per_pod=cpp)
+        except ValueError:
+            # only legitimate failure: the surviving chips can't host even
+            # one model-parallel group
+            assert min(chips, cpp) < mp
+            return
+        assert plan.model == mp  # model parallelism pinned, always
+        assert plan.data >= 1
+        assert plan.data & (plan.data - 1) == 0  # power of two, always
+        assert plan.chips <= chips  # never oversubscribes the survivors
+        assert plan.data * plan.model <= cpp  # a DP group never spans pods
+
+    @SETTINGS
+    @given(
+        chips=st.integers(16, 4096),
+        extra=st.integers(0, 1024),
+        mp=st.sampled_from([1, 2, 4, 8]),
+    )
+    def test_plan_monotone_in_available_chips(self, chips, extra, mp):
+        """More surviving chips can never produce a smaller mesh."""
+        from repro.dist.fault import elastic_plan
+
+        try:
+            a = elastic_plan(chips, model_parallel=mp, chips_per_pod=256)
+        except ValueError:
+            return
+        b = elastic_plan(chips + extra, model_parallel=mp, chips_per_pod=256)
+        assert b.chips >= a.chips
+        assert b.model == a.model  # pinned on both sides of the loss
+
+
 class TestShardingRules:
     @SETTINGS
     @given(
