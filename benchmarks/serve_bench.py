@@ -1,0 +1,297 @@
+"""BENCH_serve — serving hot-path trajectory artifact.
+
+Companion to BENCH_proxy/BENCH_stream: one machine-readable JSON per PR
+generation capturing the serving claims this repo gates
+(``scripts/check.sh`` + ``scripts/compare_bench.py --serve``).
+
+This box is CPU-share throttled, so every gated metric is a *same-run
+ratio* (both sides measured back-to-back on the same engine, so load
+cancels — the trick the proxy/stream gates use).  Absolute rates are
+recorded with an ``info_`` prefix, reported but never gated.
+
+Gated metrics:
+
+- ``ttft_speedup``             — full-completion latency over streamed
+  time-to-first-token for multi-token requests (one warmed engine, deltas
+  observed by a real ServeClient on the response topic).  The streaming
+  claim: a client sees its first token a prefill after admission, not a
+  whole generation later.  TTFT is a few-ms latency floor read across a
+  thread boundary, so the gate takes the best of ``TTFT_ROUNDS`` rounds
+  (latency floors are load-stable, like the stream gate's wake latency)
+  and saturates at ``TTFT_CAP`` (like the proxy gate's ratio cap).
+- ``continuous_vs_static_ratio`` — wall time of static batching (admit a
+  full batch, drain it completely, only then admit the next) over
+  continuous batching (slots refill as sequences finish) for the same
+  mixed-length workload on the same engine.
+- ``slot_scaling_ratio``       — tokens/s with all slots decoding
+  concurrently over tokens/s serving the same requests one at a time.
+  The batched decode step's cost is ~flat in active-slot count, so
+  continuous batching multiplies throughput; a regression here means the
+  per-slot work stopped being batched.
+
+Full runs repeat the suite three times and commit the element-wise median
+(``BENCH_serve.json``); ``--quick`` runs once into
+``BENCH_serve.quick.json`` for the CI gate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import threading
+import time
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SLOTS = 4
+MAX_LEN = 64
+PAGE_SIZE = 8
+PROMPT_LEN = 12
+TTFT_MAX_NEW = 40
+TTFT_ROUNDS = 4
+# Saturation for the gated ttft ratio, mirroring the proxy gate's --cap:
+# past this streaming has decisively won and the remaining variance is
+# few-ms scheduler jitter in the denominator, not hot-path signal (the
+# regression the gate exists to catch drops the ratio to ~1).
+TTFT_CAP = 10.0
+# Mixed-length workload: every static batch is held hostage by a 48-token
+# straggler while its short sequences idle; continuous batching refills
+# those slots immediately.  Longs lead so the continuous engine overlaps
+# every straggler from the start.
+MIX_MAX_NEW = (48, 2, 48, 2, 2, 48, 2, 48)
+
+
+def _streams(tag: str):
+    """Fresh request/response topics on a unique namespace."""
+    from repro.core.connectors import new_key
+    from repro.core.store import Store
+    from repro.core.streaming import (
+        QueuePublisher,
+        QueueSubscriber,
+        StreamConsumer,
+        StreamProducer,
+    )
+
+    ns = f"sb-{tag}-{new_key()}"
+    req_store = Store(f"{ns}-req")
+    resp_store = Store(f"{ns}-resp")
+    return (
+        StreamProducer(QueuePublisher(ns), {"requests": req_store}),
+        StreamConsumer(QueueSubscriber("requests", ns), timeout=60.0),
+        StreamProducer(QueuePublisher(ns), {"responses": resp_store}),
+        StreamConsumer(QueueSubscriber("responses", ns), timeout=60.0),
+    )
+
+
+def _send(producer, rng, req_id: str, max_new: int, sent_at=None):
+    prompt = rng.integers(1, 200, PROMPT_LEN).astype(np.int32)
+    if sent_at is not None:
+        sent_at[req_id] = time.perf_counter()
+    producer.send(
+        "requests",
+        {"prompt": prompt},
+        metadata={"req_id": req_id, "max_new_tokens": max_new},
+    )
+    producer.flush_topic("requests")
+
+
+def _make_engine():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.dist.sharding import materialize_params
+    from repro.models.api import build_model
+    from repro.serve.engine import ServeEngine, serve_context
+
+    cfg = get_smoke_config("smollm-135m")
+    ctx = serve_context(cfg)
+    model = build_model(ctx)
+    params = materialize_params(model.param_specs(), jax.random.PRNGKey(0))
+    return ServeEngine(
+        ctx, params, slots=SLOTS, max_len=MAX_LEN, page_size=PAGE_SIZE, eos_id=-1
+    )
+
+
+def _ttft_round(engine, tag: str) -> tuple[float, float]:
+    """One round: SLOTS concurrent requests; returns (median ttft,
+    median completion), client-observed."""
+    from repro.serve.client import ServeClient
+
+    producer, consumer, resp_prod, resp_cons = _streams(tag)
+    rng = np.random.default_rng(1)
+    sent_at: dict[str, float] = {}
+    client = ServeClient(resp_cons)
+    collector = threading.Thread(target=client.collect, daemon=True)
+    collector.start()
+    for i in range(SLOTS):
+        _send(producer, rng, f"t{i}", TTFT_MAX_NEW, sent_at)
+    producer.close_topic("requests")
+    engine.run(consumer, resp_prod)
+    collector.join(timeout=60)
+    assert not collector.is_alive(), "response collector wedged"
+    ttft = client.ttft_s(sent_at)
+    total = client.completion_s(sent_at)
+    assert len(ttft) == len(total) == SLOTS
+    return statistics.median(ttft.values()), statistics.median(total.values())
+
+
+def bench_ttft(engine, metrics: dict) -> None:
+    """Streamed first token vs full completion, client-observed.
+
+    TTFT is a few-ms latency floor observed across a thread boundary, so
+    a single GIL switch-interval hiccup can double it; like the stream
+    bench's wake latency (min of batch medians), the gate takes the best
+    of a few rounds — latency floors are load-stable — and shrinks the
+    interpreter's switch interval while measuring.
+    """
+    import sys
+
+    old_interval = sys.getswitchinterval()
+    sys.setswitchinterval(1e-3)
+    try:
+        rounds = [
+            _ttft_round(engine, f"ttft{r}") for r in range(TTFT_ROUNDS)
+        ]
+    finally:
+        sys.setswitchinterval(old_interval)
+    raw = max(total / ttft for ttft, total in rounds)
+    metrics["ttft_speedup"] = min(raw, TTFT_CAP)
+    metrics["info_ttft_speedup_raw"] = raw
+    metrics["info_ttft_s"] = min(ttft for ttft, _ in rounds)
+    metrics["info_completion_s"] = statistics.median(t for _, t in rounds)
+
+
+def bench_continuous_vs_static(engine, metrics: dict) -> None:
+    """Same mixed-length workload: slots-refill-on-finish vs batch-drain.
+
+    The gated ratio is the *decode-step count* static batching spends over
+    continuous batching — the scheduling win itself, deterministic and
+    load-free (per-step cost flatness is what ``slot_scaling_ratio``
+    gates).  Wall-clock ratio is recorded as info alongside.
+    """
+    rng = np.random.default_rng(2)
+
+    # continuous: all requests queued, slots refill as sequences finish
+    producer, consumer, _, _ = _streams("cont")
+    for i, mn in enumerate(MIX_MAX_NEW):
+        _send(producer, rng, f"c{i}", mn)
+    producer.close_topic("requests")
+    steps0 = engine.metrics["decode_steps"]
+    t0 = time.perf_counter()
+    engine.run(consumer, max_requests=len(MIX_MAX_NEW))
+    wall_cont = time.perf_counter() - t0
+    steps_cont = engine.metrics["decode_steps"] - steps0
+
+    # static: admit a full batch, drain it, only then admit the next
+    producer, consumer, _, _ = _streams("stat")
+    steps0 = engine.metrics["decode_steps"]
+    t0 = time.perf_counter()
+    for start in range(0, len(MIX_MAX_NEW), SLOTS):
+        batch = MIX_MAX_NEW[start : start + SLOTS]
+        for j, mn in enumerate(batch):
+            _send(producer, rng, f"s{start + j}", mn)
+        engine.run(consumer, max_requests=len(batch), close_responses=False)
+    producer.close_topic("requests")
+    wall_static = time.perf_counter() - t0
+    steps_static = engine.metrics["decode_steps"] - steps0
+
+    metrics["continuous_vs_static_ratio"] = steps_static / steps_cont
+    metrics["info_continuous_wall_ratio"] = wall_static / wall_cont
+    tokens = sum(mn for mn in MIX_MAX_NEW)
+    metrics["info_tokens_per_s_continuous"] = tokens / wall_cont
+
+
+SCALING_ROUNDS = 3
+SCALING_MAX_NEW = 32
+
+
+def _scaling_round(engine, r: int) -> tuple[float, float]:
+    """(batched tokens/s, serial tokens/s) for one round."""
+    rng = np.random.default_rng(3)
+    max_new = SCALING_MAX_NEW
+
+    producer, consumer, _, _ = _streams(f"par{r}")
+    for i in range(SLOTS):
+        _send(producer, rng, f"p{r}.{i}", max_new)
+    producer.close_topic("requests")
+    t0 = time.perf_counter()
+    engine.run(consumer, max_requests=SLOTS)
+    tps_batched = SLOTS * max_new / (time.perf_counter() - t0)
+
+    producer, consumer, _, _ = _streams(f"ser{r}")
+    t0 = time.perf_counter()
+    for i in range(SLOTS):
+        _send(producer, rng, f"q{r}.{i}", max_new)
+        engine.run(consumer, max_requests=1, close_responses=False)
+    producer.close_topic("requests")
+    tps_serial = SLOTS * max_new / (time.perf_counter() - t0)
+    return tps_batched, tps_serial
+
+
+def bench_slot_scaling(engine, metrics: dict) -> None:
+    """tokens/s with all slots hot vs the same requests served serially.
+
+    Short phases make a single ratio jittery on a throttled box; the gate
+    takes the median of a few rounds (each ratio still same-run)."""
+    rounds = [_scaling_round(engine, r) for r in range(SCALING_ROUNDS)]
+    metrics["slot_scaling_ratio"] = statistics.median(
+        b / s for b, s in rounds
+    )
+    metrics["info_tokens_per_s_batched"] = max(b for b, _ in rounds)
+
+
+def run_suite(engine=None) -> dict:
+    engine = engine or _make_engine()
+    # warmup: compile prefill/admit/decode outside every timed phase
+    producer, consumer, _, _ = _streams("warm")
+    rng = np.random.default_rng(0)
+    for i in range(SLOTS):
+        _send(producer, rng, f"w{i}", 4)
+    producer.close_topic("requests")
+    engine.run(consumer)
+
+    metrics: dict[str, float] = {}
+    bench_ttft(engine, metrics)
+    bench_continuous_vs_static(engine, metrics)
+    bench_slot_scaling(engine, metrics)
+    assert engine.pages.pages_in_use() == 0, "bench leaked KV pages"
+    return metrics
+
+
+def main(quick: bool = False) -> dict:
+    runs = 1 if quick else 3
+    engine = _make_engine()  # one engine: jit once, every phase warm
+    samples = [run_suite(engine) for _ in range(runs)]
+    metrics = {
+        name: statistics.median(s[name] for s in samples) for name in samples[0]
+    }
+    name = "BENCH_serve.quick.json" if quick else "BENCH_serve.json"
+    path = os.path.join(REPO, name)
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "bench": "serve_bench",
+                "quick": quick,
+                "runs": runs,
+                "unix_time": time.time(),
+                "metrics": metrics,
+            },
+            f,
+            indent=1,
+        )
+    for k, v in metrics.items():
+        print(f"[serve_bench] {k:>28}: {v:,.3f}")
+    print(f"[serve_bench] wrote {path}")
+    return metrics
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="single run into BENCH_serve.quick.json (CI gate)")
+    args = ap.parse_args()
+    main(quick=args.quick)

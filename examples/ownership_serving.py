@@ -27,10 +27,8 @@ from repro.core.streaming import (
     StreamProducer,
 )
 from repro.dist.sharding import materialize_params
-from repro.launch.mesh import make_host_mesh, rules_for
 from repro.models.api import build_model
-from repro.models.layers import ModelContext
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ServeEngine, serve_context
 
 N_REQUESTS = 6
 MAX_NEW = 8
@@ -38,8 +36,7 @@ MAX_NEW = 8
 
 def main():
     cfg = get_smoke_config("smollm-135m")
-    mesh = make_host_mesh()
-    ctx = ModelContext(cfg, mesh, rules_for(mesh))
+    ctx = serve_context(cfg)  # serve rules profile (kv_seq over model axis)
     model = build_model(ctx)
     params = materialize_params(model.param_specs(), jax.random.PRNGKey(0))
 
@@ -76,16 +73,27 @@ def main():
     completed = engine.run(consumer)
     done.set()
 
+    # The ownership claim now reaches the store itself: freeing a sequence
+    # evicts its per-page KV cells, so the kv_store holds zero page keys.
+    kv_keys_left = sum(
+        1
+        for seq in [f"mof-{i}" for i in range(N_REQUESTS)]
+        for p in range(engine.pages.num_pages)
+        if engine.kv_store.exists(engine.pages.page_key(seq, p))
+    )
     print(
         f"ownership_serving (MOF analogue): {len(completed)}/{N_REQUESTS} "
         f"sequences served, {engine.metrics['tokens']} tokens\n"
         f"  pages-in-use trace (sampled): {active_trace}\n"
         f"  peak pages {max(active_trace or [0])}, final pages "
-        f"{engine.pages.pages_in_use()} (paper Fig 10: returns to zero)"
+        f"{engine.pages.pages_in_use()}, kv cells left {kv_keys_left} "
+        f"(paper Fig 10: returns to zero)"
     )
     assert len(completed) == N_REQUESTS
     assert engine.pages.pages_in_use() == 0, "ownership must reclaim all pages"
+    assert kv_keys_left == 0, "ownership must release the store memory too"
     assert max(active_trace or [0]) > 0, "pages were actually used"
+    engine.close()
 
 
 if __name__ == "__main__":

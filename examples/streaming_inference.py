@@ -76,7 +76,11 @@ def run_persistent(cfg, params, fwd, batches) -> tuple[float, int]:
         for proxy in consumer:
             batch = extract(proxy)
             loss = float(fwd(weights, batch))
-            results.send("results", {"loss": loss}, metadata={"i": n})
+            # metadata-only progress delta (PR 5 streaming API): the scalar
+            # rides the broker event itself — no store round trip
+            results.send_meta("results", {"i": n, "kind": "delta", "loss": loss})
+            results.send("results", {"loss": loss},
+                         metadata={"i": n, "kind": "done"})
             results.flush_topic("results")
             n += 1
         results.close_topic("results")
@@ -89,7 +93,17 @@ def run_persistent(cfg, params, fwd, batches) -> tuple[float, int]:
         producer.send("batches", b, metadata={"i": i})
         producer.flush_topic("batches")
     producer.close_topic("batches")
-    got = sum(1 for _ in result_consumer)
+    got = deltas = 0
+    while True:
+        try:
+            _, meta = result_consumer.next_with_metadata()
+        except StopIteration:
+            break
+        if meta.get("kind") == "delta":
+            deltas += 1  # the client reads losses off the event, store-free
+        else:
+            got += 1
+    assert deltas == got, "every result must be announced by a delta first"
     eng.join()
     return time.perf_counter() - t0, got
 

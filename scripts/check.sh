@@ -13,9 +13,11 @@ cd "$(dirname "$0")/.."
 echo "== tier-1: pytest =="
 # Subprocess/chaos tests (@pytest.mark.multiproc) run under a per-test
 # SIGALRM watchdog (tests/conftest.py): a wedged child fails its test fast
-# instead of hanging the whole gate.  The env var is a hard CAP over every
-# multiproc test's budget (including per-test overrides); 300 s bounds the
-# gate's worst case while leaving the chaos suite slack on a loaded box.
+# instead of hanging the whole gate.  This covers the serve suite's
+# cross-process client/engine-restart tests too — they carry the same
+# marker.  The env var is a hard CAP over every multiproc test's budget
+# (including per-test overrides); 300 s bounds the gate's worst case while
+# leaving the chaos suite slack on a loaded box.
 REPRO_MULTIPROC_TIMEOUT="${REPRO_MULTIPROC_TIMEOUT:-300}" \
     python -m pytest -x -q
 
@@ -38,6 +40,18 @@ if [[ "${1:-}" != "--fast" ]]; then
     # catch (a reintroduced polling loop, a lost batching path) are step
     # functions far beyond 40%.
     python scripts/compare_bench.py --stream --tolerance 0.4
+    echo
+    echo "== perf smoke: serve_bench --quick =="
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.serve_bench --quick
+    echo
+    echo "== perf gate: quick metrics vs committed BENCH_serve.json =="
+    # 25% tolerance is enough here: the serving metrics are same-run (or
+    # deterministic step-count) ratios with large headroom over their
+    # failure modes (streaming broken → ttft_speedup ~1 vs the 10× cap;
+    # static batching → exactly 1.0 vs 1.88; serialized decode → ~1 vs
+    # ~3.1-3.8).
+    python scripts/compare_bench.py --serve --tolerance 0.25
 fi
 
 echo

@@ -14,11 +14,15 @@ Two modes:
   metrics prefixed ``info_`` (absolute rates) are printed but never gated.
   Metrics named ``*_us``/``*_s``/``*_latency*`` are lower-is-better (a rise
   beyond tolerance fails); everything else is higher-is-better.
+- ``--serve``: same metric-dictionary comparison for the serving gate
+  (``BENCH_serve.quick.json`` vs committed ``BENCH_serve.json``):
+  streamed-vs-complete TTFT speedup, continuous-vs-static batching,
+  slot-count throughput scaling.
 
 Either way the hot paths can only ratchet forward.
 
 Usage: scripts/compare_bench.py [fresh.json] [baseline.json]
-                                [--stream] [--tolerance 0.25]
+                                [--stream | --serve] [--tolerance 0.25]
 """
 from __future__ import annotations
 
@@ -71,7 +75,7 @@ def compare_proxy(args) -> int:
     return 0
 
 
-def compare_stream(args) -> int:
+def compare_metrics(args, what: str) -> int:
     fresh, base = load_metrics(args.fresh), load_metrics(args.baseline)
     shared = sorted(set(fresh) & set(base))
     if not shared:
@@ -98,10 +102,10 @@ def compare_stream(args) -> int:
               f"vs baseline {b_v:12.2f} ({bound}) "
               f"{'OK' if ok else 'REGRESSION'}")
     if failed:
-        print(f"[compare_bench] FAIL: stream/futures hot path regressed >"
-              f"{args.tolerance:.0%} vs committed BENCH_stream.json")
+        print(f"[compare_bench] FAIL: {what} hot path regressed >"
+              f"{args.tolerance:.0%} vs committed baseline")
         return 1
-    print("[compare_bench] OK: no stream metric regression")
+    print(f"[compare_bench] OK: no {what} metric regression")
     return 0
 
 
@@ -112,6 +116,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--stream", action="store_true",
                     help="compare BENCH_stream metric dictionaries instead "
                          "of BENCH_proxy size/ratio rows")
+    ap.add_argument("--serve", action="store_true",
+                    help="compare BENCH_serve metric dictionaries (serving "
+                         "gate: ttft/continuous-batching/slot-scaling)")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fractional regression vs baseline "
                          "(quick runs use few reps; leave headroom for noise)")
@@ -121,8 +128,11 @@ def main(argv: list[str] | None = None) -> int:
                          "and the variance is pass-by-value allocator noise, "
                          "not hot-path signal")
     args = ap.parse_args(argv)
+    if args.stream and args.serve:
+        ap.error("--stream and --serve are mutually exclusive")
 
-    stem = "BENCH_stream" if args.stream else "BENCH_proxy"
+    stem = ("BENCH_serve" if args.serve
+            else "BENCH_stream" if args.stream else "BENCH_proxy")
     if args.fresh is None:
         args.fresh = os.path.join(REPO, f"{stem}.quick.json")
     if args.baseline is None:
@@ -131,7 +141,11 @@ def main(argv: list[str] | None = None) -> int:
     if not os.path.exists(args.baseline):
         print(f"[compare_bench] no baseline at {args.baseline}; skipping")
         return 0
-    return compare_stream(args) if args.stream else compare_proxy(args)
+    if args.serve:
+        return compare_metrics(args, "serving")
+    if args.stream:
+        return compare_metrics(args, "stream/futures")
+    return compare_proxy(args)
 
 
 if __name__ == "__main__":

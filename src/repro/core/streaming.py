@@ -38,6 +38,7 @@ from repro.core.proxy import Proxy, extract
 from repro.core.store import Store, StoreFactory, invalidate_resolve_cache
 
 _END = "__stream_end__"
+_UNSET = object()  # sentinel: "use the consumer's constructor timeout"
 
 
 @runtime_checkable
@@ -401,6 +402,31 @@ class StreamProducer:
             publish_event(self.publisher, topic, event)
         self._buffers[topic] = []
 
+    def send_meta(self, topic: str, metadata: dict) -> None:
+        """Publish a *metadata-only* event: no bulk payload, no store put.
+
+        The cheap half of the metadata/bulk split: token deltas, progress
+        ticks, heartbeats — anything small enough to live in the event
+        itself rides the broker alone and never touches the channel.
+        Consumers see it from ``next_with_metadata`` as ``(None, metadata)``;
+        plain proxy iteration (``__next__``) skips such events.
+
+        Bypasses batching; buffered ``send``s for the topic are flushed
+        first so the event order on the topic matches the call order.
+        """
+        self.flush_topic(topic)
+        seq = self._seq.get(topic, 0)
+        self._seq[topic] = seq + 1
+        event = {
+            "topic": topic,
+            "meta_only": True,
+            # snapshot, same reason as flush_topic: the obj fast path
+            # shares the event dict unpickled across subscribers
+            "metadata": dict(metadata),
+            "seq": seq,
+        }
+        publish_event(self.publisher, topic, event)
+
     def flush(self) -> None:
         for topic in list(self._buffers):
             self.flush_topic(topic)
@@ -464,9 +490,11 @@ class StreamConsumer:
             )
             self._thread.start()
 
-    def _next_event(self) -> dict:
+    def _next_event(self, timeout=_UNSET) -> dict:
+        if timeout is _UNSET:
+            timeout = self.timeout
         while True:
-            event = _load_event(self.subscriber.next_event(timeout=self.timeout))
+            event = _load_event(self.subscriber.next_event(timeout=timeout))
             if event.get(_END):
                 # prefetch mode: items may still sit in the ready queue —
                 # only the dequeue of the DONE marker closes the consumer
@@ -481,8 +509,12 @@ class StreamConsumer:
                 continue
             return event
 
-    def _pull(self) -> tuple[Proxy, dict]:
-        event = self._next_event()
+    def _pull(self, timeout=_UNSET) -> tuple[Proxy | None, dict]:
+        event = self._next_event(timeout)
+        if event.get("meta_only"):
+            # metadata-only event (StreamProducer.send_meta): nothing to
+            # resolve — the metadata *is* the message
+            return None, dict(event["metadata"])
         factory = StoreFactory(
             event["key"],
             event["store"],
@@ -518,7 +550,8 @@ class StreamConsumer:
                 self._enqueue((_ERR, e))
                 return
             try:
-                extract(proxy)  # resolve the bulk ahead of the consumer
+                if proxy is not None:  # meta-only events have no bulk
+                    extract(proxy)  # resolve the bulk ahead of the consumer
             except BaseException as e:
                 self._enqueue((_ERR, e))
                 return
@@ -536,9 +569,25 @@ class StreamConsumer:
                 continue
         return False
 
-    def next_with_metadata(self) -> tuple[Proxy, dict]:
+    def next_with_metadata(self, timeout=_UNSET) -> tuple[Proxy | None, dict]:
+        """Next ``(proxy, metadata)`` pair; ``(None, metadata)`` for
+        metadata-only events.  ``timeout`` (seconds, or ``None`` to block
+        forever) overrides the constructor timeout for this call — serving
+        loops pull with their own deadline without rebuilding the consumer.
+        """
+        if self._closed:  # a closed topic stays closed (sticky END)
+            raise StopIteration
         if self._ready is not None:
-            kind, val = self._ready.get()
+            if timeout is _UNSET:
+                kind, val = self._ready.get()
+            else:
+                try:
+                    if timeout is not None and timeout <= 0:
+                        kind, val = self._ready.get_nowait()
+                    else:
+                        kind, val = self._ready.get(timeout=timeout)
+                except queue.Empty:
+                    raise TimeoutError("no stream event within timeout") from None
             if kind != _ITEM:
                 # Terminal markers are sticky: the pipeline thread has
                 # exited, so put the marker back — a retry after
@@ -551,7 +600,7 @@ class StreamConsumer:
                     raise StopIteration
                 raise val
             return val
-        return self._pull()
+        return self._pull(timeout)
 
     def __iter__(self) -> Iterator[Proxy]:
         return self
@@ -559,8 +608,10 @@ class StreamConsumer:
     def __next__(self) -> Proxy:
         if self._closed:
             raise StopIteration
-        proxy, _ = self.next_with_metadata()
-        return proxy
+        while True:
+            proxy, _ = self.next_with_metadata()
+            if proxy is not None:  # plain iteration skips meta-only events
+                return proxy
 
     def close(self) -> None:
         self._stop = True

@@ -1,8 +1,15 @@
 """Serving driver: continuous-batching engine fed by a ProxyStream.
 
-Runs the reduced (smoke) config of any assigned arch on CPU: a client thread
-publishes prompt requests (metadata → broker, bulk prompt → store), the
-engine admits them into slots, decodes greedily, and streams responses back.
+Runs the reduced (smoke) config of any assigned arch on CPU under the
+``serve`` rules profile: a client thread publishes prompt requests
+(metadata → broker, bulk prompt → store) under a backpressure window, the
+engine admits them into slots, decodes greedily, and streams *token deltas*
+plus final completions back; a :class:`repro.serve.client.ServeClient`
+assembles them and reports time-to-first-token.
+
+The client's send window is bounded by completions (in-flight ≤ 2×slots)
+and every blocking edge has a deadline, so a wedged engine or a full store
+surfaces as a loud error instead of a silently deadlocked driver.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --requests 8 --slots 4 --max-new 12
@@ -25,11 +32,10 @@ from repro.core.streaming import (
     StreamConsumer,
     StreamProducer,
 )
-from repro.dist.sharding import materialize_params
-from repro.launch.mesh import make_host_mesh, rules_for
+from repro.dist.sharding import materialize_params, sharding_tree
 from repro.models.api import build_model
-from repro.models.layers import ModelContext
-from repro.serve.engine import ServeEngine
+from repro.serve.client import ServeClient
+from repro.serve.engine import ServeEngine, serve_context
 
 
 def main(argv=None) -> int:
@@ -40,38 +46,73 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--send-timeout", type=float, default=60.0,
+                    help="client-side bound on one admission-window wait")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
-    mesh = make_host_mesh()
-    ctx = ModelContext(cfg, mesh, rules_for(mesh))
+    ctx = serve_context(cfg)  # serve rules profile: kv_seq over model axis
     model = build_model(ctx)
-    with mesh:
+    with ctx.mesh:
         params = materialize_params(model.param_specs(), jax.random.PRNGKey(0))
+        if ctx.mesh.size > 1:
+            params = jax.device_put(
+                params, sharding_tree(model.param_specs(), ctx.rules, ctx.mesh)
+            )
 
-    ns = "serve-demo"
-    store = Store("requests")
+    from repro.core.connectors import new_key
+
+    ns = f"serve-demo-{new_key()}"  # unique per run: re-entrant in-process
+    store = Store(f"{ns}-requests")
     producer = StreamProducer(QueuePublisher(ns), {"requests": store})
-    consumer = StreamConsumer(QueueSubscriber("requests", ns), timeout=0.05)
-    resp_store = Store("responses")
+    consumer = StreamConsumer(QueueSubscriber("requests", ns), timeout=30.0)
+    resp_store = Store(f"{ns}-responses")
     resp_producer = StreamProducer(QueuePublisher(ns), {"responses": resp_store})
+    resp_consumer = StreamConsumer(QueueSubscriber("responses", ns), timeout=30.0)
 
     rng = np.random.default_rng(0)
+    # Backpressure window: a send blocks once 2×slots requests are in
+    # flight and is released per completion — the client can never run the
+    # store/broker arbitrarily ahead of the engine (a blocked client used
+    # to deadlock the driver: run() never returned, t.join() never ran).
+    window = threading.Semaphore(2 * args.slots)
+    client = ServeClient(resp_consumer, on_done=lambda *_: window.release())
+    sent_at: dict[str, float] = {}
+    client_err: list[BaseException] = []
 
-    def client():
-        for i in range(args.requests):
-            prompt = rng.integers(1, cfg.vocab, args.prompt_len).astype(np.int32)
-            producer.send(
-                "requests",
-                {"prompt": prompt},
-                metadata={"req_id": f"r{i}", "max_new_tokens": args.max_new},
-            )
-            producer.flush_topic("requests")
-            time.sleep(0.01)
-        producer.close_topic("requests")
+    def send_requests():
+        try:
+            for i in range(args.requests):
+                if not window.acquire(timeout=args.send_timeout):
+                    raise TimeoutError(
+                        f"admission window stalled for {args.send_timeout}s "
+                        f"(engine wedged?)"
+                    )
+                prompt = rng.integers(
+                    1, cfg.vocab, args.prompt_len
+                ).astype(np.int32)
+                sent_at[f"r{i}"] = time.perf_counter()
+                producer.send(
+                    "requests",
+                    {"prompt": prompt},
+                    metadata={"req_id": f"r{i}", "max_new_tokens": args.max_new},
+                )
+                producer.flush_topic("requests")
+            producer.close_topic("requests")
+        except BaseException as e:  # pragma: no cover - error path
+            client_err.append(e)
+            producer.close_topic("requests")
 
-    t = threading.Thread(target=client, daemon=True)
-    t.start()
+    def collect_responses():
+        try:
+            client.collect()  # until the engine closes the response topic
+        except BaseException as e:  # pragma: no cover - error path
+            client_err.append(e)
+
+    sender = threading.Thread(target=send_requests, daemon=True)
+    collector = threading.Thread(target=collect_responses, daemon=True)
+    sender.start()
+    collector.start()
 
     engine = ServeEngine(
         ctx, params, slots=args.slots, max_len=args.max_len, eos_id=-1
@@ -79,17 +120,37 @@ def main(argv=None) -> int:
     t0 = time.perf_counter()
     completed = engine.run(consumer, resp_producer)
     wall = time.perf_counter() - t0
-    t.join()
+    # Bounded joins: the engine is done, so a still-blocked client is a bug
+    # worth failing loudly on, not waiting forever for.
+    sender.join(timeout=30)
+    collector.join(timeout=30)
+    if sender.is_alive() or collector.is_alive():
+        raise RuntimeError("client threads did not drain after engine exit")
+    if client_err:
+        raise client_err[0]
 
     lat = [c["latency"] for c in completed.values()]
+    ttfts = list(client.ttft_s(sent_at).values())
     print(
         f"[serve] {args.arch} (smoke): {len(completed)}/{args.requests} requests, "
         f"{engine.metrics['tokens']} tokens in {wall:.1f}s "
         f"({engine.metrics['tokens']/wall:.1f} tok/s); "
         f"mean latency {np.mean(lat):.2f}s; "
+        f"mean ttft {np.mean(ttfts):.3f}s (streamed deltas); "
         f"pages in use at exit: {engine.pages.pages_in_use()}"
     )
-    ok = len(completed) == args.requests and engine.pages.pages_in_use() == 0
+    streamed_ok = all(
+        r.stream_tokens == r.result["tokens"]
+        for r in client.results.values()
+        if r.result is not None
+    )
+    ok = (
+        len(completed) == args.requests
+        and engine.pages.pages_in_use() == 0
+        and len(client.results) == args.requests
+        and streamed_ok
+    )
+    engine.close()
     return 0 if ok else 1
 
 

@@ -2,35 +2,71 @@
 
 Architecture = the paper's Fig 4 applied to inference:
 
-- requests arrive on a **ProxyStream**: the scheduler (dispatcher) consumes
-  *metadata only* (request id, prompt length, max tokens); the prompt bulk
-  stays in the store until the engine actually admits the request.
-- each admitted sequence's control-plane state (pages, prompt) is
-  **ownership**-managed (kvcache.PageTable) — completion deterministically
-  frees everything.
-- results are published back on a response stream; the paper's persistent-
-  inference-task DeepDriveMD integration is exactly this loop (one
-  long-lived engine, streamed batches in/out, no per-task model reloads).
+- requests arrive on a **ProxyStream**: the admission thread consumes
+  *metadata only* (request id, prompt length, max tokens) and resolves the
+  bulk prompt just-in-time, overlapped with the decode loop;
+- each admitted sequence's control-plane state (page list, per-page KV
+  cells) is **ownership**-managed (kvcache.PageTable) — completion
+  deterministically frees everything, including the store memory;
+- results stream back on a response topic as **incremental token deltas**
+  (metadata-only events, one per token) plus a final bulk completion
+  proxy — a client sees its first token the moment the prefill admits the
+  request, not a whole generation later (serve/client.ServeClient
+  assembles them).
 
-Decode is a single jit'd batched step over slot-packed caches; slots admit
-new requests as others finish (continuous batching).
+The engine loop is *notification-driven*: no sleep-poll anywhere.  A puller
+thread blocks in the request consumer (broker condition wait / connector
+``wait_for`` under PR 3's protocol) and hands requests over a condition
+variable; the decode loop blocks on that condition only when every slot is
+idle, and otherwise drains admissions between jit'd decode steps (the
+decode deadline: an active batch never waits on the request stream).
+
+Decode is a single jit'd batched step over slot-packed caches; admission
+writes one slot's prefilled cache into the batch with a jit'd, donated
+``dynamic_update_index_in_dim`` update — O(slot), traced once for every
+slot index, instead of an op-by-op full-tree ``.at[:, i].set`` rebuild.
+Admission is backpressured through PageTable reservations: a request is
+admitted only when the pool can cover its *whole* generation, so decode
+never OOMs mid-sequence; requests the pool can never fit are rejected onto
+the response stream as errors.
 """
 from __future__ import annotations
 
+import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.proxy import Proxy, extract, is_resolved
+from repro.core.proxy import extract
 from repro.core.store import Store
 from repro.core.streaming import StreamConsumer, StreamProducer
+from repro.dist.sharding import materialize_params, sharding_tree
 from repro.models.api import build_model
 from repro.models.layers import ModelContext
-from repro.serve.kvcache import PageTable
+
+# How often the puller/idle waits re-check stop/exit flags.  This is NOT a
+# poll interval for events — both waits are notification-driven (broker
+# condition / connector wait_for) and wake immediately on traffic; the tick
+# only bounds how long shutdown can lag.
+_WAIT_TICK = 0.25
+
+
+def serve_context(cfg, mesh=None, *, use_kernels: bool = False) -> ModelContext:
+    """ModelContext with the ``serve`` rules profile applied.
+
+    The serve profile shards the KV cache's sequence axis over the model
+    axis (``kv_seq`` wins the model axis; decode is KV-bound) — the rules
+    flow into both param placement and the cache shardings the engine
+    applies in :meth:`ServeEngine._ensure_cache`.
+    """
+    from repro.launch.mesh import make_host_mesh, rules_for
+
+    mesh = mesh if mesh is not None else make_host_mesh()
+    return ModelContext(cfg, mesh, rules_for(mesh, "serve"), use_kernels)
 
 
 @dataclass
@@ -46,6 +82,7 @@ class SlotState:
     req: Request | None = None
     pos: int = 0  # current length (prompt + generated)
     generated: list[int] = field(default_factory=list)
+    first_token_at: float | None = None
 
 
 class ServeEngine:
@@ -58,26 +95,63 @@ class ServeEngine:
         max_len: int = 128,
         page_size: int = 16,
         eos_id: int = 0,
+        model=None,
+        kv_store: Store | None = None,
     ):
+        from repro.core.connectors import new_key
+        from repro.serve.kvcache import PageTable
+
         self.ctx = ctx
         self.cfg = ctx.cfg
-        self.model = build_model(ctx)
+        self.model = model if model is not None else build_model(ctx)
         self.params = params
         self.slots = [SlotState() for _ in range(slots)]
         self.max_len = max_len
         self.eos_id = eos_id
-        self.kv_store = Store(f"kv-{id(self)}")
+        self._owns_store = kv_store is None
+        self.kv_store = kv_store if kv_store is not None else Store(f"kv-{new_key()}")
         self.pages = PageTable(
             num_pages=slots * (max_len // page_size),
             page_size=page_size,
             store=self.kv_store,
+            page_bytes=self._page_bytes(page_size),
         )
-        self._decode = jax.jit(
-            lambda p, c, t, lens: self._decode_body(p, c, t, lens)
+        self._cache_specs = self.model.cache_specs(len(self.slots), self.max_len)
+        # serve-profile shardings for the batched cache (kv_seq over the
+        # model axis); a no-op placement on the 1-device smoke mesh
+        self._cache_shardings = sharding_tree(self._cache_specs, ctx.rules, ctx.mesh)
+        # cache donated on the per-token hot path too: the step rewrites
+        # the KV buffers in place instead of allocating a full copy per
+        # token (self._cache is reassigned from the result, so the donated
+        # input is never reused)
+        self._decode = jax.jit(self._decode_body, donate_argnums=(1,))
+        # per-slot cache insert: donated so XLA updates the batch buffers in
+        # place; the slot index is traced, so one compilation covers every
+        # slot instead of re-lowering per admission target
+        self._admit_cache = jax.jit(self._admit_body, donate_argnums=(0,))
+        self._prefill = jax.jit(
+            lambda p, tokens: self.model.prefill(p, tokens, self.max_len)
         )
         self._cache = None  # stacked (L, B, S, ...) pytree
         self.completed: dict[str, dict] = {}
-        self.metrics = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+        self.rejected: dict[str, str] = {}
+        self.metrics = {
+            "prefills": 0,
+            "decode_steps": 0,
+            "tokens": 0,
+            "loop_iters": 0,
+            "idle_waits": 0,
+            "queued_admissions": 0,
+            "max_pending": 0,
+            "malformed_events": 0,
+        }
+
+    def _page_bytes(self, page_size: int) -> int:
+        """Host-side KV bytes one page represents (the PageTable cell size)."""
+        from repro.dist.sharding import count_params
+
+        per_token = count_params(self.model.cache_specs(1, 1))
+        return page_size * per_token * jnp.dtype(self.cfg.dtype).itemsize
 
     # -- model glue ---------------------------------------------------------
     def _decode_body(self, params, cache, tokens, lens):
@@ -87,7 +161,6 @@ class ServeEngine:
         for continuous batching each slot has its own position, so we decode
         with per-slot gather/scatter via vmap over the batch axis.
         """
-        B = tokens.shape[0]
 
         def one(cache_b, tok_b, len_b):
             c = jax.tree.map(lambda x: x[:, None], cache_b)  # re-add batch dim
@@ -99,135 +172,336 @@ class ServeEngine:
         )(cache, tokens, lens)
         return new_cache, logits
 
+    def _admit_body(self, cache, one, slot_idx):
+        """Insert a (batch=1) prefill cache at slot ``slot_idx``: a dynamic
+        per-slot update on donated buffers, never a full-tree rebuild."""
+        return jax.tree.map(
+            lambda full, o: jax.lax.dynamic_update_index_in_dim(
+                full, o[:, 0].astype(full.dtype), slot_idx, 1
+            ),
+            cache,
+            one,
+        )
+
     def _ensure_cache(self):
         if self._cache is None:
-            from repro.dist.sharding import materialize_params
+            cache = materialize_params(self._cache_specs, jax.random.PRNGKey(0))
+            self._cache = jax.device_put(cache, self._cache_shardings)
 
-            specs = self.model.cache_specs(len(self.slots), self.max_len)
-            self._cache = materialize_params(specs, jax.random.PRNGKey(0))
+    # -- request admission --------------------------------------------------
+    def admit(self, req: Request, slot_idx: int) -> int:
+        """Prefill into ``slot_idx``; returns the request's *first* token.
 
-    # -- request admission ------------------------------------------------------
-    def admit(self, req: Request, slot_idx: int):
-        cfg = self.cfg
+        The first generated token comes from the prefill logits — it exists
+        the moment the request is admitted, before any decode step (the
+        decode loop's job is tokens 2..n, each fed back at its own per-slot
+        position).
+        """
         slot = self.slots[slot_idx]
+        total = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        self.pages.allocate(req.req_id, len(req.prompt), reserve_tokens=total)
         prompt = jnp.asarray(req.prompt[None], jnp.int32)
-        self.pages.allocate(req.req_id, len(req.prompt))
-        _, cache1 = self.model.prefill(self.params, prompt, self.max_len)
+        logits, cache1 = self._prefill(self.params, prompt)
         self._ensure_cache()
-        # write this slot's prefill cache into the batched cache
-        self._cache = jax.tree.map(
-            lambda full, one: full.at[:, slot_idx].set(one[:, 0]), self._cache, cache1
-        )
+        self._cache = self._admit_cache(self._cache, cache1, jnp.int32(slot_idx))
+        first = int(np.argmax(np.asarray(logits[0, : self.cfg.vocab], np.float32)))
         slot.req = req
+        # pos = KV entries in the cache; the first token's KV is written by
+        # the decode step that consumes it
         slot.pos = len(req.prompt)
-        slot.generated = []
+        slot.generated = [first]
+        slot.first_token_at = time.perf_counter()
         self.metrics["prefills"] += 1
+        self.metrics["tokens"] += 1
+        return first
 
     def _finish(self, slot_idx: int):
         slot = self.slots[slot_idx]
         req = slot.req
-        self.pages.free_sequence(req.req_id)  # ownership free → pages recycled
+        self.pages.free_sequence(req.req_id)  # ownership free → pages + store
+        now = time.perf_counter()
         self.completed[req.req_id] = {
             "tokens": list(slot.generated),
-            "latency": time.perf_counter() - req.arrived,
+            "latency": now - req.arrived,
+            "ttft": (slot.first_token_at or now) - req.arrived,
         }
         slot.req = None
         slot.pos = 0
         slot.generated = []
+        slot.first_token_at = None
 
-    # -- main loop -----------------------------------------------------------------
+    # -- main loop ----------------------------------------------------------
     def run(
         self,
         request_consumer: StreamConsumer,
         response_producer: StreamProducer | None = None,
         *,
         max_requests: int | None = None,
-        greedy: bool = True,
+        response_topic: str = "responses",
+        stream_deltas: bool = True,
+        close_responses: bool = True,
     ):
-        """Serve until the request stream closes and all slots drain."""
-        pending: list[Request] = []
-        stream_open = True
-        served = 0
+        """Serve until the request stream closes (or ``max_requests`` have
+        been served) and all slots drain.  Re-entrant: a later ``run`` on a
+        consumer that resumes the topic continues where this one stopped
+        (the engine-restart path).
 
-        def pull_requests():
-            nonlocal stream_open
-            while stream_open:
+        No polling: while idle the loop sleeps on a condition variable the
+        puller thread notifies; while decoding it never waits on the
+        request stream at all.
+        """
+        pending: deque[Request] = deque()
+        cond = threading.Condition()
+        state = {
+            "open": True, "pulled": 0, "error": None, "stop": False,
+            "failed": [],  # (req_id, why) from the puller → rejected here
+        }
+
+        def want_more() -> bool:
+            return max_requests is None or state["pulled"] < max_requests
+
+        # Pull-side backpressure: resolve at most this many requests ahead
+        # of admission (the seed engine's slots-bounded drain, kept) — a
+        # 100k-deep request topic must not materialize 100k prompt arrays.
+        high_water = 2 * len(self.slots)
+
+        def pull_loop():
+            # Blocks in the consumer (broker condition wait / connector
+            # wait_for); the tick only makes stop/max_requests responsive.
+            while True:
+                with cond:
+                    while (
+                        not state["stop"]
+                        and state["open"]
+                        and want_more()
+                        and len(pending) >= high_water
+                    ):
+                        cond.wait(_WAIT_TICK)  # admission drains → notify
+                    if state["stop"] or not (state["open"] and want_more()):
+                        return
                 try:
-                    proxy, meta = request_consumer.next_with_metadata()
+                    proxy, meta = request_consumer.next_with_metadata(
+                        timeout=_WAIT_TICK
+                    )
                 except StopIteration:
-                    stream_open = False
-                    break
+                    with cond:
+                        state["open"] = False
+                        cond.notify_all()
+                    return
                 except TimeoutError:
-                    break
-                # metadata-only dispatch: bulk prompt resolves here, in the
-                # engine, not in any intermediate scheduler
-                body = extract(proxy)
-                pending.append(
-                    Request(
-                        req_id=meta["req_id"],
+                    continue
+                except BaseException as e:  # stream-level failure (broker,
+                    # subscriber): fatal for the run, surfaced by run() —
+                    # never a silently dead puller and a hung engine
+                    with cond:
+                        state["error"] = e
+                        state["open"] = False
+                        cond.notify_all()
+                    return
+                if proxy is None:
+                    continue  # stray meta-only event: not a request
+                # Per-request failures are NOT fatal: one tenant's evicted
+                # payload or missing field must not abort everyone else's
+                # generation.  Addressable bad requests become rejections;
+                # unaddressable events (no req_id) can only be counted.
+                req_id = None
+                try:
+                    req_id = meta["req_id"]
+                    # metadata-only dispatch: the bulk prompt resolves
+                    # here, in the engine — overlapped with the decode
+                    # loop, never in an intermediate scheduler
+                    body = extract(proxy)
+                    req = Request(
+                        req_id=req_id,
                         prompt=np.asarray(body["prompt"], np.int32),
                         max_new_tokens=int(meta.get("max_new_tokens", 16)),
                     )
-                )
-                if len(pending) >= len(self.slots):
-                    break
-
-        while True:
-            pull_requests()
-            # admit into free slots
-            for i, slot in enumerate(self.slots):
-                if slot.req is None and pending:
-                    self.admit(pending.pop(0), i)
-            active = [i for i, s in enumerate(self.slots) if s.req is not None]
-            if not active:
-                if not stream_open and not pending:
-                    break
-                if max_requests is not None and served >= max_requests:
-                    break
-                time.sleep(0.005)
-                continue
-            # batched decode step (idle slots decode garbage at pos 0 — masked)
-            tokens = np.zeros((len(self.slots),), np.int32)
-            lens = np.zeros((len(self.slots),), np.int32)
-            for i, s in enumerate(self.slots):
-                if s.req is not None:
-                    last = (
-                        s.generated[-1]
-                        if s.generated
-                        else int(s.req.prompt[-1])
+                except BaseException as e:
+                    with cond:
+                        state["pulled"] += 1
+                        if req_id is None:
+                            self.metrics["malformed_events"] += 1
+                        else:
+                            state["failed"].append(
+                                (req_id, f"bad request: {e!r}")
+                            )
+                        cond.notify_all()
+                    continue
+                with cond:
+                    state["pulled"] += 1
+                    pending.append(req)
+                    self.metrics["max_pending"] = max(
+                        self.metrics["max_pending"], len(pending)
                     )
-                    tokens[i] = last
-                    lens[i] = s.pos
-            self._ensure_cache()
-            self._cache, logits = self._decode(
-                self.params, self._cache, jnp.asarray(tokens[:, None]),
-                jnp.asarray(lens),
+                    cond.notify_all()
+
+        puller = threading.Thread(target=pull_loop, daemon=True)
+        puller.start()
+
+        def send_done(req_id: str):
+            if response_producer is None:
+                return
+            entry = self.completed[req_id]
+            response_producer.send(
+                response_topic,
+                {"req_id": req_id, **entry},
+                metadata={
+                    "req_id": req_id,
+                    "kind": "done",
+                    "n_tokens": len(entry["tokens"]),
+                },
             )
-            self.metrics["decode_steps"] += 1
-            logits_np = np.asarray(logits, np.float32)
-            for i in active:
-                s = self.slots[i]
-                nxt = int(np.argmax(logits_np[i, : self.cfg.vocab]))
-                s.generated.append(nxt)
-                s.pos += 1
-                self.pages.extend(s.req.req_id, s.pos)
-                self.metrics["tokens"] += 1
-                done = (
-                    nxt == self.eos_id
-                    or len(s.generated) >= s.req.max_new_tokens
-                    or s.pos >= self.max_len - 1
+            response_producer.flush_topic(response_topic)
+
+        def send_reject(req_id: str, why: str):
+            self.rejected[req_id] = why
+            if response_producer is not None:
+                response_producer.send_meta(
+                    response_topic,
+                    {"req_id": req_id, "kind": "error", "error": why},
                 )
-                if done:
-                    req_id = s.req.req_id
-                    self._finish(i)
-                    served += 1
-                    if response_producer is not None:
-                        response_producer.send(
-                            "responses",
-                            {"req_id": req_id, **self.completed[req_id]},
-                            metadata={"req_id": req_id},
+
+        def send_delta(req_id: str, token: int, index: int):
+            if stream_deltas and response_producer is not None:
+                # incremental token delta: metadata-only, no store put — the
+                # client's first token beats the full completion
+                response_producer.send_meta(
+                    response_topic,
+                    {"req_id": req_id, "kind": "delta",
+                     "token": token, "index": index},
+                )
+
+        def finish_if_done(slot_idx: int) -> bool:
+            s = self.slots[slot_idx]
+            last = s.generated[-1]
+            done = (
+                last == self.eos_id
+                or len(s.generated) >= s.req.max_new_tokens
+                or s.pos >= self.max_len - 1
+            )
+            if done:
+                req_id = s.req.req_id
+                self._finish(slot_idx)
+                send_done(req_id)
+            return done
+
+        def admit_pending() -> int:
+            admitted = 0
+            with cond:
+                failed, state["failed"] = state["failed"], []
+            for rid, why in failed:  # puller-detected per-request failures
+                send_reject(rid, why)
+            while True:
+                target = reject = None
+                with cond:
+                    if not pending:
+                        return admitted
+                    req = pending[0]
+                    total = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+                    if req.req_id in self.pages.live_sequences():
+                        pending.popleft()  # one bad request must not crash
+                        reject = (            # every other tenant's serve
+                            f"req_id {req.req_id!r} is already being served"
                         )
-                        response_producer.flush_topic("responses")
-        if response_producer is not None:
-            response_producer.close_topic("responses")
+                    elif len(req.prompt) > self.max_len - 1:
+                        pending.popleft()  # prompt alone overflows the cache
+                        reject = (
+                            f"prompt of {len(req.prompt)} tokens exceeds "
+                            f"max_len-1 ({self.max_len - 1})"
+                        )
+                    elif self.pages.pages_needed(total) > self.pages.num_pages:
+                        pending.popleft()  # can never fit: reject, don't wedge
+                        reject = (
+                            f"request needs {self.pages.pages_needed(total)} "
+                            f"pages; the pool has {self.pages.num_pages}"
+                        )
+                    elif not self.pages.can_admit(total):
+                        # backpressure: head-of-line waits for pages (FIFO —
+                        # later requests must not starve an earlier one)
+                        self.metrics["queued_admissions"] += 1
+                        return admitted
+                    else:
+                        free = [i for i, s in enumerate(self.slots) if s.req is None]
+                        if not free:
+                            return admitted
+                        pending.popleft()
+                        target = free[0]
+                    cond.notify_all()  # wake a pull blocked at high water
+                if reject is not None:
+                    send_reject(req.req_id, reject)
+                    continue
+                first = self.admit(req, target)
+                send_delta(req.req_id, first, 0)
+                finish_if_done(target)  # 1-token request: done at admission
+                admitted += 1
+
+        def serve_loop():
+            while True:
+                self.metrics["loop_iters"] += 1
+                admit_pending()
+                active = [
+                    i for i, s in enumerate(self.slots) if s.req is not None
+                ]
+                if not active:
+                    with cond:
+                        if state["error"] is not None:
+                            raise state["error"]
+                        if not pending and not state["failed"]:
+                            # every pulled request is resolved once pending
+                            # is empty and no slot is active
+                            if not state["open"] or not want_more():
+                                return
+                            # notification wait: woken by the puller on
+                            # arrival or close; the tick bounds shutdown,
+                            # not wake-up
+                            self.metrics["idle_waits"] += 1
+                            cond.wait(_WAIT_TICK)
+                    continue
+                # batched decode step: every slot's last generated token is
+                # fed back at that slot's own position (idle slots decode
+                # garbage at pos 0 — their outputs are masked by never
+                # being read)
+                tokens = np.zeros((len(self.slots),), np.int32)
+                lens = np.zeros((len(self.slots),), np.int32)
+                for i in active:
+                    s = self.slots[i]
+                    tokens[i] = s.generated[-1]
+                    lens[i] = s.pos
+                self._ensure_cache()
+                self._cache, logits = self._decode(
+                    self.params, self._cache, jnp.asarray(tokens[:, None]),
+                    jnp.asarray(lens),
+                )
+                self.metrics["decode_steps"] += 1
+                logits_np = np.asarray(logits, np.float32)
+                for i in active:
+                    s = self.slots[i]
+                    nxt = int(np.argmax(logits_np[i, : self.cfg.vocab]))
+                    s.generated.append(nxt)
+                    s.pos += 1  # the fed-back token's KV is now cached
+                    self.pages.extend(s.req.req_id, s.pos)
+                    self.metrics["tokens"] += 1
+                    send_delta(s.req.req_id, nxt, len(s.generated) - 1)
+                    finish_if_done(i)
+
+        try:
+            serve_loop()
+        finally:
+            # Whatever exits the loop — drain, max_requests, or an
+            # exception (decode failure, a response-store error) — the
+            # puller must die with this run: an orphaned puller would keep
+            # stealing requests into a dead run's pending deque forever.
+            with cond:
+                state["stop"] = True
+                cond.notify_all()
+            puller.join(timeout=5 * _WAIT_TICK)
+        if response_producer is not None and close_responses:
+            response_producer.close_topic(response_topic)
         return self.completed
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        for seq in self.pages.live_sequences():
+            self.pages.free_sequence(seq)
+        if self._owns_store:  # never close a store the caller handed in
+            self.kv_store.close()

@@ -3,72 +3,143 @@
 The device-side KV cache is a dense (L, B_slots, S_max, …) tensor managed by
 XLA; what leaks in real serving systems is the *control-plane* state — which
 sequence owns which pages, when they can be reused, and the host-side
-prompt/result payloads.  Here every sequence's page list is an
-:class:`OwnedProxy` in a Store: finishing a sequence frees the owner, which
-deterministically evicts the metadata and returns pages to the free pool —
-the MOF-generation behaviour from the paper's Fig 10 (no manual bookkeeping,
-no leaks), with runtime borrow rules protecting in-flight reads.
+prompt/result payloads.  Here every sequence carries real store state:
+
+- a *page-list owner* (:class:`OwnedProxy` over ``{"seq", "pages"}``) — the
+  control-plane record, mutated through the ownership API on extend;
+- one *Owned KV cell per page* in the store (``page_bytes`` of backing
+  memory each, keyed ``kvpage-{seq}-{page}``) — the host-side paged KV
+  residency.  ``free_sequence`` frees every owner, which deterministically
+  evicts the cells and **returns the store memory**, not just the page ids
+  — the MOF-generation behaviour from the paper's Fig 10 (no manual
+  bookkeeping, no leaks), with runtime borrow rules protecting in-flight
+  reads.
+
+Admission control rides on *reservations*: ``allocate(seq, tokens,
+reserve_tokens=total)`` holds back the pages a sequence may grow into, so
+``can_admit``/``pages_available`` answer "will this request ever OOM
+mid-decode?" at admission time — backpressure instead of a MemoryError
+halfway through a generation.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.core.ownership import OwnedProxy, borrow, free, owned_proxy, release
+from repro.core.ownership import OwnedProxy, borrow, free, owned_proxy, release, update
 from repro.core.store import Store
 
 
 @dataclass
 class PageTable:
-    """Free-list page allocator for one model's KV pool."""
+    """Free-list page allocator for one model's KV pool.
+
+    ``pages_in_use() + pages_free() == num_pages`` always; reserved pages
+    are *free but spoken for* (``pages_available`` subtracts them), so an
+    admitted sequence's ``extend`` within its reservation can never fail.
+    """
 
     num_pages: int
     page_size: int
     store: Store
+    page_bytes: int = 0  # per-page KV backing in the store (0 → id marker)
     _free: list[int] = field(default_factory=list)
     _owners: dict[str, OwnedProxy] = field(default_factory=dict)
+    _cells: dict[str, dict[int, OwnedProxy]] = field(default_factory=dict)
+    _reserved: dict[str, int] = field(default_factory=dict)
 
     def __post_init__(self):
         self._free = list(range(self.num_pages))
 
-    @property
+    # -- accounting ----------------------------------------------------------
     def pages_free(self) -> int:
+        """Pages in the free list (including reserved-but-unallocated)."""
         return len(self._free)
 
     def pages_in_use(self) -> int:
         return self.num_pages - len(self._free)
 
+    def pages_reserved(self) -> int:
+        """Free pages already promised to admitted sequences' growth."""
+        return sum(self._reserved.values())
+
+    def pages_available(self) -> int:
+        """Pages a *new* sequence may claim: free minus reserved."""
+        return len(self._free) - self.pages_reserved()
+
     def pages_needed(self, tokens: int) -> int:
         return -(-tokens // self.page_size)
 
-    def allocate(self, seq_id: str, tokens: int) -> list[int]:
+    def can_admit(self, tokens: int) -> bool:
+        """Admission check: can a sequence of ``tokens`` total length be
+        allocated *and grown to completion* without exhausting the pool?"""
+        return self.pages_needed(tokens) <= self.pages_available()
+
+    # -- store cells ---------------------------------------------------------
+    def page_key(self, seq_id: str, page: int) -> str:
+        return f"kvpage-{seq_id}-{page}"
+
+    def _make_cells(self, seq_id: str, pages: list[int]) -> None:
+        cells = self._cells.setdefault(seq_id, {})
+        for p in pages:
+            payload = bytes(self.page_bytes) if self.page_bytes else p
+            cells[p] = owned_proxy(self.store, payload, key=self.page_key(seq_id, p))
+
+    # -- allocate / extend / free -------------------------------------------
+    def allocate(
+        self, seq_id: str, tokens: int, *, reserve_tokens: int | None = None
+    ) -> list[int]:
+        """Claim pages for ``tokens``; optionally reserve growth headroom.
+
+        ``reserve_tokens`` is the total length the sequence may reach
+        (prompt + max new tokens): the delta beyond ``tokens`` stays in the
+        free list but is held out of ``pages_available`` until this
+        sequence extends into it or frees.
+        """
+        if seq_id in self._owners:
+            raise ValueError(f"sequence {seq_id!r} already allocated")
         n = self.pages_needed(tokens)
-        if n > len(self._free):
+        r = max(n, self.pages_needed(reserve_tokens)) if reserve_tokens else n
+        if r > self.pages_available():
             raise MemoryError(
-                f"KV pool exhausted: need {n} pages, {len(self._free)} free"
+                f"KV pool exhausted: need {r} pages (incl. reservation), "
+                f"{self.pages_available()} available "
+                f"({len(self._free)} free, {self.pages_reserved()} reserved)"
             )
         pages = [self._free.pop() for _ in range(n)]
+        self._reserved[seq_id] = r - n
         self._owners[seq_id] = owned_proxy(
             self.store, {"seq": seq_id, "pages": pages}, key=f"pages-{seq_id}"
         )
+        self._make_cells(seq_id, pages)
         return pages
 
     def extend(self, seq_id: str, new_total_tokens: int) -> list[int]:
-        owner = self._owners[seq_id]
-        meta = dict(owner)
-        have = len(meta["pages"])
-        need = self.pages_needed(new_total_tokens)
-        added = []
-        if need > have:
-            if need - have > len(self._free):
-                raise MemoryError("KV pool exhausted on extend")
-            added = [self._free.pop() for _ in range(need - have)]
-            meta["pages"] = meta["pages"] + added
-            # write-back through the ownership API
-            from repro.core.ownership import update
-            from repro.core.proxy import extract
+        """Grow ``seq_id`` to cover ``new_total_tokens``; returns new pages.
 
-            owner["pages"] = meta["pages"]
-            update(owner)
+        Growth within the sequence's reservation always succeeds; growth
+        beyond it competes with everyone else's unreserved pages.
+        """
+        owner = self._owners[seq_id]
+        have = len(owner["pages"])
+        need = self.pages_needed(new_total_tokens)
+        if need <= have:
+            return []
+        extra = need - have
+        own_reserved = self._reserved.get(seq_id, 0)
+        beyond_reservation = max(0, extra - own_reserved)
+        if beyond_reservation > self.pages_available():
+            raise MemoryError(
+                f"KV pool exhausted on extend of {seq_id!r}: need {extra} "
+                f"pages ({own_reserved} reserved, "
+                f"{self.pages_available()} available)"
+            )
+        added = [self._free.pop() for _ in range(extra)]
+        self._reserved[seq_id] = max(0, own_reserved - extra)
+        # write-back through the ownership API (the owner is the one legal
+        # mutator of the page-list record)
+        owner["pages"] = owner["pages"] + added
+        update(owner)
+        self._make_cells(seq_id, added)
         return added
 
     def pages_of(self, seq_id: str) -> list[int]:
@@ -79,10 +150,19 @@ class PageTable:
             release(ref)
 
     def free_sequence(self, seq_id: str) -> None:
-        """End of sequence: the owner frees; pages return to the pool."""
-        owner = self._owners.pop(seq_id)
+        """End of sequence: every owner frees; pages *and their store
+        memory* return to the pool (raises OwnershipError while borrowed).
+
+        The owner frees *before* any table state mutates, so a rejected
+        free (outstanding borrow) leaves the sequence fully intact and
+        retryable — no leaked pages, no wedged retry."""
+        owner = self._owners[seq_id]
         pages = list(owner["pages"])
-        free(owner)  # raises OwnershipError if a borrow is still outstanding
+        free(owner)  # the only call that can raise: state untouched so far
+        self._owners.pop(seq_id)
+        for cell in self._cells.pop(seq_id, {}).values():
+            free(cell)  # evicts the KV backing from the store
+        self._reserved.pop(seq_id, None)
         self._free.extend(pages)
 
     def live_sequences(self) -> list[str]:

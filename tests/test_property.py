@@ -194,6 +194,124 @@ class TestElasticPlanInvariants:
         assert b.model == a.model  # pinned on both sides of the loss
 
 
+class TestPageTableInvariants:
+    """Serving KV-page allocator properties (PR 5): no double assignment,
+    conservation, total reclamation, monotone extends, reservation safety."""
+
+    def _pt(self, num_pages=12, page_size=4):
+        from repro.serve.kvcache import PageTable
+
+        store = Store(f"ptp-{np.random.randint(1e9)}")
+        return (
+            PageTable(
+                num_pages=num_pages, page_size=page_size, store=store,
+                page_bytes=8,
+            ),
+            store,
+        )
+
+    @SETTINGS
+    @given(ops=st.lists(st.integers(0, 10**6), max_size=40))
+    def test_allocator_invariants_hold_under_any_op_sequence(self, ops):
+        """allocate/extend/free in any order: pages_in_use + pages_free ==
+        num_pages, no page owned twice, reservations never negative."""
+        pt, store = self._pt()
+        live: dict[str, int] = {}
+        next_id = 0
+        for code in ops:
+            kind, arg = code % 3, code // 3
+            if kind == 0:
+                tokens = arg % 20 + 1
+                sid = f"s{next_id}"
+                next_id += 1
+                try:
+                    pt.allocate(sid, tokens, reserve_tokens=tokens + arg % 9)
+                except MemoryError:
+                    assert pt.pages_needed(tokens) > pt.pages_available() or (
+                        pt.pages_needed(tokens + arg % 9) > pt.pages_available()
+                    )
+                else:
+                    live[sid] = tokens
+            elif kind == 1 and live:
+                sid = sorted(live)[arg % len(live)]
+                before = pt.pages_of(sid)
+                new_total = live[sid] + arg % 11
+                try:
+                    pt.extend(sid, new_total)
+                except MemoryError:
+                    pass
+                else:
+                    after = pt.pages_of(sid)
+                    assert after[: len(before)] == before  # extend is monotone
+                    assert len(after) == max(
+                        len(before), pt.pages_needed(new_total)
+                    )
+                    live[sid] = max(live[sid], new_total)
+            elif kind == 2 and live:
+                sid = sorted(live)[arg % len(live)]
+                pt.free_sequence(sid)
+                del live[sid]
+            # invariants after every single operation
+            assert pt.pages_in_use() + pt.pages_free() == pt.num_pages
+            owned = [p for s in live for p in pt.pages_of(s)]
+            assert len(owned) == len(set(owned))  # never double-assigned
+            assert pt.pages_in_use() == len(owned)
+            assert 0 <= pt.pages_reserved() <= pt.pages_free()
+        for sid in list(live):
+            pt.free_sequence(sid)
+        # free always returns every page, and the store holds no cells
+        assert pt.pages_free() == pt.num_pages
+        assert pt.pages_in_use() == 0
+        assert pt.pages_reserved() == 0
+        for sid in [f"s{i}" for i in range(next_id)]:
+            for p in range(pt.num_pages):
+                assert not store.exists(pt.page_key(sid, p))
+        store.close()
+
+    @SETTINGS
+    @given(
+        prompt=st.integers(1, 16),
+        growth=st.integers(0, 32),
+        n_rivals=st.integers(0, 6),
+    )
+    def test_reservation_makes_extend_infallible(self, prompt, growth, n_rivals):
+        """A sequence allocated with reserve_tokens=T can always extend to
+        T, no matter what is admitted after it."""
+        pt, store = self._pt(num_pages=16, page_size=4)
+        total = prompt + growth
+        if pt.pages_needed(total) > pt.num_pages:
+            store.close()
+            return
+        pt.allocate("hero", prompt, reserve_tokens=total)
+        for i in range(n_rivals):  # rivals soak up whatever is left
+            try:
+                pt.allocate(f"rival{i}", 8, reserve_tokens=16)
+            except MemoryError:
+                break
+        for t in range(prompt, total + 1):  # token-by-token, like decode
+            pt.extend("hero", t)  # MemoryError here = property violated
+        assert len(pt.pages_of("hero")) == pt.pages_needed(total)
+        for sid in list(pt.live_sequences()):
+            pt.free_sequence(sid)
+        assert pt.pages_free() == pt.num_pages
+        store.close()
+
+    @SETTINGS
+    @given(tokens=st.integers(1, 64))
+    def test_free_releases_store_memory(self, tokens):
+        pt, store = self._pt(num_pages=16, page_size=4)
+        if pt.pages_needed(tokens) > pt.num_pages:
+            store.close()
+            return
+        pages = pt.allocate("m", tokens)
+        for p in pages:
+            assert store.exists(pt.page_key("m", p))
+        pt.free_sequence("m")
+        for p in pages:
+            assert not store.exists(pt.page_key("m", p))
+        store.close()
+
+
 class TestShardingRules:
     @SETTINGS
     @given(
