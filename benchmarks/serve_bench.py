@@ -28,10 +28,25 @@ Gated metrics:
   The batched decode step's cost is ~flat in active-slot count, so
   continuous batching multiplies throughput; a regression here means the
   per-slot work stopped being batched.
+- ``paged_vs_dense_decode_ratio`` — tokens/s of the paged-pool decode
+  over the dense (L, B, max_len) layout on a long-context engine
+  (same params, same workload, back-to-back).  The paged step gathers
+  only the pages a sequence occupies; the dense step attends over the
+  whole max_len cache — the paging claim, measured.
+- ``batched_prefill_speedup``  — wall time admitting a slots-sized
+  backlog one prefill at a time over admitting it as ONE padded prefill
+  + one multi-page insert (same engine, both paths warm).
+- ``prefix_pages_saved_ratio`` — fresh pages allocated WITHOUT prefix
+  sharing over fresh pages WITH it, for a workload of prompts sharing a
+  64-token system prefix.  Deterministic page arithmetic (refcounted
+  aliasing through the ownership store), no timers involved.
 
 Full runs repeat the suite three times and commit the element-wise median
 (``BENCH_serve.json``); ``--quick`` runs once into
-``BENCH_serve.quick.json`` for the CI gate.
+``BENCH_serve.quick.json`` for the CI gate.  ``--quick`` skips the two
+baseline-comparison phases (paged-vs-dense and batched-prefill: each
+needs extra engines / wall-based baseline rounds) — the CI gate covers
+the metrics both files share.
 """
 from __future__ import annotations
 
@@ -97,7 +112,7 @@ def _send(producer, rng, req_id: str, max_new: int, sent_at=None):
     producer.flush_topic("requests")
 
 
-def _make_engine():
+def _make_engine(**kw):
     import jax
 
     from repro.configs import get_smoke_config
@@ -109,9 +124,10 @@ def _make_engine():
     ctx = serve_context(cfg)
     model = build_model(ctx)
     params = materialize_params(model.param_specs(), jax.random.PRNGKey(0))
-    return ServeEngine(
-        ctx, params, slots=SLOTS, max_len=MAX_LEN, page_size=PAGE_SIZE, eos_id=-1
-    )
+    kw.setdefault("slots", SLOTS)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("page_size", PAGE_SIZE)
+    return ServeEngine(ctx, params, eos_id=-1, **kw)
 
 
 def _ttft_round(engine, tag: str) -> tuple[float, float]:
@@ -242,7 +258,108 @@ def bench_slot_scaling(engine, metrics: dict) -> None:
     metrics["info_tokens_per_s_batched"] = max(b for b, _ in rounds)
 
 
-def run_suite(engine=None) -> dict:
+# Long-context engine pair for the paging claim: at PD_MAX_LEN the dense
+# step attends over the full cache while the paged step gathers only the
+# ≤ PD_PROMPT+PD_MAX_NEW tokens each sequence occupies.
+PD_MAX_LEN = 2048
+PD_MAX_NEW = 48
+PD_ROUNDS = 2
+
+
+def _throughput_round(engine, tag: str, max_new: int) -> float:
+    """tokens/s for one slots-wide round on ``engine`` (no responses)."""
+    producer, consumer, _, _ = _streams(tag)
+    rng = np.random.default_rng(1)
+    for i in range(SLOTS):
+        _send(producer, rng, f"{tag}.{i}", max_new)
+    producer.close_topic("requests")
+    t0 = time.perf_counter()
+    engine.run(consumer, max_requests=SLOTS)
+    return SLOTS * max_new / (time.perf_counter() - t0)
+
+
+def bench_paged_vs_dense(pd_engines, metrics: dict) -> None:
+    """Same params, same long-context workload: paged pool vs dense
+    layout, back-to-back (load cancels in the ratio)."""
+    paged, dense = pd_engines
+    tps = {}
+    for name, eng in (("paged", paged), ("dense", dense)):
+        rounds = [
+            _throughput_round(eng, f"pd-{name}{r}", PD_MAX_NEW)
+            for r in range(PD_ROUNDS)
+        ]
+        tps[name] = statistics.median(rounds)
+    metrics["paged_vs_dense_decode_ratio"] = tps["paged"] / tps["dense"]
+    metrics["info_tokens_per_s_paged_long"] = tps["paged"]
+    metrics["info_tokens_per_s_dense_long"] = tps["dense"]
+
+
+BP_ROUNDS = 3
+
+
+def bench_batched_prefill(engine, metrics: dict) -> None:
+    """Admission wall for a slots-sized backlog: one-at-a-time prefill vs
+    ONE padded prefill + one multi-page insert (max_new=1 keeps the
+    workload prefill-only; both modes hit warm compilations)."""
+    walls = {True: [], False: []}
+    seq = [True, False] * BP_ROUNDS
+    for r, mode in enumerate(seq):
+        engine.batch_prefill = mode
+        producer, consumer, _, _ = _streams(f"bp{r}")
+        rng = np.random.default_rng(1)
+        for i in range(SLOTS):
+            _send(producer, rng, f"bp{r}.{i}", 1)
+        producer.close_topic("requests")
+        t0 = time.perf_counter()
+        engine.run(consumer, max_requests=SLOTS)
+        walls[mode].append(time.perf_counter() - t0)
+    engine.batch_prefill = True
+    batched = statistics.median(walls[True])
+    serial = statistics.median(walls[False])
+    metrics["batched_prefill_speedup"] = serial / batched
+    metrics["info_batched_admit_wall_ms"] = batched * 1e3
+
+
+PREFIX_TOKENS = 64
+_prefix_round = [0]  # unique req_ids across the 3 suite repetitions
+
+
+def bench_prefix_sharing(engine, metrics: dict) -> None:
+    """Fresh pages allocated for prompts sharing a 64-token system prefix,
+    sharing off vs on — pure allocator arithmetic via direct admission
+    (no threads, no timers: the same numbers every run)."""
+    from repro.serve.engine import Request
+
+    rng = np.random.default_rng(4)
+    shared = rng.integers(1, 200, PREFIX_TOKENS).astype(np.int32)
+
+    def admit_four(tag: str, share: bool) -> int:
+        engine.share_prefixes = share
+        before = engine.pages.pages_allocated_total
+        for i in range(SLOTS):
+            prompt = np.concatenate(
+                [shared, rng.integers(1, 200, 8).astype(np.int32)]
+            )
+            engine.admit(
+                Request(req_id=f"{tag}{i}", prompt=prompt, max_new_tokens=8),
+                i,
+            )
+        used = engine.pages.pages_allocated_total - before
+        for i in range(SLOTS):
+            engine._finish(i)
+        return used
+
+    r = _prefix_round[0]
+    _prefix_round[0] += 1
+    pages_shared = admit_four(f"pfx-on{r}-", True)
+    pages_unshared = admit_four(f"pfx-off{r}-", False)
+    engine.share_prefixes = True
+    metrics["prefix_pages_saved_ratio"] = pages_unshared / pages_shared
+    metrics["info_prefix_pages_shared_run"] = float(pages_shared)
+    metrics["info_prefix_pages_unshared_run"] = float(pages_unshared)
+
+
+def run_suite(engine=None, pd_engines=None, prefix_engine=None) -> dict:
     engine = engine or _make_engine()
     # warmup: compile prefill/admit/decode outside every timed phase
     producer, consumer, _, _ = _streams("warm")
@@ -256,6 +373,14 @@ def run_suite(engine=None) -> dict:
     bench_ttft(engine, metrics)
     bench_continuous_vs_static(engine, metrics)
     bench_slot_scaling(engine, metrics)
+    if prefix_engine is not None:
+        bench_prefix_sharing(prefix_engine, metrics)
+        assert prefix_engine.pages.pages_in_use() == 0, "prefix bench leaked"
+    if pd_engines is not None:  # full runs only: the baseline comparisons
+        bench_batched_prefill(engine, metrics)
+        bench_paged_vs_dense(pd_engines, metrics)
+        for e in pd_engines:
+            assert e.pages.pages_in_use() == 0, "pd bench leaked KV pages"
     assert engine.pages.pages_in_use() == 0, "bench leaked KV pages"
     return metrics
 
@@ -263,7 +388,19 @@ def run_suite(engine=None) -> dict:
 def main(quick: bool = False) -> dict:
     runs = 1 if quick else 3
     engine = _make_engine()  # one engine: jit once, every phase warm
-    samples = [run_suite(engine) for _ in range(runs)]
+    prefix_engine = _make_engine(max_len=128, page_size=8)
+    pd_engines = None
+    if not quick:
+        pd_engines = (
+            _make_engine(max_len=PD_MAX_LEN, page_size=16, paged=True),
+            _make_engine(max_len=PD_MAX_LEN, page_size=16, paged=False),
+        )
+        for r, e in enumerate(pd_engines):  # compile outside the timed rounds
+            _throughput_round(e, f"pd-warm{r}", PD_MAX_NEW)
+    samples = [
+        run_suite(engine, pd_engines=pd_engines, prefix_engine=prefix_engine)
+        for _ in range(runs)
+    ]
     metrics = {
         name: statistics.median(s[name] for s in samples) for name in samples[0]
     }

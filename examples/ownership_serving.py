@@ -2,11 +2,17 @@
 Fig 10) — here as a continuous-batching LLM serving run where every
 sequence's KV pages and payloads are ownership-managed.
 
-A client streams prompt requests; the ServeEngine admits them into slots,
-decodes with a paged KV cache whose page lists are OwnedProxies, and frees
-everything deterministically at sequence end.  The assertion at the bottom
-is the paper's Fig 10 claim: active proxied objects return to zero, with no
-manual bookkeeping.
+A client streams prompt requests that all open with the same system
+prompt; the ServeEngine admits them into slots, decodes over a paged KV
+pool whose page lists are OwnedProxies, and *aliases* the shared prefix:
+concurrently-live sequences borrow the first requester's prefix pages
+through refcounted ownership cells instead of re-prefilling and re-storing
+them (copy-on-write protects the boundary).  Everything is freed
+deterministically at sequence end — a borrowed page returns to the pool
+only when its last referencing sequence finishes.  The assertions at the
+bottom are the paper's Fig 10 claim (active proxied objects return to
+zero, no manual bookkeeping) plus this PR's sharing claim (prefix pages
+were actually aliased, not copied).
 
     PYTHONPATH=src python examples/ownership_serving.py
 """
@@ -47,20 +53,24 @@ def main():
 
     rng = np.random.default_rng(1)
     active_trace: list[int] = []
+    # every request opens with the same 16-token "system prompt" — exactly
+    # one full KV page at page_size=16, so concurrent sequences alias it
+    system_prompt = rng.integers(1, cfg.vocab, 16).astype(np.int32)
 
     def client():
         for i in range(N_REQUESTS):
-            prompt = rng.integers(1, cfg.vocab, 12).astype(np.int32)
+            user = rng.integers(1, cfg.vocab, 6).astype(np.int32)
+            prompt = np.concatenate([system_prompt, user])
             producer.send(
                 "requests",
                 {"prompt": prompt},
                 metadata={"req_id": f"mof-{i}", "max_new_tokens": MAX_NEW},
             )
             producer.flush_topic("requests")
-            time.sleep(0.05)
         producer.close_topic("requests")
 
-    engine = ServeEngine(ctx, params, slots=3, max_len=48, eos_id=-1)
+    engine = ServeEngine(ctx, params, slots=3, max_len=48, page_size=16,
+                         eos_id=-1)
 
     def tracer():
         while not done.is_set():
@@ -87,12 +97,18 @@ def main():
         f"  pages-in-use trace (sampled): {active_trace}\n"
         f"  peak pages {max(active_trace or [0])}, final pages "
         f"{engine.pages.pages_in_use()}, kv cells left {kv_keys_left} "
-        f"(paper Fig 10: returns to zero)"
+        f"(paper Fig 10: returns to zero)\n"
+        f"  system-prompt pages aliased (not copied): "
+        f"{engine.metrics['prefix_shared_pages']}, copy-on-write copies: "
+        f"{engine.metrics['cow_page_copies']}"
     )
     assert len(completed) == N_REQUESTS
     assert engine.pages.pages_in_use() == 0, "ownership must reclaim all pages"
     assert kv_keys_left == 0, "ownership must release the store memory too"
     assert max(active_trace or [0]) > 0, "pages were actually used"
+    assert engine.metrics["prefix_shared_pages"] > 0, (
+        "concurrent sequences must alias the shared system prompt"
+    )
     engine.close()
 
 

@@ -21,6 +21,15 @@ echo "== tier-1: pytest =="
 REPRO_MULTIPROC_TIMEOUT="${REPRO_MULTIPROC_TIMEOUT:-300}" \
     python -m pytest -x -q
 
+echo
+echo "== kernels: Pallas interpret-mode vs jnp oracles =="
+# The tier-1 run above already includes these, but an explicit named step
+# keeps the kernel contract visible in the gate output: every Pallas
+# kernel (flash/paged attention, wkv6, ssd) must match its pure-jnp
+# reference in interpret mode on CPU — the only kernel validation this
+# box can run (no TPU).
+python -m pytest -x -q tests/test_kernels.py
+
 if [[ "${1:-}" != "--fast" ]]; then
     echo
     echo "== perf smoke: proxy_overhead --quick =="

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_bh
+from repro.kernels.paged_attention import paged_attention_grouped
 from repro.kernels.ssd import ssd_bh
 from repro.kernels.wkv6 import wkv6_bh
 
@@ -51,6 +52,35 @@ def flash_attention(
         interpret=(impl == "interpret"),
     )
     return obh.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def paged_attention(
+    q: jax.Array,  # (B, 1, H, D) — one new token per sequence
+    k_pages: jax.Array,  # (P, page_size, Hkv, D) — the KV page pool
+    v_pages: jax.Array,  # (P, page_size, Hkv, Dv)
+    block_tables: jax.Array,  # (B, n) int32 physical page ids, token order
+    lens: jax.Array,  # (B,) int32 valid tokens per sequence
+    *,
+    impl: str = "auto",  # auto | pallas | interpret | jnp
+) -> jax.Array:
+    """Model-layout paged-attention decode over a block-table-indexed pool."""
+    B, _, H, D = q.shape
+    P, _, Hkv, Dv = v_pages.shape
+    g = H // Hkv
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "jnp"
+    if impl == "jnp":
+        from repro.models.layers import paged_decode_attention
+
+        return paged_decode_attention(q, k_pages, v_pages, block_tables, lens)
+    qg = q[:, 0].reshape(B, Hkv, g, D)
+    bt = jnp.clip(block_tables.astype(jnp.int32), 0, P - 1)  # DMA-safe padding
+    obh = paged_attention_grouped(
+        qg, k_pages, v_pages, bt, lens.astype(jnp.int32),
+        interpret=(impl == "interpret"),
+    )
+    return obh.reshape(B, 1, H, Dv)
 
 
 @partial(jax.jit, static_argnames=("impl", "chunk"))

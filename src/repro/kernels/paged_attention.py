@@ -1,0 +1,135 @@
+"""Pallas TPU paged-attention decode kernel (single query token, GQA).
+
+The serving engine stores KV in a page pool ``(P, page_size, Hkv, D)``; a
+sequence's cache is the ordered list of physical pages its ``PageTable``
+block table names.  This kernel attends one new query token per sequence
+directly against that pool: the block table is a **scalar-prefetched**
+operand, so each grid step's BlockSpec index_map reads ``bt[b, i]`` and the
+page gather *is* the DMA schedule — no dense ``(B, max_len, ...)`` cache is
+ever materialized, and sequences pay for the pages they occupy, not for
+``max_len``.
+
+Layout: q ``(B, Hkv, G, D)`` (one token per sequence, q heads grouped by
+their kv head, as in flash_attention's wrapper), k/v pages
+``(P, page_size, Hkv, D)``, block tables ``(B, n)`` int32, lens ``(B,)``
+int32 (tokens < lens[b] attended).  Grid ``(B, Hkv, n)``: the page axis is
+sequential, so the online-softmax stats (m, l, acc) live in VMEM scratch
+that persists across pages — same accumulator discipline as
+flash_attention.  Pages at or beyond a sequence's length are skipped with
+``pl.when`` (their DMA still lands on a valid page — callers pad short
+block-table rows with any in-range page id).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    bt_ref,  # (B, n) int32 scalar-prefetch: the block tables
+    lens_ref,  # (B,) int32 scalar-prefetch: valid tokens per sequence
+    q_ref,  # (1, 1, G, D)
+    k_ref,  # (1, page_size, 1, D)
+    v_ref,  # (1, page_size, 1, Dv)
+    o_ref,  # (1, 1, G, Dv)
+    m_scr,  # (G, 1) f32
+    l_scr,  # (G, 1) f32
+    acc_scr,  # (G, Dv) f32
+    *,
+    scale: float,
+    page_size: int,
+    num_page_slots: int,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    seq_len = lens_ref[b]
+
+    @pl.when(i * page_size < seq_len)  # page entirely past the sequence: skip
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (page_size, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)  # (page_size, Dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (G, page_size)
+        pos = i * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+        m_prev = m_scr[...]  # (G, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(i == num_page_slots - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)  # lens == 0 → well-defined zeros
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_grouped(
+    q: jax.Array,  # (B, Hkv, G, D)
+    k_pages: jax.Array,  # (P, page_size, Hkv, D)
+    v_pages: jax.Array,  # (P, page_size, Hkv, Dv)
+    block_tables: jax.Array,  # (B, n) int32 physical page ids, in token order
+    lens: jax.Array,  # (B,) int32
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hkv, G, D = q.shape
+    P, page_size, _, Dv = v_pages.shape
+    n = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _paged_kernel,
+        scale=scale,
+        page_size=page_size,
+        num_page_slots=n,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # (block_tables, lens) usable in index_maps
+        grid=(B, Hkv, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, i, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, page_size, 1, D), lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0)
+            ),
+            pl.BlockSpec(
+                (1, page_size, 1, Dv), lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv), lambda b, h, i, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), v_pages.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(block_tables, lens, q, k_pages, v_pages)

@@ -48,10 +48,20 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--send-timeout", type=float, default=60.0,
                     help="client-side bound on one admission-window wait")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page granularity (paged decode needs "
+                         "max-len % page-size == 0; else dense fallback)")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="dispatch attention through the Pallas kernel ops "
+                         "(paged attention on the decode path)")
+    ap.add_argument("--no-paged", dest="paged", action="store_false",
+                    help="dense (L, B, max_len) KV layout instead of the "
+                         "paged pool (the benchmark baseline)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
-    ctx = serve_context(cfg)  # serve rules profile: kv_seq over model axis
+    # serve rules profile: kv_seq over model axis
+    ctx = serve_context(cfg, use_kernels=args.use_kernels)
     model = build_model(ctx)
     with ctx.mesh:
         params = materialize_params(model.param_specs(), jax.random.PRNGKey(0))
@@ -115,7 +125,8 @@ def main(argv=None) -> int:
     collector.start()
 
     engine = ServeEngine(
-        ctx, params, slots=args.slots, max_len=args.max_len, eos_id=-1
+        ctx, params, slots=args.slots, max_len=args.max_len,
+        page_size=args.page_size, eos_id=-1, paged=args.paged,
     )
     t0 = time.perf_counter()
     completed = engine.run(consumer, resp_producer)

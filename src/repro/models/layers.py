@@ -275,9 +275,61 @@ def decode_attention(
     return o.reshape(B, 1, H, Dv).astype(v_cache.dtype)
 
 
+def paged_decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k_pages: jax.Array,  # (P, page_size, Hkv, D)
+    v_pages: jax.Array,  # (P, page_size, Hkv, Dv)
+    block_tables: jax.Array,  # (B, n) int32 physical page ids, token order
+    lens: jax.Array,  # (B,) valid tokens per sequence
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """jnp reference for the paged decode kernel: gather each sequence's
+    pages through its block table into a contiguous view, then attend with
+    a per-sequence length mask.  ``lens[b] == 0`` rows produce garbage (a
+    uniform average), never NaN — idle serving slots are unread anyway."""
+    B, _, H, D = q.shape
+    P, ps, Hkv, Dv = v_pages.shape
+    n = block_tables.shape[1]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bt = jnp.clip(block_tables, 0, P - 1)
+    k = k_pages[bt].reshape(B, n * ps, Hkv, k_pages.shape[-1])
+    v = v_pages[bt].reshape(B, n * ps, Hkv, Dv)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    mask = jnp.arange(n * ps)[None, :] < lens[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgs,bshd->bhgd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, 1, H, Dv).astype(v.dtype)
+
+
 # ---------------------------------------------------------------------------
 # GQA attention block (dense/MoE/encdec/hybrid families)
 # ---------------------------------------------------------------------------
+
+
+def _decode_attention_core(ctx: "ModelContext", q, k_cache, v_cache, length):
+    """Decode-step dispatch: when kernels are enabled, view the dense
+    per-slot cache as contiguous pages (an arange block table) and run the
+    paged-attention kernel; else the plain masked jnp decode attention."""
+    B, S, Hkv, Dv = v_cache.shape
+    if ctx.use_kernels and q.shape[-1] == Dv and S % 16 == 0:
+        from repro.kernels.ops import paged_attention
+
+        ps = 16
+        n = S // ps
+        kp = k_cache.reshape(B * n, ps, Hkv, k_cache.shape[-1])
+        vp = v_cache.reshape(B * n, ps, Hkv, Dv)
+        bt = jnp.arange(B * n, dtype=jnp.int32).reshape(B, n)
+        lens = jnp.full((B,), length, jnp.int32)
+        return paged_attention(q, kp, vp, bt, lens)
+    return decode_attention(q, k_cache, v_cache, length)
 
 
 def _attention_core(ctx: "ModelContext", q, k, v, *, causal: bool,
@@ -343,7 +395,7 @@ def apply_attention(
             k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_index, 1)
             v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_index, 1)
             new_cache = {"k": k_cache, "v": v_cache}
-            o = decode_attention(q, k_cache, v_cache, cache_index + 1)
+            o = _decode_attention_core(ctx, q, k_cache, v_cache, cache_index + 1)
         else:  # prefill: fill cache, run blockwise
             new_cache = {"k": k, "v": v}
             o = _attention_core(ctx, q, k, v, causal=causal)

@@ -285,10 +285,10 @@ class DecoderLM:
         logits = L.apply_unembed(ctx, params["embed"], hn)
         return logits[:, 0], new_cache
 
-    def prefill(self, params, tokens, max_len: int):
-        """Prefill: run the full prompt, return (last-token logits, cache)."""
+    def _prefill_trunk(self, params, tokens, max_len: int):
+        """Shared prefill trunk: run the full (B, S) prompt batch, return
+        the final hidden states and the cache padded to ``max_len``."""
         cfg, ctx = self.cfg, self.ctx
-        B, S = tokens.shape
         rope = self._rope({"tokens": tokens})
         x = self._embed_inputs(params, {"tokens": tokens})
 
@@ -320,7 +320,28 @@ class DecoderLM:
             pad_width[2] = (0, pad_len)
             return jnp.pad(c, pad_width)
 
-        cache = jax.tree.map(pad, cache)
+        return x, jax.tree.map(pad, cache)
+
+    def prefill(self, params, tokens, max_len: int):
+        """Prefill: run the full prompt, return (last-token logits, cache)."""
+        cfg, ctx = self.cfg, self.ctx
+        x, cache = self._prefill_trunk(params, tokens, max_len)
         hn = L.apply_norm(cfg, params["final_norm"], x)
         logits = L.apply_unembed(ctx, params["embed"], hn[:, -1:])
+        return logits[:, 0], cache
+
+    def prefill_batch(self, params, tokens, lens, max_len: int):
+        """Batched multi-request prefill: ``tokens`` (B, S) right-padded
+        prompts, ``lens`` (B,) valid lengths.  Returns per-row logits at
+        position ``lens[b]-1`` and the padded cache.  Causal attention
+        keeps right-padding inert: a padded position never influences a
+        valid one, so rows of different true lengths batch into one call;
+        cache rows beyond ``lens[b]`` hold pad garbage the engine's paged
+        insert never maps."""
+        cfg, ctx = self.cfg, self.ctx
+        x, cache = self._prefill_trunk(params, tokens, max_len)
+        idx = jnp.maximum(lens - 1, 0)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)  # (B, 1, E)
+        hn = L.apply_norm(cfg, params["final_norm"], last)
+        logits = L.apply_unembed(ctx, params["embed"], hn)
         return logits[:, 0], cache

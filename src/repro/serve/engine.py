@@ -21,10 +21,22 @@ variable; the decode loop blocks on that condition only when every slot is
 idle, and otherwise drains admissions between jit'd decode steps (the
 decode deadline: an active batch never waits on the request stream).
 
-Decode is a single jit'd batched step over slot-packed caches; admission
-writes one slot's prefilled cache into the batch with a jit'd, donated
-``dynamic_update_index_in_dim`` update — O(slot), traced once for every
-slot index, instead of an op-by-op full-tree ``.at[:, i].set`` rebuild.
+Decode (``paged=True``, the default) runs over a **page pool**: each
+stacked cache leaf is ``(L, P+1, page_size, ...)`` (P = the PageTable's
+pages, plus one null scratch page — see kvcache's module docstring for the
+layout).  The jit'd step gathers each slot's live pages through its block
+table (``pages_of``, null-padded to a power-of-two width so recompiles
+stay bounded), decodes every slot at its own position, and scatters back
+*only the one page each slot wrote* — donated, so the pool updates in
+place and a short sequence touches its own pages, never ``max_len``.
+Admission inserts prefilled KV page-by-page (``batch_prefill=True`` admits
+up to ``slots`` queued requests in one padded prefill + one donated
+multi-page insert), and ``share_prefixes=True`` aliases common prompt
+prefixes through the PageTable's refcounted cells — copy-on-write events
+are mirrored onto the pool as device page copies before the step that
+would diverge.  ``paged=False`` keeps the dense ``(L, B, S, ...)`` layout
+(the benchmark baseline, and the fallback for indivisible page sizes).
+
 Admission is backpressured through PageTable reservations: a request is
 admitted only when the pool can cover its *whole* generation, so decode
 never OOMs mid-sequence; requests the pool can never fit are rejected onto
@@ -44,7 +56,7 @@ import numpy as np
 from repro.core.proxy import extract
 from repro.core.store import Store
 from repro.core.streaming import StreamConsumer, StreamProducer
-from repro.dist.sharding import materialize_params, sharding_tree
+from repro.dist.sharding import ParamSpec, materialize_params, sharding_tree
 from repro.models.api import build_model
 from repro.models.layers import ModelContext
 
@@ -83,6 +95,7 @@ class SlotState:
     pos: int = 0  # current length (prompt + generated)
     generated: list[int] = field(default_factory=list)
     first_token_at: float | None = None
+    pages: list[int] = field(default_factory=list)  # cached block table
 
 
 class ServeEngine:
@@ -97,6 +110,9 @@ class ServeEngine:
         eos_id: int = 0,
         model=None,
         kv_store: Store | None = None,
+        paged: bool = True,
+        batch_prefill: bool = True,
+        share_prefixes: bool = True,
     ):
         from repro.core.connectors import new_key
         from repro.serve.kvcache import PageTable
@@ -116,23 +132,48 @@ class ServeEngine:
             store=self.kv_store,
             page_bytes=self._page_bytes(page_size),
         )
-        self._cache_specs = self.model.cache_specs(len(self.slots), self.max_len)
-        # serve-profile shardings for the batched cache (kv_seq over the
-        # model axis); a no-op placement on the 1-device smoke mesh
+        # paged decode needs pages to tile max_len exactly; else dense
+        self.paged = paged and max_len % page_size == 0
+        self.batch_prefill = batch_prefill
+        self.share_prefixes = share_prefixes
+        self._can_batch = hasattr(self.model, "prefill_batch")
+        # pool geometry, pinned at construction (tests may shrink the
+        # allocator's num_pages afterwards to force backpressure — the
+        # device pool keeps its build-time size, so every id stays valid)
+        self._null_page = self.pages.num_pages
+        self._pages_per_slot = max(1, max_len // page_size)
+        if self.paged:
+            self._cache_specs = self._pool_specs()
+        else:
+            self._cache_specs = self.model.cache_specs(len(self.slots), self.max_len)
+        # serve-profile shardings for the cache (kv_seq over the model
+        # axis); a no-op placement on the 1-device smoke mesh
         self._cache_shardings = sharding_tree(self._cache_specs, ctx.rules, ctx.mesh)
         # cache donated on the per-token hot path too: the step rewrites
         # the KV buffers in place instead of allocating a full copy per
         # token (self._cache is reassigned from the result, so the donated
         # input is never reused)
-        self._decode = jax.jit(self._decode_body, donate_argnums=(1,))
+        if self.paged:
+            self._decode = jax.jit(self._decode_paged_body, donate_argnums=(1,))
+        else:
+            self._decode = jax.jit(self._decode_body, donate_argnums=(1,))
         # per-slot cache insert: donated so XLA updates the batch buffers in
-        # place; the slot index is traced, so one compilation covers every
-        # slot instead of re-lowering per admission target
+        # place; the slot index / page ids are traced, so one compilation
+        # covers every admission target instead of re-lowering per slot
         self._admit_cache = jax.jit(self._admit_body, donate_argnums=(0,))
+        self._insert_pages = jax.jit(self._insert_body, donate_argnums=(0,))
+        self._copy_page = jax.jit(self._copy_body, donate_argnums=(0,))
         self._prefill = jax.jit(
             lambda p, tokens: self.model.prefill(p, tokens, self.max_len)
         )
-        self._cache = None  # stacked (L, B, S, ...) pytree
+        if self._can_batch:
+            self._prefill_many = jax.jit(
+                lambda p, tokens, lens: self.model.prefill_batch(
+                    p, tokens, lens, self.max_len
+                )
+            )
+        self._cache = None  # paged: (L, P+1, ps, ...); dense: (L, B, S, ...)
+        self._live_prompts: dict[str, np.ndarray] = {}  # for prefix sharing
         self.completed: dict[str, dict] = {}
         self.rejected: dict[str, str] = {}
         self.metrics = {
@@ -144,6 +185,9 @@ class ServeEngine:
             "queued_admissions": 0,
             "max_pending": 0,
             "malformed_events": 0,
+            "batched_prefills": 0,
+            "prefix_shared_pages": 0,
+            "cow_page_copies": 0,
         }
 
     def _page_bytes(self, page_size: int) -> int:
@@ -153,14 +197,29 @@ class ServeEngine:
         per_token = count_params(self.model.cache_specs(1, 1))
         return page_size * per_token * jnp.dtype(self.cfg.dtype).itemsize
 
+    def _pool_specs(self):
+        """Page-pool cache specs: each dense (L, B, S, ...) leaf becomes
+        (L, P+1, page_size, ...) — axis 1 is the physical page id (the
+        last index is the null scratch page), axis 2 the in-page offset."""
+        per_page = self.model.cache_specs(1, self.pages.page_size)
+        P = self._null_page + 1
+
+        def to_pool(s):
+            return ParamSpec(
+                (s.shape[0], P) + s.shape[2:],
+                (s.axes[0], "kv_seq", None) + s.axes[3:],
+                s.dtype,
+                s.init_scale,
+            )
+
+        return jax.tree.map(
+            to_pool, per_page, is_leaf=lambda x: isinstance(x, ParamSpec)
+        )
+
     # -- model glue ---------------------------------------------------------
     def _decode_body(self, params, cache, tokens, lens):
-        """Per-slot positions: decode each slot at its own index.
-
-        The batched decode step uses a shared scalar index in the model API;
-        for continuous batching each slot has its own position, so we decode
-        with per-slot gather/scatter via vmap over the batch axis.
-        """
+        """Dense-layout decode: each slot at its own index via vmap over
+        the batch axis (the ``paged=False`` baseline path)."""
 
         def one(cache_b, tok_b, len_b):
             c = jax.tree.map(lambda x: x[:, None], cache_b)  # re-add batch dim
@@ -172,9 +231,49 @@ class ServeEngine:
         )(cache, tokens, lens)
         return new_cache, logits
 
+    def _decode_paged_body(self, params, pool, bt, tokens, lens):
+        """Paged decode: gather each slot's pages into a contiguous view,
+        decode every slot at its own position, scatter back **only the one
+        page each slot wrote** (the model's decode contract: the step
+        writes position ``lens[b]`` and nothing else).
+
+        ``bt`` (B, n) is the null-padded block table; n is the power-of-two
+        page coverage of the longest active slot, so the gathered view —
+        and the attention the model runs inside it — scales with what the
+        batch actually occupies, not with max_len."""
+        ps = self.pages.page_size
+        B, n = bt.shape
+
+        def gather(leaf):
+            g = leaf[:, bt]  # (L, B, n, ps, ...)
+            return g.reshape(g.shape[:2] + (n * ps,) + g.shape[4:])
+
+        dense = jax.tree.map(gather, pool)
+
+        def one(cache_b, tok_b, len_b):
+            c = jax.tree.map(lambda x: x[:, None], cache_b)
+            logits, nc = self.model.decode_step(params, c, tok_b[None], len_b)
+            return jax.tree.map(lambda x: x[:, 0], nc), logits[0]
+
+        new_dense, logits = jax.vmap(
+            one, in_axes=(1, 0, 0), out_axes=(1, 0)
+        )(dense, tokens, lens)
+
+        page_slot = lens // ps  # (B,) block-table index of the written page
+        dst = jnp.take_along_axis(bt, page_slot[:, None], axis=1)[:, 0]  # (B,)
+
+        def pick(nd_b, p_idx):  # (L, n*ps, ...) → the written (L, ps, ...)
+            return jax.lax.dynamic_slice_in_dim(nd_b, p_idx * ps, ps, axis=1)
+
+        def scatter(leaf, nd):
+            written = jax.vmap(pick, in_axes=(1, 0), out_axes=1)(nd, page_slot)
+            return leaf.at[:, dst].set(written.astype(leaf.dtype))
+
+        return jax.tree.map(scatter, pool, new_dense), logits
+
     def _admit_body(self, cache, one, slot_idx):
-        """Insert a (batch=1) prefill cache at slot ``slot_idx``: a dynamic
-        per-slot update on donated buffers, never a full-tree rebuild."""
+        """Dense path: insert a (batch=1) prefill cache at slot
+        ``slot_idx`` — a dynamic per-slot update on donated buffers."""
         return jax.tree.map(
             lambda full, o: jax.lax.dynamic_update_index_in_dim(
                 full, o[:, 0].astype(full.dtype), slot_idx, 1
@@ -183,42 +282,183 @@ class ServeEngine:
             one,
         )
 
+    def _insert_body(self, pool, caches, page_ids):
+        """Paged admission insert: ``caches`` (L, Bk, max_len, ...) from
+        prefill, viewed as (L, Bk*pages_per_slot, page_size, ...) pages;
+        ``page_ids`` (Bk*pages_per_slot,) their physical destinations.
+        Pad rows, unowned tails, and *shared (borrowed) prefix pages* all
+        point at the null page — the insert never writes a page another
+        sequence owns."""
+        ps = self.pages.page_size
+
+        def one(pool_leaf, c):
+            mp = c.shape[2] // ps
+            cp = c.reshape((c.shape[0], c.shape[1] * mp, ps) + c.shape[3:])
+            return pool_leaf.at[:, page_ids].set(cp.astype(pool_leaf.dtype))
+
+        return jax.tree.map(one, pool, caches)
+
+    def _copy_body(self, pool, src, dst):
+        """Copy-on-write mirror: duplicate physical page src → dst."""
+        return jax.tree.map(lambda leaf: leaf.at[:, dst].set(leaf[:, src]), pool)
+
     def _ensure_cache(self):
         if self._cache is None:
             cache = materialize_params(self._cache_specs, jax.random.PRNGKey(0))
             self._cache = jax.device_put(cache, self._cache_shardings)
 
+    def _apply_cow(self):
+        """Mirror queued PageTable copy-on-write events on the device pool
+        and refresh the affected slot's cached block table."""
+        for seq, src, dst in self.pages.drain_cow_events():
+            self._ensure_cache()
+            self._cache = self._copy_page(
+                self._cache, jnp.int32(src), jnp.int32(dst)
+            )
+            self.metrics["cow_page_copies"] += 1
+            for s in self.slots:
+                if s.req is not None and s.req.req_id == seq:
+                    s.pages = self.pages.pages_of(seq)
+
+    def _bt_width(self, needed: int) -> int:
+        """Block-table width: next power of two ≥ the widest active slot's
+        page coverage (capped at a full slot) — recompiles stay O(log)."""
+        n = 1
+        while n < needed:
+            n *= 2
+        return min(n, max(self._pages_per_slot, 1))
+
     # -- request admission --------------------------------------------------
+    def _prefix_parent(self, prompt: np.ndarray) -> tuple[str | None, int]:
+        """Longest-common-prefix live sequence to share pages with (must
+        cover at least one full page to be worth a refcount)."""
+        if not (self.paged and self.share_prefixes):
+            return None, 0
+        best, best_l = None, 0
+        for sid, pp in self._live_prompts.items():
+            if sid not in self.pages.live_sequences():
+                continue
+            m = min(len(pp), len(prompt))
+            if m <= best_l:
+                continue
+            neq = np.nonzero(pp[:m] != prompt[:m])[0]
+            l = int(neq[0]) if len(neq) else m
+            if l > best_l:
+                best, best_l = sid, l
+        if best_l >= self.pages.page_size:
+            return best, best_l
+        return None, 0
+
+    def _allocate_for(self, req: Request) -> None:
+        """Claim (and possibly share) pages for ``req`` — the admission
+        decision; device-side prefill/insert happens in _insert_prefill."""
+        total = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        parent, ptok = self._prefix_parent(req.prompt)
+        if parent is not None:
+            self.pages.allocate(
+                req.req_id, len(req.prompt), reserve_tokens=total,
+                prefix_of=parent, prefix_tokens=ptok,
+            )
+            self.metrics["prefix_shared_pages"] += len(
+                self.pages.borrowed_pages(req.req_id)
+            )
+        else:
+            self.pages.allocate(req.req_id, len(req.prompt), reserve_tokens=total)
+        self._live_prompts[req.req_id] = np.asarray(req.prompt, np.int32)
+
+    def _slot_ids_row(self, req_id: str) -> np.ndarray:
+        """Physical destination pages for one admitted row's insert: owned
+        pages in token order; borrowed (shared-prefix) pages and the
+        unallocated tail map to the null page."""
+        ids = np.full((self._pages_per_slot,), self._null_page, np.int32)
+        borrowed = self.pages.borrowed_pages(req_id)
+        for j, p in enumerate(self.pages.pages_of(req_id)):
+            if p not in borrowed:
+                ids[j] = p
+        return ids
+
+    def _insert_prefill(self, batch: list[tuple[Request, int]]) -> list[int]:
+        """Prefill + device insert for admitted requests; returns each
+        request's first token (from the prefill logits).  One padded
+        prefill and one donated multi-page insert cover the whole batch on
+        the paged path; the dense path and non-batching models insert one
+        request at a time."""
+        firsts: list[int] = []
+        self._ensure_cache()
+        if self.paged:
+            self._apply_cow()  # allocate-time COW copies land before insert
+        if self.paged and self._can_batch and (
+            self.batch_prefill or len(batch) > 1
+        ):
+            B = len(self.slots)
+            mp = self._pages_per_slot
+            sp = max(len(req.prompt) for req, _ in batch)
+            tokens = np.zeros((B, sp), np.int32)
+            lens = np.ones((B,), np.int32)  # pad rows decode garbage, unread
+            ids = np.full((B * mp,), self._null_page, np.int32)
+            for req, slot_idx in batch:
+                tokens[slot_idx, : len(req.prompt)] = req.prompt
+                lens[slot_idx] = len(req.prompt)
+                ids[slot_idx * mp : (slot_idx + 1) * mp] = self._slot_ids_row(
+                    req.req_id
+                )
+            logits, caches = self._prefill_many(
+                self.params, jnp.asarray(tokens), jnp.asarray(lens)
+            )
+            self._cache = self._insert_pages(self._cache, caches, jnp.asarray(ids))
+            if len(batch) > 1:
+                self.metrics["batched_prefills"] += 1
+            logits_np = np.asarray(logits, np.float32)
+            firsts = [
+                int(np.argmax(logits_np[slot_idx, : self.cfg.vocab]))
+                for _, slot_idx in batch
+            ]
+        else:
+            for req, slot_idx in batch:
+                prompt = jnp.asarray(req.prompt[None], jnp.int32)
+                logits, cache1 = self._prefill(self.params, prompt)
+                if self.paged:
+                    ids = self._slot_ids_row(req.req_id)
+                    self._cache = self._insert_pages(
+                        self._cache, cache1, jnp.asarray(ids)
+                    )
+                else:
+                    self._cache = self._admit_cache(
+                        self._cache, cache1, jnp.int32(slot_idx)
+                    )
+                firsts.append(
+                    int(np.argmax(np.asarray(logits[0, : self.cfg.vocab], np.float32)))
+                )
+        now = time.perf_counter()
+        for (req, slot_idx), first in zip(batch, firsts):
+            slot = self.slots[slot_idx]
+            slot.req = req
+            # pos = KV entries in the cache; the first token's KV is
+            # written by the decode step that consumes it
+            slot.pos = len(req.prompt)
+            slot.generated = [first]
+            slot.first_token_at = now
+            slot.pages = self.pages.pages_of(req.req_id) if self.paged else []
+            self.metrics["prefills"] += 1
+            self.metrics["tokens"] += 1
+        return firsts
+
     def admit(self, req: Request, slot_idx: int) -> int:
-        """Prefill into ``slot_idx``; returns the request's *first* token.
+        """Admit one request into ``slot_idx``; returns its *first* token.
 
         The first generated token comes from the prefill logits — it exists
         the moment the request is admitted, before any decode step (the
         decode loop's job is tokens 2..n, each fed back at its own per-slot
         position).
         """
-        slot = self.slots[slot_idx]
-        total = min(len(req.prompt) + req.max_new_tokens, self.max_len)
-        self.pages.allocate(req.req_id, len(req.prompt), reserve_tokens=total)
-        prompt = jnp.asarray(req.prompt[None], jnp.int32)
-        logits, cache1 = self._prefill(self.params, prompt)
-        self._ensure_cache()
-        self._cache = self._admit_cache(self._cache, cache1, jnp.int32(slot_idx))
-        first = int(np.argmax(np.asarray(logits[0, : self.cfg.vocab], np.float32)))
-        slot.req = req
-        # pos = KV entries in the cache; the first token's KV is written by
-        # the decode step that consumes it
-        slot.pos = len(req.prompt)
-        slot.generated = [first]
-        slot.first_token_at = time.perf_counter()
-        self.metrics["prefills"] += 1
-        self.metrics["tokens"] += 1
-        return first
+        self._allocate_for(req)
+        return self._insert_prefill([(req, slot_idx)])[0]
 
     def _finish(self, slot_idx: int):
         slot = self.slots[slot_idx]
         req = slot.req
         self.pages.free_sequence(req.req_id)  # ownership free → pages + store
+        self._live_prompts.pop(req.req_id, None)
         now = time.perf_counter()
         self.completed[req.req_id] = {
             "tokens": list(slot.generated),
@@ -229,6 +469,7 @@ class ServeEngine:
         slot.pos = 0
         slot.generated = []
         slot.first_token_at = None
+        slot.pages = []
 
     # -- main loop ----------------------------------------------------------
     def run(
@@ -385,55 +626,82 @@ class ServeEngine:
                 send_done(req_id)
             return done
 
+        def pop_next(taken: set) -> tuple[str, Request | None, int, str]:
+            """FIFO head-of-line admission decision for one request."""
+            with cond:
+                if not pending:
+                    return ("empty", None, -1, "")
+                req = pending[0]
+                total = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+                if req.req_id in self.pages.live_sequences():
+                    pending.popleft()  # one bad request must not crash
+                    cond.notify_all()  # every other tenant's serve
+                    return (
+                        "reject", req, -1,
+                        f"req_id {req.req_id!r} is already being served",
+                    )
+                if len(req.prompt) > self.max_len - 1:
+                    pending.popleft()  # prompt alone overflows the cache
+                    cond.notify_all()
+                    return (
+                        "reject", req, -1,
+                        f"prompt of {len(req.prompt)} tokens exceeds "
+                        f"max_len-1 ({self.max_len - 1})",
+                    )
+                if self.pages.pages_needed(total) > self.pages.num_pages:
+                    pending.popleft()  # can never fit: reject, don't wedge
+                    cond.notify_all()
+                    return (
+                        "reject", req, -1,
+                        f"request needs {self.pages.pages_needed(total)} "
+                        f"pages; the pool has {self.pages.num_pages}",
+                    )
+                if not self.pages.can_admit(total):
+                    # backpressure: head-of-line waits for pages (FIFO —
+                    # later requests must not starve an earlier one)
+                    self.metrics["queued_admissions"] += 1
+                    return ("wait", None, -1, "")
+                free = [
+                    i for i, s in enumerate(self.slots)
+                    if s.req is None and i not in taken
+                ]
+                if not free:
+                    return ("wait", None, -1, "")
+                pending.popleft()
+                cond.notify_all()  # wake a pull blocked at high water
+                return ("admit", req, free[0], "")
+
         def admit_pending() -> int:
             admitted = 0
             with cond:
                 failed, state["failed"] = state["failed"], []
             for rid, why in failed:  # puller-detected per-request failures
                 send_reject(rid, why)
+            batching = self.paged and self.batch_prefill and self._can_batch
             while True:
-                target = reject = None
-                with cond:
-                    if not pending:
-                        return admitted
-                    req = pending[0]
-                    total = min(len(req.prompt) + req.max_new_tokens, self.max_len)
-                    if req.req_id in self.pages.live_sequences():
-                        pending.popleft()  # one bad request must not crash
-                        reject = (            # every other tenant's serve
-                            f"req_id {req.req_id!r} is already being served"
-                        )
-                    elif len(req.prompt) > self.max_len - 1:
-                        pending.popleft()  # prompt alone overflows the cache
-                        reject = (
-                            f"prompt of {len(req.prompt)} tokens exceeds "
-                            f"max_len-1 ({self.max_len - 1})"
-                        )
-                    elif self.pages.pages_needed(total) > self.pages.num_pages:
-                        pending.popleft()  # can never fit: reject, don't wedge
-                        reject = (
-                            f"request needs {self.pages.pages_needed(total)} "
-                            f"pages; the pool has {self.pages.num_pages}"
-                        )
-                    elif not self.pages.can_admit(total):
-                        # backpressure: head-of-line waits for pages (FIFO —
-                        # later requests must not starve an earlier one)
-                        self.metrics["queued_admissions"] += 1
-                        return admitted
-                    else:
-                        free = [i for i, s in enumerate(self.slots) if s.req is None]
-                        if not free:
-                            return admitted
-                        pending.popleft()
-                        target = free[0]
-                    cond.notify_all()  # wake a pull blocked at high water
-                if reject is not None:
-                    send_reject(req.req_id, reject)
-                    continue
-                first = self.admit(req, target)
-                send_delta(req.req_id, first, 0)
-                finish_if_done(target)  # 1-token request: done at admission
-                admitted += 1
+                batch: list[tuple[Request, int]] = []
+                taken: set[int] = set()
+                while len(taken) < len(self.slots):
+                    action, req, target, why = pop_next(taken)
+                    if action == "reject":
+                        send_reject(req.req_id, why)
+                        continue
+                    if action != "admit":
+                        break
+                    # allocate now (so can_admit sees this batch's pages);
+                    # prefill + insert run once for the whole batch below
+                    self._allocate_for(req)
+                    batch.append((req, target))
+                    taken.add(target)
+                    if not batching:
+                        break
+                if not batch:
+                    return admitted
+                firsts = self._insert_prefill(batch)
+                for (req, target), first in zip(batch, firsts):
+                    send_delta(req.req_id, first, 0)
+                    finish_if_done(target)  # 1-token request: done at admission
+                    admitted += 1
 
         def serve_loop():
             while True:
@@ -459,8 +727,7 @@ class ServeEngine:
                     continue
                 # batched decode step: every slot's last generated token is
                 # fed back at that slot's own position (idle slots decode
-                # garbage at pos 0 — their outputs are masked by never
-                # being read)
+                # garbage against the null page — never read)
                 tokens = np.zeros((len(self.slots),), np.int32)
                 lens = np.zeros((len(self.slots),), np.int32)
                 for i in active:
@@ -468,10 +735,35 @@ class ServeEngine:
                     tokens[i] = s.generated[-1]
                     lens[i] = s.pos
                 self._ensure_cache()
-                self._cache, logits = self._decode(
-                    self.params, self._cache, jnp.asarray(tokens[:, None]),
-                    jnp.asarray(lens),
-                )
+                if self.paged:
+                    # the page holding position pos must exist and be owned
+                    # before the step writes it: extend — and any
+                    # copy-on-write it triggers — happens pre-step
+                    for i in active:
+                        s = self.slots[i]
+                        if self.pages.extend(s.req.req_id, s.pos + 1):
+                            s.pages = self.pages.pages_of(s.req.req_id)
+                    self._apply_cow()
+                    width = self._bt_width(max(
+                        self.pages.pages_needed(self.slots[i].pos + 1)
+                        for i in active
+                    ))
+                    bt = np.full(
+                        (len(self.slots), width), self._null_page, np.int32
+                    )
+                    for i in active:
+                        s = self.slots[i]
+                        cov = self.pages.pages_needed(s.pos + 1)
+                        bt[i, :cov] = s.pages[:cov]
+                    self._cache, logits = self._decode(
+                        self.params, self._cache, jnp.asarray(bt),
+                        jnp.asarray(tokens[:, None]), jnp.asarray(lens),
+                    )
+                else:
+                    self._cache, logits = self._decode(
+                        self.params, self._cache, jnp.asarray(tokens[:, None]),
+                        jnp.asarray(lens),
+                    )
                 self.metrics["decode_steps"] += 1
                 logits_np = np.asarray(logits, np.float32)
                 for i in active:
@@ -479,7 +771,8 @@ class ServeEngine:
                     nxt = int(np.argmax(logits_np[i, : self.cfg.vocab]))
                     s.generated.append(nxt)
                     s.pos += 1  # the fed-back token's KV is now cached
-                    self.pages.extend(s.req.req_id, s.pos)
+                    if not self.paged:
+                        self.pages.extend(s.req.req_id, s.pos)
                     self.metrics["tokens"] += 1
                     send_delta(s.req.req_id, nxt, len(s.generated) - 1)
                     finish_if_done(i)
@@ -503,5 +796,6 @@ class ServeEngine:
     def close(self) -> None:
         for seq in self.pages.live_sequences():
             self.pages.free_sequence(seq)
+        self._live_prompts.clear()
         if self._owns_store:  # never close a store the caller handed in
             self.kv_store.close()

@@ -1,19 +1,44 @@
 """Paged KV-cache bookkeeping under the ownership pattern (paper §IV-C).
 
-The device-side KV cache is a dense (L, B_slots, S_max, …) tensor managed by
-XLA; what leaks in real serving systems is the *control-plane* state — which
-sequence owns which pages, when they can be reused, and the host-side
-prompt/result payloads.  Here every sequence carries real store state:
+Page-pool layout and block-table convention
+-------------------------------------------
+Device-side, the engine keeps each stacked cache leaf as a **page pool**
+``(L, P+1, page_size, ...)``: axis 1 is the physical page id, axis 2 the
+within-page token offset, and token ``t`` of a sequence lives at page
+``pages_of(seq)[t // page_size]``, offset ``t % page_size``.  Index ``P``
+(one past the allocator's range) is the **null page** — a scratch target
+idle slots read and write so the jit'd decode step needs no masking.  A
+sequence's *block table* is simply its ``pages_of`` list, null-padded on
+the right; the paged-attention kernel gathers K/V through it and the
+per-slot length bounds the gather, so short sequences stop paying for
+``max_len``.
+
+Host-side, every sequence carries real store state:
 
 - a *page-list owner* (:class:`OwnedProxy` over ``{"seq", "pages"}``) — the
   control-plane record, mutated through the ownership API on extend;
 - one *Owned KV cell per page* in the store (``page_bytes`` of backing
-  memory each, keyed ``kvpage-{seq}-{page}``) — the host-side paged KV
+  memory each, keyed ``kvpage-{creator}-{page}``) — the host-side paged KV
   residency.  ``free_sequence`` frees every owner, which deterministically
   evicts the cells and **returns the store memory**, not just the page ids
   — the MOF-generation behaviour from the paper's Fig 10 (no manual
   bookkeeping, no leaks), with runtime borrow rules protecting in-flight
   reads.
+
+Prefix sharing and copy-on-write
+--------------------------------
+``allocate(seq, tokens, prefix_of=parent, prefix_tokens=p)`` aliases the
+parent's leading pages instead of copying them: the child holds a runtime
+``borrow`` on each shared cell, so a page's refcount is *1 (creator) + its
+borrow count* and ``free_sequence`` returns a page to the free list only
+at refcount zero (a creator that exits first leaves the cell orphaned but
+resident until the last borrower releases).  A *partial* boundary page is
+shared too — readers mask by length — but the first extend past
+``prefix_tokens`` (or a divergent prompt at allocate) triggers
+**copy-on-write**: a fresh page is drawn, the cell payload is copied, the
+borrow is dropped, and the ``(seq, src, dst)`` event is queued for the
+engine to mirror on the device pool (``drain_cow_events``).  Reservations
+price the potential COW page in, so an admitted extend still never fails.
 
 Admission control rides on *reservations*: ``allocate(seq, tokens,
 reserve_tokens=total)`` holds back the pages a sequence may grow into, so
@@ -25,7 +50,16 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.core.ownership import OwnedProxy, borrow, free, owned_proxy, release, update
+from repro.core.ownership import (
+    OwnedProxy,
+    RefProxy,
+    borrow,
+    free,
+    num_borrows,
+    owned_proxy,
+    release,
+    update,
+)
 from repro.core.store import Store
 
 
@@ -35,17 +69,27 @@ class PageTable:
 
     ``pages_in_use() + pages_free() == num_pages`` always; reserved pages
     are *free but spoken for* (``pages_available`` subtracts them), so an
-    admitted sequence's ``extend`` within its reservation can never fail.
+    admitted sequence's ``extend`` within its reservation can never fail —
+    including the one copy-on-write page a shared partial prefix may need.
     """
 
     num_pages: int
     page_size: int
     store: Store
     page_bytes: int = 0  # per-page KV backing in the store (0 → id marker)
+    pages_allocated_total: int = 0  # free-list pops ever (sharing saves these)
     _free: list[int] = field(default_factory=list)
     _owners: dict[str, OwnedProxy] = field(default_factory=dict)
     _cells: dict[str, dict[int, OwnedProxy]] = field(default_factory=dict)
     _reserved: dict[str, int] = field(default_factory=dict)
+    # prefix sharing state ---------------------------------------------------
+    _borrowed: dict[str, dict[int, RefProxy]] = field(default_factory=dict)
+    _page_owner: dict[int, str] = field(default_factory=dict)  # page → creator
+    _orphans: dict[int, OwnedProxy] = field(default_factory=dict)
+    _prefix_tokens: dict[str, int] = field(default_factory=dict)
+    _tokens: dict[str, int] = field(default_factory=dict)  # max length seen
+    _cow_pending: dict[str, int] = field(default_factory=dict)  # seq → page
+    _cow_events: list[tuple[str, int, int]] = field(default_factory=list)
 
     def __post_init__(self):
         self._free = list(range(self.num_pages))
@@ -71,8 +115,33 @@ class PageTable:
 
     def can_admit(self, tokens: int) -> bool:
         """Admission check: can a sequence of ``tokens`` total length be
-        allocated *and grown to completion* without exhausting the pool?"""
+        allocated *and grown to completion* without exhausting the pool?
+        (Conservative under prefix sharing: assumes no pages are shared.)"""
         return self.pages_needed(tokens) <= self.pages_available()
+
+    def page_refcount(self, page: int) -> int:
+        """Sequences referencing ``page``: creator (if live) + borrowers."""
+        if page in self._orphans:
+            return num_borrows(self._orphans[page])[0]
+        creator = self._page_owner.get(page)
+        if creator is None:
+            return 0
+        return 1 + num_borrows(self._cells[creator][page])[0]
+
+    def borrowed_pages(self, seq_id: str) -> set[int]:
+        """Pages ``seq_id`` references but does not own (shared prefix)."""
+        return set(self._borrowed.get(seq_id, {}))
+
+    def orphan_pages(self) -> set[int]:
+        """Pages whose creator freed while borrows were still outstanding."""
+        return set(self._orphans)
+
+    def drain_cow_events(self) -> list[tuple[str, int, int]]:
+        """Pop the queued copy-on-write ``(seq, src, dst)`` events; the
+        engine mirrors each as a device-pool page copy before decoding and
+        refreshes only ``seq``'s block table (other borrowers keep src)."""
+        ev, self._cow_events = self._cow_events, []
+        return ev
 
     # -- store cells ---------------------------------------------------------
     def page_key(self, seq_id: str, page: int) -> str:
@@ -83,63 +152,169 @@ class PageTable:
         for p in pages:
             payload = bytes(self.page_bytes) if self.page_bytes else p
             cells[p] = owned_proxy(self.store, payload, key=self.page_key(seq_id, p))
+            self._page_owner[p] = seq_id
+
+    def _cell_of(self, page: int) -> OwnedProxy:
+        if page in self._orphans:
+            return self._orphans[page]
+        return self._cells[self._page_owner[page]][page]
+
+    def _borrow_page(self, seq_id: str, page: int) -> None:
+        self._borrowed.setdefault(seq_id, {})[page] = borrow(self._cell_of(page))
+
+    def _drop_borrow(self, seq_id: str, page: int) -> None:
+        release(self._borrowed[seq_id].pop(page))
+        self._collect_orphan(page)
+
+    def _collect_orphan(self, page: int) -> None:
+        """Free an orphaned cell once its last borrower releases."""
+        cell = self._orphans.get(page)
+        if cell is not None and num_borrows(cell)[0] == 0:
+            free(cell)
+            del self._orphans[page]
+            self._free.append(page)
+
+    def _copy_cell(self, seq_id: str, src: int, dst: int) -> None:
+        """COW: materialize ``dst`` as ``seq_id``'s own copy of ``src``."""
+        r = borrow(self._cell_of(src))
+        try:
+            payload = bytes(r) if self.page_bytes else dst
+        finally:
+            release(r)
+        cells = self._cells.setdefault(seq_id, {})
+        cells[dst] = owned_proxy(self.store, payload, key=self.page_key(seq_id, dst))
+        self._page_owner[dst] = seq_id
+
+    def _take(self, n: int) -> list[int]:
+        self.pages_allocated_total += n
+        return [self._free.pop() for _ in range(n)]
 
     # -- allocate / extend / free -------------------------------------------
     def allocate(
-        self, seq_id: str, tokens: int, *, reserve_tokens: int | None = None
+        self,
+        seq_id: str,
+        tokens: int,
+        *,
+        reserve_tokens: int | None = None,
+        prefix_of: str | None = None,
+        prefix_tokens: int | None = None,
     ) -> list[int]:
-        """Claim pages for ``tokens``; optionally reserve growth headroom.
+        """Claim pages for ``tokens``; optionally reserve growth headroom
+        and/or alias a live sequence's prefix pages instead of copying.
 
         ``reserve_tokens`` is the total length the sequence may reach
         (prompt + max new tokens): the delta beyond ``tokens`` stays in the
         free list but is held out of ``pages_available`` until this
         sequence extends into it or frees.
+
+        ``prefix_of``/``prefix_tokens`` share the parent's leading pages by
+        refcount (runtime borrows on the page cells).  A partial boundary
+        page is shared too; if this sequence's prompt already diverges past
+        it the copy-on-write happens here, otherwise it is deferred to the
+        first extend beyond ``prefix_tokens`` — and the reservation prices
+        that future copy in, so extend stays infallible.
         """
         if seq_id in self._owners:
             raise ValueError(f"sequence {seq_id!r} already allocated")
-        n = self.pages_needed(tokens)
-        r = max(n, self.pages_needed(reserve_tokens)) if reserve_tokens else n
-        if r > self.pages_available():
+        n_total = self.pages_needed(tokens)
+        shared: list[int] = []
+        ptok = 0
+        if prefix_of is not None:
+            parent_pages = list(self._owners[prefix_of]["pages"])
+            ptok = prefix_tokens if prefix_tokens is not None else self._tokens.get(prefix_of, 0)
+            ptok = max(0, min(ptok, tokens, self._tokens.get(prefix_of, 0)))
+            n_shared = min(self.pages_needed(ptok), len(parent_pages))
+            ptok = min(ptok, n_shared * self.page_size)
+            shared = parent_pages[:n_shared] if ptok > 0 else []
+            if not shared:
+                ptok = 0
+        n_shared = len(shared)
+        boundary_partial = n_shared > 0 and ptok % self.page_size != 0
+        cow_now = boundary_partial and tokens > ptok
+        reach = max(tokens, reserve_tokens or 0)
+        cow_ever = boundary_partial and reach > ptok
+        fresh_now = n_total - n_shared + (1 if cow_now else 0)
+        fresh_ever = max(
+            self.pages_needed(reach) - n_shared + (1 if cow_ever else 0), fresh_now
+        )
+        if fresh_ever > self.pages_available():
             raise MemoryError(
-                f"KV pool exhausted: need {r} pages (incl. reservation), "
-                f"{self.pages_available()} available "
+                f"KV pool exhausted: need {fresh_ever} pages (incl. "
+                f"reservation), {self.pages_available()} available "
                 f"({len(self._free)} free, {self.pages_reserved()} reserved)"
             )
-        pages = [self._free.pop() for _ in range(n)]
-        self._reserved[seq_id] = r - n
+        fresh = self._take(fresh_now)
+        self._reserved[seq_id] = fresh_ever - fresh_now
+        if cow_now:
+            # prompt already diverges inside the boundary page: copy it now
+            for p in shared[:-1]:
+                self._borrow_page(seq_id, p)
+            dst, rest = fresh[0], fresh[1:]
+            self._copy_cell(seq_id, shared[-1], dst)
+            self._cow_events.append((seq_id, shared[-1], dst))
+            pages = shared[:-1] + [dst] + rest
+            new_cells = rest
+        else:
+            for p in shared:
+                self._borrow_page(seq_id, p)
+            if boundary_partial:
+                self._cow_pending[seq_id] = shared[-1]
+            pages = shared + fresh
+            new_cells = fresh
+        self._prefix_tokens[seq_id] = ptok
+        self._tokens[seq_id] = tokens
         self._owners[seq_id] = owned_proxy(
             self.store, {"seq": seq_id, "pages": pages}, key=f"pages-{seq_id}"
         )
-        self._make_cells(seq_id, pages)
+        self._make_cells(seq_id, new_cells)
         return pages
 
     def extend(self, seq_id: str, new_total_tokens: int) -> list[int]:
         """Grow ``seq_id`` to cover ``new_total_tokens``; returns new pages.
 
         Growth within the sequence's reservation always succeeds; growth
-        beyond it competes with everyone else's unreserved pages.
-        """
+        beyond it competes with everyone else's unreserved pages.  The
+        first growth past a shared partial boundary page copies it
+        (copy-on-write) — the parent's page is never written through."""
         owner = self._owners[seq_id]
-        have = len(owner["pages"])
+        pages = list(owner["pages"])
+        have = len(pages)
         need = self.pages_needed(new_total_tokens)
-        if need <= have:
+        cow_src = self._cow_pending.get(seq_id)
+        cow = (
+            cow_src is not None
+            and new_total_tokens > self._prefix_tokens.get(seq_id, 0)
+        )
+        extra = max(0, need - have)
+        take = extra + (1 if cow else 0)
+        if take == 0:
+            self._tokens[seq_id] = max(self._tokens.get(seq_id, 0), new_total_tokens)
             return []
-        extra = need - have
         own_reserved = self._reserved.get(seq_id, 0)
-        beyond_reservation = max(0, extra - own_reserved)
+        beyond_reservation = max(0, take - own_reserved)
         if beyond_reservation > self.pages_available():
             raise MemoryError(
-                f"KV pool exhausted on extend of {seq_id!r}: need {extra} "
+                f"KV pool exhausted on extend of {seq_id!r}: need {take} "
                 f"pages ({own_reserved} reserved, "
                 f"{self.pages_available()} available)"
             )
-        added = [self._free.pop() for _ in range(extra)]
-        self._reserved[seq_id] = max(0, own_reserved - extra)
+        fresh = self._take(take)
+        self._reserved[seq_id] = max(0, own_reserved - take)
+        added = fresh
+        if cow:
+            dst, added = fresh[0], fresh[1:]
+            self._copy_cell(seq_id, cow_src, dst)
+            self._drop_borrow(seq_id, cow_src)
+            pages[pages.index(cow_src)] = dst
+            del self._cow_pending[seq_id]
+            self._cow_events.append((seq_id, cow_src, dst))
+        pages = pages + added
         # write-back through the ownership API (the owner is the one legal
         # mutator of the page-list record)
-        owner["pages"] = owner["pages"] + added
+        owner["pages"] = pages
         update(owner)
         self._make_cells(seq_id, added)
+        self._tokens[seq_id] = max(self._tokens.get(seq_id, 0), new_total_tokens)
         return added
 
     def pages_of(self, seq_id: str) -> list[int]:
@@ -150,20 +325,35 @@ class PageTable:
             release(ref)
 
     def free_sequence(self, seq_id: str) -> None:
-        """End of sequence: every owner frees; pages *and their store
-        memory* return to the pool (raises OwnershipError while borrowed).
+        """End of sequence: the owner frees; pages *and their store
+        memory* return to the pool at refcount zero (pages other live
+        sequences still borrow stay resident as orphans until the last
+        borrower releases).  Raises OwnershipError while the page-list
+        record itself is borrowed.
 
         The owner frees *before* any table state mutates, so a rejected
         free (outstanding borrow) leaves the sequence fully intact and
         retryable — no leaked pages, no wedged retry."""
         owner = self._owners[seq_id]
-        pages = list(owner["pages"])
         free(owner)  # the only call that can raise: state untouched so far
         self._owners.pop(seq_id)
-        for cell in self._cells.pop(seq_id, {}).values():
-            free(cell)  # evicts the KV backing from the store
+        returned = []
+        for p, cell in self._cells.pop(seq_id, {}).items():
+            if num_borrows(cell)[0]:
+                self._orphans[p] = cell  # shared: resident until last release
+                self._page_owner.pop(p, None)
+            else:
+                free(cell)  # evicts the KV backing from the store
+                self._page_owner.pop(p, None)
+                returned.append(p)
+        self._free.extend(returned)
+        for p, ref in self._borrowed.pop(seq_id, {}).items():
+            release(ref)
+            self._collect_orphan(p)
         self._reserved.pop(seq_id, None)
-        self._free.extend(pages)
+        self._prefix_tokens.pop(seq_id, None)
+        self._tokens.pop(seq_id, None)
+        self._cow_pending.pop(seq_id, None)
 
     def live_sequences(self) -> list[str]:
         return list(self._owners)

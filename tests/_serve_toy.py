@@ -54,6 +54,22 @@ class CountingModel:
         logits = jax.nn.one_hot(nxt.astype(jnp.int32), self.cfg.vocab)
         return logits, {"hist": hist}
 
+    def prefill_batch(self, params, tokens, lens, max_len: int):
+        """Batched multi-request prefill: (B, S) right-padded prompts with
+        per-row valid lengths.  Pad positions hold 0, so the integer prefix
+        sums match the per-request ``prefill`` exactly (bit-identical)."""
+        B, S = tokens.shape
+        valid = jnp.arange(S)[None, :] < lens[:, None]
+        toks = jnp.where(valid, tokens, 0).astype(jnp.float32)
+        hist = jnp.zeros((1, B, max_len, 1), jnp.float32)
+        hist = hist.at[:, :, :S, 0].set(toks[None])
+        idx = jnp.maximum(lens - 1, 0)  # (B,) last valid position per row
+        mask = (jnp.arange(max_len)[None, :] <= idx[:, None])[None, :, :, None]
+        prefix = jnp.sum(jnp.where(mask, hist, 0.0), axis=2)  # (1, B, 1)
+        nxt = (prefix[0, :, 0] + idx + 1) % self.cfg.vocab
+        logits = jax.nn.one_hot(nxt.astype(jnp.int32), self.cfg.vocab)
+        return logits, {"hist": hist}
+
     def decode_step(self, params, cache, tokens, index):
         """tokens (B, 1) is the token *at* position ``index``; logits
         predict position ``index + 1`` (the convention pinned by

@@ -312,6 +312,203 @@ class TestPageTableInvariants:
         store.close()
 
 
+class TestPrefixSharingInvariants:
+    """Refcounted shared KV pages (paged-decode PR): conservation under
+    arbitrary allocate/share/extend/free interleavings, copy-on-write
+    isolation, no double-free, and exact availability accounting."""
+
+    def _pt(self, num_pages=16, page_size=4):
+        from repro.serve.kvcache import PageTable
+
+        store = Store(f"psp-{np.random.randint(1e9)}")
+        return (
+            PageTable(
+                num_pages=num_pages, page_size=page_size, store=store,
+                page_bytes=8,
+            ),
+            store,
+        )
+
+    def _check_refcounts(self, pt, live):
+        """Every page referenced by any live sequence has a refcount equal
+        to the number of live sequences referencing it — creators and
+        borrowers indistinguishable to the count, orphans included."""
+        refs: dict[int, int] = {}
+        for sid in live:
+            for p in pt.pages_of(sid):
+                refs[p] = refs.get(p, 0) + 1
+        for p, n in refs.items():
+            assert pt.page_refcount(p) == n, (p, n)
+        # conservation: the union of referenced pages IS the in-use set
+        assert pt.pages_in_use() == len(refs)
+        assert pt.pages_in_use() + pt.pages_free() == pt.num_pages
+        assert 0 <= pt.pages_reserved() <= pt.pages_free()
+        # orphans are exactly the in-use pages whose creator is dead
+        assert pt.orphan_pages() <= set(refs)
+
+    @SETTINGS
+    @given(ops=st.lists(st.integers(0, 10**6), max_size=40))
+    def test_sharing_interleavings_conserve_refcounts(self, ops):
+        pt, store = self._pt()
+        live: dict[str, int] = {}
+        next_id = 0
+        for code in ops:
+            kind, arg = code % 4, code // 4
+            if kind == 0:  # plain allocate
+                tokens = arg % 20 + 1
+                sid = f"s{next_id}"
+                next_id += 1
+                try:
+                    pt.allocate(sid, tokens, reserve_tokens=tokens + arg % 9)
+                except MemoryError:
+                    pass
+                else:
+                    live[sid] = tokens
+            elif kind == 1 and live:  # allocate sharing a live prefix
+                parent = sorted(live)[arg % len(live)]
+                ptok = arg % (live[parent] + 1)
+                tokens = max(1, ptok + arg % 8)
+                sid = f"s{next_id}"
+                next_id += 1
+                try:
+                    pt.allocate(
+                        sid, tokens, reserve_tokens=tokens + arg % 5,
+                        prefix_of=parent, prefix_tokens=ptok,
+                    )
+                except MemoryError:
+                    pass
+                else:
+                    live[sid] = tokens
+            elif kind == 2 and live:  # extend (may cross a COW boundary)
+                sid = sorted(live)[arg % len(live)]
+                new_total = live[sid] + arg % 11
+                try:
+                    pt.extend(sid, new_total)
+                except MemoryError:
+                    pass
+                else:
+                    live[sid] = max(live[sid], new_total)
+            elif kind == 3 and live:  # free (parents may die first)
+                sid = sorted(live)[arg % len(live)]
+                pt.free_sequence(sid)
+                del live[sid]
+            self._check_refcounts(pt, live)
+        for sid in list(live):
+            pt.free_sequence(sid)
+        assert pt.pages_free() == pt.num_pages
+        assert pt.orphan_pages() == set()
+        assert sorted(pt._free) == list(range(pt.num_pages))
+        store.close()
+
+    @SETTINGS
+    @given(
+        ptok=st.integers(1, 16),
+        child_extra=st.integers(0, 10),
+        grow=st.integers(0, 12),
+    )
+    def test_cow_never_mutates_parent_and_extend_never_fails(
+        self, ptok, child_extra, grow
+    ):
+        """A sharer crossing its prefix boundary copies, never mutates:
+        the parent's page list, cells, and refcounts are untouched, and
+        the sharer's reservation priced the COW page in, so token-by-token
+        extension to the reserved total never raises."""
+        pt, store = self._pt(num_pages=32, page_size=4)
+        pt.allocate("par", 16, reserve_tokens=20)
+        before = list(pt.pages_of("par"))
+        child_tokens = max(1, ptok + child_extra)
+        reach = child_tokens + grow
+        pt.allocate(
+            "ch", child_tokens, reserve_tokens=reach,
+            prefix_of="par", prefix_tokens=ptok,
+        )
+        assert pt.pages_of("par") == before
+        for t in range(child_tokens, reach + 1):
+            pt.extend("ch", t)  # MemoryError here = reservation violated
+        assert pt.pages_of("par") == before
+        for p in before:
+            assert store.exists(pt.page_key("par", p))  # cells intact
+        # once the child outgrew the prefix, any partially-shared boundary
+        # page was copied: overlap is confined to *full* shared pages
+        eff = min(ptok, child_tokens)
+        overlap = set(before) & set(pt.pages_of("ch"))
+        if reach > eff:
+            assert overlap == set(before[: eff // 4])
+        # the child's refcounts on shared pages drop to 1 after its free
+        pt.free_sequence("ch")
+        assert all(pt.page_refcount(p) == 1 for p in before)
+        pt.free_sequence("par")
+        assert pt.pages_free() == pt.num_pages
+        store.close()
+
+    @SETTINGS
+    @given(
+        n_children=st.integers(1, 4),
+        parent_first=st.booleans(),
+        ptok=st.integers(4, 12),
+    )
+    def test_no_double_free_any_teardown_order(
+        self, n_children, parent_first, ptok
+    ):
+        """Shared pages survive their creator (orphaned, not freed), are
+        returned exactly once when the last borrower exits, and freeing a
+        dead sequence raises instead of corrupting the free list."""
+        pt, store = self._pt(num_pages=32, page_size=4)
+        pt.allocate("par", 16, reserve_tokens=16)
+        shared = set(pt.pages_of("par")[: ptok // 4])
+        for i in range(n_children):
+            pt.allocate(
+                f"ch{i}", ptok, reserve_tokens=ptok + 4,
+                prefix_of="par", prefix_tokens=ptok,
+            )
+        order = (["par"] + [f"ch{i}" for i in range(n_children)]) if (
+            parent_first
+        ) else ([f"ch{i}" for i in range(n_children)] + ["par"])
+        for k, sid in enumerate(order):
+            pt.free_sequence(sid)
+            if parent_first and k == 0 and shared:
+                # creator died with borrows out: cells orphaned, not freed
+                assert shared <= pt.orphan_pages() | {
+                    p for c in range(n_children) for p in pt.pages_of(f"ch{c}")
+                }
+        assert pt.orphan_pages() == set()
+        assert pt.pages_free() == pt.num_pages
+        assert sorted(pt._free) == list(range(pt.num_pages))
+        with pytest.raises(KeyError):
+            pt.free_sequence("par")  # double-free is an error, not a leak
+        assert pt.pages_free() == pt.num_pages
+        store.close()
+
+    @SETTINGS
+    @given(ptok=st.integers(0, 16), extra=st.integers(1, 8))
+    def test_available_accounting_exact_with_shared_pages(self, ptok, extra):
+        """pages_available reflects sharing exactly: a child consumes only
+        its fresh pages (plus the priced-in COW page for a partial
+        boundary), never re-counts borrowed ones."""
+        pt, store = self._pt(num_pages=32, page_size=4)
+        pt.allocate("par", 16, reserve_tokens=16)
+        avail = pt.pages_available()
+        total_before = pt.pages_allocated_total
+        tokens = ptok + extra
+        pt.allocate(
+            "ch", tokens, reserve_tokens=tokens,
+            prefix_of="par", prefix_tokens=ptok,
+        )
+        # tokens > ptok always here, so a partial boundary page COWs at
+        # allocate and lands in the fresh count; either way the identity
+        # is: fresh pages drawn == pages needed − pages borrowed
+        n_borrowed = len(pt.borrowed_pages("ch"))
+        fresh_now = pt.pages_allocated_total - total_before
+        assert fresh_now == pt.pages_needed(tokens) - n_borrowed
+        # availability dropped by exactly the fresh pages (reserve==tokens,
+        # so no growth reservation is held back on top)
+        assert pt.pages_available() == avail - fresh_now
+        pt.free_sequence("ch")
+        pt.free_sequence("par")
+        assert pt.pages_available() == pt.num_pages
+        store.close()
+
+
 class TestShardingRules:
     @SETTINGS
     @given(

@@ -49,7 +49,9 @@ def make_streams(*, timeout=30.0, resp_timeout=30.0):
     }
 
 
-def make_engine(*, slots=2, max_len=32, page_size=4, eos_id=-1, num_pages=None):
+def make_engine(
+    *, slots=2, max_len=32, page_size=4, eos_id=-1, num_pages=None, **kw
+):
     ctx = serve_context(CFG)
     engine = ServeEngine(
         ctx,
@@ -59,6 +61,7 @@ def make_engine(*, slots=2, max_len=32, page_size=4, eos_id=-1, num_pages=None):
         page_size=page_size,
         eos_id=eos_id,
         model=CountingModel(CFG),
+        **kw,
     )
     if num_pages is not None:  # shrink the pool to force backpressure
         engine.pages.num_pages = num_pages
@@ -628,3 +631,141 @@ class TestLaunchServe:
         # rc==0 already implies it, but pin the exit-path claims explicitly
         assert "pages in use at exit: 0" in out
         assert "5/5 requests" in out
+
+
+class TestPagedDecode:
+    """The paged pool rework: batched prefill admission, prefix sharing
+    with copy-on-write, orphaned shared pages, and the dense fallback —
+    all bit-identical to the sequential reference."""
+
+    def test_batched_admission_bit_identical(self):
+        """A backlog admitted into 4 free slots goes through ONE padded
+        prefill + one multi-page insert, and changes no tokens."""
+        rng = np.random.default_rng(7)
+        engine = make_engine(slots=4, max_len=32, page_size=4)
+        reqs = {
+            f"b{i}": (rng.integers(1, CFG.vocab, 3 + i).astype(np.int32), 6)
+            for i in range(4)
+        }
+        completed, _ = serve(engine, reqs)
+        for rid, (prompt, max_new) in reqs.items():
+            assert completed[rid]["tokens"] == reference_decode(
+                CFG, prompt, max_new, max_len=32
+            ), rid
+        assert engine.metrics["batched_prefills"] >= 1
+        engine.close()
+
+    def test_batched_prefill_off_still_correct(self):
+        rng = np.random.default_rng(8)
+        engine = make_engine(slots=4, max_len=32, batch_prefill=False)
+        reqs = {
+            f"s{i}": (rng.integers(1, CFG.vocab, 4).astype(np.int32), 5)
+            for i in range(4)
+        }
+        completed, _ = serve(engine, reqs)
+        for rid, (prompt, max_new) in reqs.items():
+            assert completed[rid]["tokens"] == reference_decode(
+                CFG, prompt, max_new, max_len=32
+            ), rid
+        assert engine.metrics["batched_prefills"] == 0
+        engine.close()
+
+    def test_prefix_sharing_aliases_full_pages(self):
+        """Two prompts sharing a page-aligned prefix: the second borrows
+        the first's pages (no duplicate allocation) and still decodes
+        bit-identically."""
+        common = np.asarray([5, 6, 7, 8], np.int32)  # exactly one page
+        p1 = np.concatenate([common, [1, 2, 3]]).astype(np.int32)
+        p2 = np.concatenate([common, [9, 9]]).astype(np.int32)
+        engine = make_engine(slots=2, max_len=32, page_size=4)
+        completed, _ = serve(engine, {"a": (p1, 5), "b": (p2, 5)})
+        for rid, (prompt, max_new) in {"a": (p1, 5), "b": (p2, 5)}.items():
+            assert completed[rid]["tokens"] == reference_decode(
+                CFG, prompt, max_new, max_len=32
+            ), rid
+        assert engine.metrics["prefix_shared_pages"] >= 1
+        # everything reclaimed: shared refcounts drained to zero
+        assert engine.pages.pages_in_use() == 0
+        assert engine.pages.pages_free() == engine.pages.num_pages
+        engine.close()
+
+    def test_prefix_sharing_cow_on_divergent_boundary_page(self):
+        """A prefix that ends mid-page triggers copy-on-write — at
+        allocation when the prompt already diverges inside the boundary
+        page, at first extend when it diverges later.  Neither changes a
+        token of either sequence."""
+        # lcp = 6 ends inside page 2 (page_size 4); "c" diverges at
+        # allocate, "d" only when its decode extends past the prefix
+        p1 = np.asarray([5, 6, 7, 8, 1, 2, 3], np.int32)
+        p_div = np.asarray([5, 6, 7, 8, 1, 2, 9, 9], np.int32)
+        p_ext = np.asarray([5, 6, 7, 8, 1, 2], np.int32)
+        engine = make_engine(slots=3, max_len=32, page_size=4)
+        reqs = {"a": (p1, 5), "c": (p_div, 5), "d": (p_ext, 5)}
+        completed, _ = serve(engine, reqs)
+        for rid, (prompt, max_new) in reqs.items():
+            assert completed[rid]["tokens"] == reference_decode(
+                CFG, prompt, max_new, max_len=32
+            ), rid
+        assert engine.metrics["prefix_shared_pages"] >= 2
+        assert engine.metrics["cow_page_copies"] >= 2
+        assert engine.pages.pages_in_use() == 0
+        engine.close()
+
+    def test_parent_finishing_first_orphans_then_reclaims(self):
+        """The prefix creator finishes while a borrower still decodes: the
+        shared cells outlive their creator (orphaned, not freed) and the
+        borrower's tokens are unaffected; the pool and store drain fully
+        once the borrower finishes."""
+        common = np.asarray([3, 1, 4, 1, 5, 9, 2, 6], np.int32)  # 2 pages
+        p_parent = common
+        p_child = np.concatenate([common, [7, 7]]).astype(np.int32)
+        engine = make_engine(slots=2, max_len=32, page_size=4)
+        store = engine.kv_store
+        reqs = {"parent": (p_parent, 1), "child": (p_child, 8)}
+        completed, _ = serve(engine, reqs)
+        assert completed["child"]["tokens"] == reference_decode(
+            CFG, p_child, 8, max_len=32
+        )
+        assert engine.metrics["prefix_shared_pages"] >= 2
+        assert engine.pages.pages_in_use() == 0
+        assert engine.pages.orphan_pages() == set()
+        assert sorted(engine.pages._free) == list(range(engine.pages.num_pages))
+        for key in list(getattr(store, "_data", {})) or []:
+            assert not str(key).startswith("kvpage-")
+        engine.close()
+
+    def test_dense_fallback_bit_identical(self):
+        """paged=False keeps the dense (L, B, S, ...) layout end to end."""
+        rng = np.random.default_rng(9)
+        engine = make_engine(slots=2, max_len=32, paged=False)
+        assert engine.paged is False
+        reqs = {
+            f"d{i}": (rng.integers(1, CFG.vocab, 5).astype(np.int32), 6)
+            for i in range(3)
+        }
+        completed, _ = serve(engine, reqs)
+        for rid, (prompt, max_new) in reqs.items():
+            assert completed[rid]["tokens"] == reference_decode(
+                CFG, prompt, max_new, max_len=32
+            ), rid
+        engine.close()
+
+    def test_indivisible_page_size_falls_back_to_dense(self):
+        engine = make_engine(slots=1, max_len=30, page_size=4)
+        assert engine.paged is False
+        prompt = np.asarray([1, 2, 3], np.int32)
+        completed, _ = serve(engine, {"x": (prompt, 4)})
+        assert completed["x"]["tokens"] == reference_decode(
+            CFG, prompt, 4, max_len=30
+        )
+        engine.close()
+
+    def test_pool_cache_is_page_granular(self):
+        """The device cache is (L, P+1, page_size, ...) — page pool plus
+        one null scratch page — not (L, B, max_len, ...)."""
+        engine = make_engine(slots=2, max_len=32, page_size=4)
+        engine._ensure_cache()
+        leaf = engine._cache["hist"]
+        assert leaf.shape[1] == engine._null_page + 1
+        assert leaf.shape[2] == engine.pages.page_size
+        engine.close()

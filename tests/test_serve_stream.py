@@ -119,6 +119,35 @@ class TestDeltaContract:
         assert len(rec.stream_tokens) == 1
         assert rec.stream_tokens == rec.result["tokens"]
 
+    def test_batched_admission_streams_per_request_deltas(self):
+        """A backlog admitted in one batched prefill still streams every
+        request's deltas in order and bit-identical to the reference (the
+        batching is a device-side detail, invisible on the wire)."""
+        rng = np.random.default_rng(5)
+        s = queue_streams()
+        reqs = {
+            f"m{i}": (rng.integers(1, CFG.vocab, 4 + i).astype(np.int32), 5)
+            for i in range(4)
+        }
+        for rid, (p, mn) in reqs.items():
+            send(s["producer"], rid, p, mn)
+        s["producer"].close_topic("requests")
+        engine = make_engine(slots=4)
+        client = ServeClient(s["resp_consumer"])
+        collector = threading.Thread(target=client.collect, daemon=True)
+        collector.start()
+        engine.run(s["consumer"], s["resp_producer"])
+        collector.join(timeout=30)
+        assert not collector.is_alive()
+        assert engine.metrics["batched_prefills"] >= 1
+        assert not client.out_of_order
+        for rid, (prompt, max_new) in reqs.items():
+            ref = reference_decode(CFG, prompt, max_new, max_len=32)
+            rec = client.results[rid]
+            assert rec.stream_tokens == ref, rid
+            assert rec.result["tokens"] == ref, rid
+        engine.close()
+
     def test_topic_closes_cleanly(self):
         prompt = np.asarray([1, 2, 3], np.int32)
         client, _ = self._serve_collect({"c": (prompt, 3)})
