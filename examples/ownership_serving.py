@@ -75,7 +75,7 @@ def main():
     def tracer():
         while not done.is_set():
             active_trace.append(engine.pages.pages_in_use())
-            time.sleep(0.05)
+            time.sleep(0.05)  # proxylint: disable=no-sleep-poll (sampling tracer)
 
     done = threading.Event()
     threading.Thread(target=client, daemon=True).start()

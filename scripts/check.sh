@@ -10,7 +10,18 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== tier-1: pytest =="
+echo "== proxy-lint: static proxy-lifecycle rules =="
+# ProxyLint (src/repro/analysis/lint.py): AST rules for the proxy
+# anti-patterns this repo keeps re-litigating in review — sleep-polling,
+# busy-wait loops on exists(), stale mutable-key reads, donated-buffer
+# reuse, discarded ownership mints, swallowed errors.  Non-zero exit on
+# any violation; suppressions are inline `# proxylint: disable=<rule>`
+# pragmas so every exception is visible in the diff.  Runs in --fast
+# mode too: it is the cheapest gate in this file.
+python scripts/proxy_lint.py
+
+echo
+echo "== tier-1: pytest (under ProxySan) =="
 # Subprocess/chaos tests (@pytest.mark.multiproc) run under a per-test
 # SIGALRM watchdog (tests/conftest.py): a wedged child fails its test fast
 # instead of hanging the whole gate.  This covers the serve suite's
@@ -18,8 +29,23 @@ echo "== tier-1: pytest =="
 # marker.  The env var is a hard CAP over every multiproc test's budget
 # (including per-test overrides); 300 s bounds the gate's worst case while
 # leaving the chaos suite slack on a loaded box.
+#
+# REPRO_PROXYSAN=1 runs the whole suite under the runtime sanitizer
+# (src/repro/core/sanitize.py): any test that triggers a use-after-evict,
+# double-free, refcount underflow, or stale cache read fails, and the
+# session exits non-zero if an Owned cell is still resident at the end
+# (tests/conftest.py session gate).
 REPRO_MULTIPROC_TIMEOUT="${REPRO_MULTIPROC_TIMEOUT:-300}" \
+    REPRO_PROXYSAN=1 \
     python -m pytest -x -q
+
+echo
+echo "== proxysan: cross-process smoke =="
+# Named re-run of the sanitizer's multiproc smoke (also part of tier-1):
+# a producer/consumer pair over a FileConnector, both processes under
+# REPRO_PROXYSAN=1, both leak reports asserted clean — the sanitizer's
+# own end-to-end contract stays visible in the gate output.
+REPRO_PROXYSAN=1 python -m pytest -x -q tests/test_proxysan.py -k smoke
 
 echo
 echo "== kernels: Pallas interpret-mode vs jnp oracles =="

@@ -1,0 +1,19 @@
+#!/usr/bin/env python
+"""CLI for ProxyLint (see repro.analysis.lint for the rule docs).
+
+    python scripts/proxy_lint.py [paths...] [--json] [--select rules] [--list-rules]
+
+Exits non-zero when any violation is reported — scripts/check.sh runs
+this as a named gate step.
+"""
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+)
+
+from repro.analysis.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+"""Static analysis tooling for the proxy patterns (ProxyLint)."""

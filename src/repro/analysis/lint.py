@@ -1,0 +1,718 @@
+"""ProxyLint — static lint pass for proxy-lifecycle rules.
+
+The proxy patterns come with contracts the type system cannot see:
+notification-driven paths must not poll, mutable keys must be read
+fresh, donated jit buffers die at the call, and every Owned mint needs
+a reachable free.  ProxyLint walks the AST of ``src/``,
+``benchmarks/``, and ``examples/`` and enforces them mechanically.
+
+Run it::
+
+    python scripts/proxy_lint.py                 # human output, exit != 0 on hits
+    python scripts/proxy_lint.py --json          # machine output
+    python scripts/proxy_lint.py src/repro/serve # explicit paths
+    python scripts/proxy_lint.py --select no-sleep-poll,swallowed-error
+    python scripts/proxy_lint.py --list-rules
+
+Rules
+-----
+``no-sleep-poll``
+    ``time.sleep`` inside any loop, anywhere — and *any* ``time.sleep``
+    at all in the notification-driven hot-path modules (serve engine,
+    streaming, futures, store, connectors, executor, serve client).
+    Blocking must ride a condition variable or the connector
+    ``wait_for`` protocol; documented backoff sites carry a pragma.
+
+``connector-wait-protocol``
+    A ``while`` loop that waits for channel state — a negated existence
+    test (``while not store.exists(k)`` / ``while not f.done()``), or a
+    positive one with a sleep in the body — is a busy-wait; route it
+    through ``connectors.wait_for`` / ``wait_for_any`` (or
+    ``Store.wait_for``), which use native notification waits (inotify,
+    broker conditions).  Positive probes that walk a chain of cells
+    (``while store.exists(next_cell)``) terminate on their own and are
+    not flagged.
+
+``mutable-key-fresh``
+    In cross-process modules (``dist/``, ``data/``, ``ckpt/``): a key
+    expression that is ever written with a plain overwrite
+    (``store.put(obj, key=K)``) is *mutable*; reading the same key
+    expression via ``.get(K)`` / ``.resolve(K)`` without
+    ``fresh=True`` (or ``writable=True``) can serve a stale cached
+    value — cache invalidation is in-process only.  Write-once cells
+    (``put_if_absent``) are exempt.
+
+``donated-reuse``
+    For ``f = jax.jit(fn, donate_argnums=(i, ...))``: an argument
+    passed at a donated position is dead after the call — its buffer
+    is aliased to the output.  The rule flags a later read of the same
+    name/attribute in the function unless it is reassigned first
+    (``self._cache, logits = self._decode(self.params, self._cache, …)``
+    is the sanctioned shape).
+
+``owned-lifetime``
+    Every ownership mint (``owned_proxy(...)``, ``pages.allocate(...)``)
+    must have a *reachable* free: the mint's result must not be
+    discarded, and a module that mints owners must reference a
+    ``free``/``free_sequence``/``Lifetime`` somewhere (returning the
+    mint — transferring ownership to the caller — satisfies the rule
+    via the caller's module).  The discarded-result check applies only
+    to ``owned_proxy`` mints: ``allocate(...)`` mutates the pool it is
+    called on, so a bare ``pages.allocate(n)`` statement is a
+    legitimate reservation, not a dropped owner.
+
+``swallowed-error``
+    Bare ``except:``, and broad ``except Exception/BaseException``
+    handlers whose whole body is ``pass``/``continue``: in puller and
+    watch threads these turn real failures into silent hangs.
+    ``__del__`` bodies are exempt (exceptions there never propagate
+    anyway).
+
+Suppression
+-----------
+End-of-line pragma, one or more comma-separated rules::
+
+    time.sleep(delay)  # proxylint: disable=no-sleep-poll
+    except Exception:  # proxylint: disable=swallowed-error,no-sleep-poll
+
+A pragma on the line where the violation is *reported* suppresses it.
+There is deliberately no file-level disable: every allowlisted site is
+visible and justified inline.
+
+ProxySan (the runtime half)
+---------------------------
+Static rules can't see dynamic misuse (double-free across call chains,
+stale cross-store reads).  For that, run the suite under the runtime
+sanitizer::
+
+    REPRO_PROXYSAN=1 PYTHONPATH=src python -m pytest -q
+    REPRO_PROXYSAN=1 PYTHONPATH=src python -m repro.launch.serve ...
+
+or opt in per store with ``Store(name, sanitize=True)`` — see
+:mod:`repro.core.sanitize`.  ``scripts/check.sh`` runs both layers.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass, field
+
+# Modules where *any* time.sleep is a violation (notification-driven
+# contracts; see PR 3's wait_for protocol and PR 5's serve loop).
+HOT_PATH_SUFFIXES = (
+    "core/streaming.py",
+    "core/futures.py",
+    "core/store.py",
+    "core/connectors.py",
+    "core/executor.py",
+    "core/proxy.py",
+    "serve/engine.py",
+    "serve/client.py",
+)
+
+# Modules whose stores are read across processes: the mutable-key rule
+# applies (elsewhere a same-process overwrite invalidates the cache).
+CROSS_PROCESS_SUFFIXES = (
+    "dist/",
+    "data/",
+    "ckpt/",
+)
+
+_PRAGMA = re.compile(r"#\s*proxylint:\s*disable=([\w\-, ]+)")
+
+
+@dataclass
+class LintViolation:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+    hint: str = ""
+
+    def to_dict(self) -> dict:
+        return {
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "rule": self.rule,
+            "message": self.message,
+            "hint": self.hint,
+        }
+
+    def render(self) -> str:
+        s = f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+        if self.hint:
+            s += f"\n    hint: {self.hint}"
+        return s
+
+
+@dataclass
+class FileContext:
+    path: str  # as given (display)
+    relpath: str  # posix, repo-ish relative — suffix matching
+    src: str
+    tree: ast.AST
+    disabled: dict[int, set] = field(default_factory=dict)  # line → rules
+    parents: dict = field(default_factory=dict)  # node → parent
+
+    @classmethod
+    def load(cls, path: str) -> "FileContext | None":
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                src = f.read()
+            tree = ast.parse(src, filename=path)
+        except (OSError, SyntaxError):
+            return None
+        disabled: dict[int, set] = {}
+        for i, line in enumerate(src.splitlines(), start=1):
+            m = _PRAGMA.search(line)
+            if m:
+                disabled[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        ctx = cls(
+            path=path,
+            relpath=os.path.abspath(path).replace(os.sep, "/"),
+            src=src,
+            tree=tree,
+            disabled=disabled,
+        )
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                ctx.parents[child] = node
+        return ctx
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        return rule in self.disabled.get(line, ())
+
+    def is_hot_path(self) -> bool:
+        return self.relpath.endswith(HOT_PATH_SUFFIXES)
+
+    def is_cross_process(self) -> bool:
+        return any(f"/{s}" in self.relpath for s in CROSS_PROCESS_SUFFIXES)
+
+    def in_loop(self, node: ast.AST) -> bool:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.While, ast.For, ast.AsyncFor)):
+                return True
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                return False  # a nested def breaks the loop scope
+            cur = self.parents.get(cur)
+        return False
+
+    def enclosing_function(self, node: ast.AST):
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def in_del(self, node: ast.AST) -> bool:
+        cur = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur.name == "__del__"
+            cur = self.parents.get(cur)
+        return False
+
+
+def _dump(node: ast.AST) -> str:
+    return ast.dump(node, annotate_fields=False)
+
+
+def _terminal_name(node: ast.AST) -> str | None:
+    """The last identifier of a Name/Attribute chain (``self.store`` → store)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+class Rule:
+    name: str = ""
+    description: str = ""
+    hint: str = ""
+
+    def check(self, ctx: FileContext) -> list[LintViolation]:  # pragma: no cover
+        raise NotImplementedError
+
+    def _v(self, ctx: FileContext, node: ast.AST, message: str) -> LintViolation:
+        return LintViolation(
+            path=ctx.path,
+            line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0),
+            rule=self.name,
+            message=message,
+            hint=self.hint,
+        )
+
+
+class NoSleepPoll(Rule):
+    name = "no-sleep-poll"
+    description = (
+        "time.sleep in a loop (polling), or anywhere in a "
+        "notification-driven hot-path module"
+    )
+    hint = (
+        "block on a condition variable or the connector wait_for protocol; "
+        "a documented bounded backoff may carry "
+        "'# proxylint: disable=no-sleep-poll'"
+    )
+
+    def _is_sleep(self, call: ast.Call, ctx: FileContext) -> bool:
+        f = call.func
+        if isinstance(f, ast.Attribute) and f.attr == "sleep":
+            base = f.value
+            return isinstance(base, ast.Name) and base.id == "time"
+        if isinstance(f, ast.Name) and f.id == "sleep":
+            return "from time import" in ctx.src and "sleep" in ctx.src
+        return False
+
+    def check(self, ctx: FileContext) -> list[LintViolation]:
+        out = []
+        hot = ctx.is_hot_path()
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call) and self._is_sleep(node, ctx)):
+                continue
+            if hot:
+                out.append(self._v(
+                    ctx, node,
+                    "time.sleep in a notification-driven hot-path module",
+                ))
+            elif ctx.in_loop(node):
+                out.append(self._v(
+                    ctx, node, "time.sleep inside a loop (sleep-polling)",
+                ))
+        return out
+
+
+class ConnectorWaitProtocol(Rule):
+    name = "connector-wait-protocol"
+    description = (
+        "while-loop condition polling channel state (.exists()/.done()) "
+        "instead of the connector wait_for protocol"
+    )
+    hint = (
+        "use connectors.wait_for/wait_for_any (or Store.wait_for / "
+        "future.result()): native notification waits, no poll interval"
+    )
+
+    @staticmethod
+    def _negated(ctx: FileContext, call: ast.Call) -> bool:
+        cur = ctx.parents.get(call)
+        while cur is not None and not isinstance(cur, ast.While):
+            if isinstance(cur, ast.UnaryOp) and isinstance(cur.op, ast.Not):
+                return True
+            cur = ctx.parents.get(cur)
+        return False
+
+    @staticmethod
+    def _body_sleeps(loop: ast.While) -> bool:
+        for sub in ast.walk(loop):
+            if (
+                isinstance(sub, ast.Call)
+                and isinstance(sub.func, ast.Attribute)
+                and sub.func.attr == "sleep"
+            ):
+                return True
+        return False
+
+    def check(self, ctx: FileContext) -> list[LintViolation]:
+        out = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.While):
+                continue
+            for sub in ast.walk(node.test):
+                if not (
+                    isinstance(sub, ast.Call)
+                    and isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr in ("exists", "done")
+                ):
+                    continue
+                # waiting for appearance (negated test), or a positive
+                # probe that sleeps between re-checks, is a busy-wait;
+                # a positive probe walking a chain terminates on its own
+                if self._negated(ctx, sub) or self._body_sleeps(node):
+                    out.append(self._v(
+                        ctx, sub,
+                        f"busy-wait on .{sub.func.attr}() in a while "
+                        "condition",
+                    ))
+        return out
+
+
+class MutableKeyFresh(Rule):
+    name = "mutable-key-fresh"
+    description = (
+        "in cross-process modules, reading a key that is elsewhere "
+        "overwritten in place (store.put(obj, key=K)) without fresh=True"
+    )
+    hint = (
+        "read mutable cells with store.get(K, fresh=True) / "
+        "resolve(K, fresh=True) — the resolve cache is invalidated "
+        "in-process only; write-once cells should use put_if_absent"
+    )
+    _READS = ("get", "resolve")
+
+    @staticmethod
+    def _is_store_recv(node: ast.AST) -> bool:
+        t = _terminal_name(node)
+        return t is not None and "store" in t.lower()
+
+    def check(self, ctx: FileContext) -> list[LintViolation]:
+        if not ctx.is_cross_process():
+            return []
+        mutable: set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)):
+                continue
+            if node.func.attr != "put" or not self._is_store_recv(node.func.value):
+                continue
+            key_expr = None
+            for kw in node.keywords:
+                if kw.arg == "key":
+                    key_expr = kw.value
+            if key_expr is None and len(node.args) >= 2:
+                key_expr = node.args[1]
+            if key_expr is not None and not isinstance(key_expr, ast.Constant):
+                mutable.add(_dump(key_expr))
+            elif isinstance(key_expr, ast.Constant):
+                mutable.add(_dump(key_expr))
+        if not mutable:
+            return []
+        out = []
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)):
+                continue
+            if node.func.attr not in self._READS:
+                continue
+            if not self._is_store_recv(node.func.value):
+                continue
+            if not node.args:
+                continue
+            if _dump(node.args[0]) not in mutable:
+                continue
+            safe = any(
+                kw.arg in ("fresh", "writable")
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value
+                for kw in node.keywords
+            )
+            if not safe:
+                out.append(self._v(
+                    ctx, node,
+                    f"read of mutable key (overwritten via put(key=...) in "
+                    f"this module) without fresh=True",
+                ))
+        return out
+
+
+class DonatedReuse(Rule):
+    name = "donated-reuse"
+    description = (
+        "argument at a donated jit position referenced after the call "
+        "(its buffer is aliased to the output)"
+    )
+    hint = (
+        "reassign the donated name from the call result "
+        "(`x, out = jitted(params, x, ...)`) before any later use"
+    )
+
+    @staticmethod
+    def _donated_positions(call: ast.Call) -> list[int] | None:
+        """donate_argnums of a ``jax.jit(...)`` call, else None."""
+        f = call.func
+        is_jit = (isinstance(f, ast.Attribute) and f.attr == "jit") or (
+            isinstance(f, ast.Name) and f.id == "jit"
+        )
+        if not is_jit:
+            return None
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                v = kw.value
+                if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                    return [v.value]
+                if isinstance(v, (ast.Tuple, ast.List)):
+                    pos = []
+                    for e in v.elts:
+                        if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                            pos.append(e.value)
+                    return pos
+        return None
+
+    def check(self, ctx: FileContext) -> list[LintViolation]:
+        # name/attr (dump) of the jitted callable → donated positions
+        donated: dict[str, list[int]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                pos = self._donated_positions(node.value)
+                if pos:
+                    for t in node.targets:
+                        donated[_dump_no_ctx(t)] = pos
+        if not donated:
+            return []
+        out = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            pos = donated.get(_dump_no_ctx(node.func))
+            if not pos:
+                continue
+            fn = ctx.enclosing_function(node)
+            if fn is None:
+                continue
+            # the statement containing the call: a donated arg reassigned
+            # *by that statement* (`x, out = jitted(params, x)`) is the
+            # sanctioned shape
+            stmt = ctx.parents.get(node)
+            while stmt is not None and not isinstance(stmt, ast.stmt):
+                stmt = ctx.parents.get(stmt)
+            if stmt is None:
+                continue
+            for p in pos:
+                if p >= len(node.args):
+                    continue
+                arg = node.args[p]
+                if not isinstance(arg, (ast.Name, ast.Attribute)):
+                    continue
+                key = _dump_no_ctx(arg)
+                reassigned_here = isinstance(stmt, ast.Assign) and any(
+                    _dump_no_ctx(sub) == key
+                    for t in stmt.targets
+                    for sub in ast.walk(t)
+                    if isinstance(sub, (ast.Name, ast.Attribute))
+                )
+                if reassigned_here:
+                    continue
+                # occurrences of the donated expr strictly after the call
+                # statement, in textual order
+                after = (stmt.end_lineno, stmt.end_col_offset)
+                occ = [
+                    sub for sub in ast.walk(fn)
+                    if isinstance(sub, (ast.Name, ast.Attribute))
+                    and _dump_no_ctx(sub) == key
+                    and (sub.lineno, sub.col_offset) > after
+                ]
+                occ.sort(key=lambda n: (n.lineno, n.col_offset))
+                for sub in occ:
+                    if isinstance(sub.ctx, ast.Store):
+                        break  # reassigned first: later reads are the new value
+                    if isinstance(sub.ctx, ast.Load):
+                        out.append(self._v(
+                            ctx, sub,
+                            f"donated jit argument "
+                            f"{ast.unparse(arg)!r} referenced after the "
+                            f"call at line {node.lineno}",
+                        ))
+                        break
+        return out
+
+
+def _dump_no_ctx(node: ast.AST) -> str:
+    """Structural dump of a Name/Attribute chain ignoring Load/Store ctx."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return _dump_no_ctx(node.value) + "." + node.attr
+    return _dump(node)
+
+
+class OwnedLifetime(Rule):
+    name = "owned-lifetime"
+    description = (
+        "ownership mint (owned_proxy / PageTable.allocate) without a "
+        "reachable free/lifetime attachment"
+    )
+    hint = (
+        "keep the owner and free() it (or free_sequence / attach it to a "
+        "Lifetime); returning the mint transfers ownership to the caller"
+    )
+    _FREE_TOKENS = re.compile(
+        r"\bfree\b|\bfree_sequence\b|Lifetime|lifetime|add_proxy|\bclose\b"
+    )
+
+    @staticmethod
+    def _is_mint(call: ast.Call) -> bool:
+        f = call.func
+        if isinstance(f, ast.Name) and f.id == "owned_proxy":
+            return True
+        if isinstance(f, ast.Attribute):
+            if f.attr == "owned_proxy":
+                return True
+            if f.attr == "allocate":
+                t = _terminal_name(f.value)
+                return t is not None and "page" in t.lower()
+        return False
+
+    def check(self, ctx: FileContext) -> list[LintViolation]:
+        mints = [
+            node for node in ast.walk(ctx.tree)
+            if isinstance(node, ast.Call) and self._is_mint(node)
+        ]
+        if not mints:
+            return []
+        out = []
+        for node in mints:
+            parent = ctx.parents.get(node)
+            f = node.func
+            # The discard check applies to owned_proxy mints only: a
+            # discarded PageTable.allocate is fine — the table registers
+            # the owner internally and free_sequence reclaims it.
+            is_raw_mint = (isinstance(f, ast.Name) and f.id == "owned_proxy") or (
+                isinstance(f, ast.Attribute) and f.attr == "owned_proxy"
+            )
+            if is_raw_mint and isinstance(parent, ast.Expr):
+                out.append(self._v(
+                    ctx, node,
+                    "ownership mint discarded: the owner reference is the "
+                    "only handle that can ever free the target",
+                ))
+        if not self._FREE_TOKENS.search(ctx.src):
+            for node in mints:
+                out.append(self._v(
+                    ctx, node,
+                    "module mints owners but never references free/"
+                    "free_sequence/Lifetime — the targets can never be "
+                    "reclaimed",
+                ))
+        return out
+
+
+class SwallowedError(Rule):
+    name = "swallowed-error"
+    description = (
+        "bare except, or broad except Exception/BaseException whose body "
+        "only passes — silent failure in puller/watch threads"
+    )
+    hint = (
+        "catch the specific exception, or record/propagate the error "
+        "(state['error'] = e; notify) so the failure is loud"
+    )
+
+    @staticmethod
+    def _is_broad(handler: ast.ExceptHandler) -> bool:
+        t = handler.type
+        if t is None:
+            return True
+        if isinstance(t, ast.Name) and t.id in ("Exception", "BaseException"):
+            return True
+        return False
+
+    @staticmethod
+    def _body_swallows(handler: ast.ExceptHandler) -> bool:
+        return all(isinstance(s, (ast.Pass, ast.Continue)) for s in handler.body)
+
+    def check(self, ctx: FileContext) -> list[LintViolation]:
+        out = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if ctx.in_del(node):
+                continue  # __del__ exceptions never propagate anyway
+            if node.type is None:
+                out.append(self._v(
+                    ctx, node, "bare except: catches SystemExit/KeyboardInterrupt "
+                    "and hides the failure",
+                ))
+            elif self._is_broad(node) and self._body_swallows(node):
+                out.append(self._v(
+                    ctx, node,
+                    "broad except whose body only passes: the error "
+                    "vanishes silently",
+                ))
+        return out
+
+
+RULES: dict[str, Rule] = {
+    r.name: r
+    for r in (
+        NoSleepPoll(),
+        ConnectorWaitProtocol(),
+        MutableKeyFresh(),
+        DonatedReuse(),
+        OwnedLifetime(),
+        SwallowedError(),
+    )
+}
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples")
+
+
+def iter_py_files(paths) -> list[str]:
+    files = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                files.append(p)
+        else:
+            for root, dirs, names in os.walk(p):
+                dirs[:] = [d for d in dirs if d != "__pycache__"]
+                files.extend(
+                    os.path.join(root, n) for n in sorted(names)
+                    if n.endswith(".py")
+                )
+    return files
+
+
+def lint_paths(paths, *, select: set | None = None) -> list[LintViolation]:
+    """Run the (selected) rules over every .py file under ``paths``."""
+    rules = [r for n, r in RULES.items() if select is None or n in select]
+    out: list[LintViolation] = []
+    for path in iter_py_files(paths):
+        ctx = FileContext.load(path)
+        if ctx is None:
+            continue
+        for rule in rules:
+            for v in rule.check(ctx):
+                if not ctx.suppressed(v.line, v.rule):
+                    out.append(v)
+    out.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    return out
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="proxy_lint",
+        description="static proxy-lifecycle lint pass (see repro.analysis.lint)",
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule names to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, rule in RULES.items():
+            print(f"{name}: {rule.description}")
+        return 0
+
+    paths = args.paths or [p for p in DEFAULT_PATHS if os.path.exists(p)]
+    select = None
+    if args.select:
+        select = {s.strip() for s in args.select.split(",") if s.strip()}
+        unknown = select - set(RULES)
+        if unknown:
+            print(f"unknown rule(s): {', '.join(sorted(unknown))}")
+            return 2
+    violations = lint_paths(paths, select=select)
+    if args.as_json:
+        print(json.dumps(
+            {"violations": [v.to_dict() for v in violations],
+             "count": len(violations)},
+            indent=2,
+        ))
+    else:
+        for v in violations:
+            print(v.render())
+        n_files = len(iter_py_files(paths))
+        print(f"proxy_lint: {len(violations)} violation(s) in {n_files} file(s)")
+    return 1 if violations else 0

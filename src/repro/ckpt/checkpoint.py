@@ -66,9 +66,13 @@ class CheckpointManager:
 
     def __post_init__(self):
         os.makedirs(self.directory, exist_ok=True)
+        # sanitize=False: retained checkpoints are durable artifacts a
+        # later process restores from — residency here is the product,
+        # and ProxySan would report every kept chunk as a leak.
         self._store = Store(
             f"ckpt-{os.path.basename(self.directory)}-{id(self)}",
             FileConnector(os.path.join(self.directory, "objects")),
+            sanitize=False,
         )
 
     # -- save ------------------------------------------------------------------

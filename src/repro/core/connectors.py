@@ -185,10 +185,12 @@ def wait_for(
         return
     deadline = None if timeout is None else time.monotonic() + timeout
     delay = poll_min
-    while not connector.exists(key):
+    # documented fallback for connectors without native waits: bounded
+    # exponential backoff, not the protocol path
+    while not connector.exists(key):  # proxylint: disable=connector-wait-protocol
         if deadline is not None and time.monotonic() > deadline:
             raise TimeoutError(f"key {key!r} not set within {timeout}s")
-        time.sleep(delay)
+        time.sleep(delay)  # proxylint: disable=no-sleep-poll
         delay = min(delay * 2.0, poll_max)
 
 
@@ -219,7 +221,8 @@ def wait_for_any(
                 return k
         if deadline is not None and time.monotonic() > deadline:
             raise TimeoutError(f"none of {len(keys)} keys set within {timeout}s")
-        time.sleep(delay)
+        # documented fallback backoff (see wait_for above)
+        time.sleep(delay)  # proxylint: disable=no-sleep-poll
         delay = min(delay * 2.0, poll_max)
 
 
@@ -265,7 +268,8 @@ def _watch_dir(
         if changed and first:
             first = False
             continue  # first signature read: re-check ready() immediately
-        time.sleep(delay)
+        # directory-watch backoff: adaptive, bounded by poll_max
+        time.sleep(delay)  # proxylint: disable=no-sleep-poll
         if not changed:
             delay = min(delay * 2.0, poll_max)
 
@@ -667,8 +671,8 @@ class SharedMemoryConnector:
             # state.  Unlink so the key is cleanly absent again.
             try:
                 seg.unlink()
-            except Exception:
-                pass
+            except Exception:  # proxylint: disable=swallowed-error
+                pass  # best-effort cleanup; the original error re-raises below
             raise
         finally:
             seg.close()

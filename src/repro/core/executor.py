@@ -82,8 +82,8 @@ def _publish_error(result: ProxyFuture, exc: BaseException) -> None:
             result.set_exception(
                 RuntimeError(f"task failed with unpicklable payload: {exc!r}")
             )
-        except BaseException:
-            pass
+        except BaseException:  # proxylint: disable=swallowed-error
+            pass  # last resort: the result future itself is unusable
 
 
 def _proxy_result_wrapper(fn: Callable, store: Store, policy: ProxyPolicy):

@@ -14,6 +14,7 @@ import threading
 import time
 from typing import Iterable
 
+from repro.core import sanitize as _sanitize
 from repro.core.proxy import Proxy
 from repro.core.store import Store
 
@@ -50,6 +51,16 @@ class Lifetime:
             entries, self._entries = self._entries, []
         for store, key in entries:
             store.evict(key)
+        if entries:
+            # Under ProxySan a closed scope is a leak-check boundary: the
+            # evicts above clear our entries from the live set, so anything
+            # this scope was *supposed* to cover but didn't shows up in
+            # leak_report() with its mint stack.
+            san = _sanitize.current()
+            if san:
+                san.counters["lifetime_sweeps"] = (
+                    san.counters.get("lifetime_sweeps", 0) + 1
+                )
 
     def keys(self) -> Iterable[str]:
         return [k for _, k in self._entries]

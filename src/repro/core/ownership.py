@@ -20,6 +20,7 @@ from __future__ import annotations
 import threading
 from typing import Any, TypeVar
 
+from repro.core import sanitize as _sanitize
 from repro.core.connectors import new_key
 from repro.core.proxy import Proxy, _resolve, is_resolved
 from repro.core.store import Store, StoreFactory, invalidate_resolve_cache
@@ -126,6 +127,9 @@ class OwnedProxy(Proxy[T]):
         try:
             st.connector.evict(st.key)
             invalidate_resolve_cache(st.store_name, st.key)
+            san = _sanitize.active_for(st.store_name)
+            if san:
+                san.on_own_free(st.store_name, st.connector, st.key, via="owned-del")
         except Exception:
             pass
 
@@ -142,6 +146,9 @@ class OwnedProxy(Proxy[T]):
             if not st.valid:
                 raise OwnershipError(f"use of freed OwnedProxy({st.key})")
             st.moved = True
+        san = _sanitize.active_for(st.store_name)
+        if san:
+            san.on_move(st.connector, st.key)
         ser, de = _codec_of(self)
         return (_rebuild_owned, (st.store_name, st.connector, st.key, de, ser))
 
@@ -195,6 +202,9 @@ class RefMutProxy(Proxy[T]):
 
 def _rebuild_owned(store_name, connector, key, deserializer=None, serializer=None):
     st = _RefState(store_name, connector, key)
+    san = _sanitize.active_for(store_name)
+    if san:
+        san.on_own_mint(store_name, connector, key)
     return _mk(OwnedProxy, st, serializer=serializer, deserializer=deserializer)
 
 
@@ -214,6 +224,9 @@ def owned_proxy(store: Store, obj: T, *, key: str | None = None) -> OwnedProxy[T
     """Serialize ``obj`` into the store and return its (sole) owner proxy."""
     key = store.put(obj, key=key)
     st = _RefState(store.name, store.connector, key)
+    san = _sanitize.active_for(store.name)
+    if san:
+        san.on_own_mint(store.name, store.connector, key)
     return _mk(OwnedProxy, st,
                serializer=store._carried_serializer(),
                deserializer=store._carried_deserializer())
@@ -228,6 +241,9 @@ def into_owned(proxy: Proxy[T]) -> OwnedProxy[T]:
     if not isinstance(factory, StoreFactory):
         raise OwnershipError("only store-backed proxies can become owned")
     st = _RefState(meta["store"], factory.connector, meta["key"])
+    san = _sanitize.active_for(meta["store"])
+    if san:
+        san.on_own_mint(meta["store"], factory.connector, meta["key"])
     return _mk(OwnedProxy, st,
                serializer=factory.serializer, deserializer=factory.deserializer)
 
@@ -243,6 +259,9 @@ def borrow(owner: OwnedProxy[T]) -> RefProxy[T]:
             )
         token = new_key()
         st.refs.add(token)
+    san = _sanitize.active_for(st.store_name)
+    if san:
+        san.on_borrow(st.connector, st.key, token, mut=False)
     ser, de = _codec_of(owner)
     return _mk(RefProxy, st, token=token, serializer=ser, deserializer=de)
 
@@ -259,6 +278,9 @@ def mut_borrow(owner: OwnedProxy[T]) -> RefMutProxy[T]:
             )
         token = new_key()
         st.mut_ref = token
+    san = _sanitize.active_for(st.store_name)
+    if san:
+        san.on_borrow(st.connector, st.key, token, mut=True)
     ser, de = _codec_of(owner)
     return _mk(RefMutProxy, st, token=token, serializer=ser, deserializer=de)
 
@@ -273,6 +295,9 @@ def clone(owner: OwnedProxy[T]) -> OwnedProxy[T]:
         raise OwnershipError(f"target of OwnedProxy({st.key}) missing")
     nk = new_key()
     st.connector.put(nk, data)
+    san = _sanitize.active_for(st.store_name)
+    if san:
+        san.on_own_mint(st.store_name, st.connector, nk)
     ser, de = _codec_of(owner)
     return _mk(OwnedProxy, _RefState(st.store_name, st.connector, nk),
                serializer=ser, deserializer=de)
@@ -308,11 +333,16 @@ def release(ref: RefProxy | RefMutProxy) -> None:
     st = _state(ref)
     meta = object.__getattribute__(ref, "__proxy_metadata__")
     token = meta.get("token")
+    was_remote = meta.get("remote")
     with st.lock:
         st.refs.discard(token)
         if st.mut_ref == token:
             st.mut_ref = None
     meta["remote"] = True  # disarm __del__
+    if not was_remote:  # remote copies never saw the mint; don't false-flag
+        san = _sanitize.active_for(st.store_name)
+        if san:
+            san.on_release(st.store_name, st.connector, st.key, token)
 
 
 def release_by_token(st: _RefState, token: str) -> None:
@@ -320,6 +350,9 @@ def release_by_token(st: _RefState, token: str) -> None:
         st.refs.discard(token)
         if st.mut_ref == token:
             st.mut_ref = None
+    san = _sanitize.active_for(st.store_name)
+    if san:
+        san.on_release(st.store_name, st.connector, st.key, token)
 
 
 def free(owner: OwnedProxy) -> None:
@@ -327,6 +360,11 @@ def free(owner: OwnedProxy) -> None:
     st = _state(owner)
     with st.lock:
         if not st.valid:
+            # Forgiving API (double-free is a no-op), but under ProxySan the
+            # second free is exactly the misuse the sanitizer exists to flag.
+            san = _sanitize.active_for(st.store_name)
+            if san:
+                san.on_double_free(st.store_name, st.connector, st.key)
             return
         if st.moved:
             raise OwnershipError(f"free of moved OwnedProxy({st.key})")
@@ -337,6 +375,9 @@ def free(owner: OwnedProxy) -> None:
         st.valid = False
     st.connector.evict(st.key)
     invalidate_resolve_cache(st.store_name, st.key)
+    san = _sanitize.active_for(st.store_name)
+    if san:
+        san.on_own_free(st.store_name, st.connector, st.key, via="owned-free")
 
 
 def is_valid(p: Proxy) -> bool:

@@ -1,0 +1,481 @@
+"""ProxySan: opt-in runtime sanitizer for proxy lifecycle events (§IV-B/C).
+
+The ownership and lifetime patterns make use-after-free and leaks
+*impossible by construction* — when the rules are followed.  ProxySan
+checks that they are: it instruments Store, ownership, and stream
+lifecycle events with provenance-stamped records (mint, resolve, evict,
+free, borrow, move) and reports, with creation stacks:
+
+- **use_after_evict** — a resolve that *returned a value* for a key that
+  was already freed/evicted (only possible through a stale in-process
+  cache; a resolve that raises ``KeyError`` is the loud, correct failure
+  and is counted, not flagged).
+- **double_free** — ownership ``free()`` (or an ``OwnedProxy`` drop)
+  evicting a key that some other path already freed.
+- **refcount_underflow** — releasing a borrow token that was never
+  issued for that cell (idempotent re-release of a known token is
+  benign and only counted).
+- **stale_cache_read** — a resolve-cache hit served after the key was
+  re-put (overwritten) behind the cache's back.
+- **leak** — via :meth:`Sanitizer.leak_report`: every Owned cell or
+  plain proxy payload still resident in its connector, with the stack
+  that minted it.
+
+Enable globally with ``REPRO_PROXYSAN=1`` (an atexit report prints to
+stderr) or per store with ``Store(name, sanitize=True)``; a store whose
+residency is intentional — checkpoint chunks are durable artifacts, not
+leaks — opts out with ``Store(name, sanitize=False)``, which wins over
+the env switch.  The test suite runs under ProxySan when the env var is
+set — ``scripts/check.sh`` sets it for the tier-1 pytest step and for
+the multiproc smoke.
+
+Tests that *intentionally* misuse the lifecycle (double-free tests,
+use-after-free tests) scope the expected reports with::
+
+    with sanitize.expecting() as exp:
+        free(owner); free(owner)
+    assert exp.categories() == {"double_free"}
+
+``expecting`` is process-global (not thread-local) by design: the tests
+that use it drive the misuse from a single thread.
+"""
+from __future__ import annotations
+
+import atexit
+import os
+import sys
+import threading
+from collections import OrderedDict
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Iterable
+
+_TRUTHY = ("1", "true", "yes", "on")
+
+# Bounds: the sanitizer must be able to ride along under a full test
+# suite without growing without limit.
+_MAX_FREED = 50_000
+_MAX_VIOLATIONS = 200
+_STACK_DEPTH = 8
+
+
+def env_enabled() -> bool:
+    return os.environ.get("REPRO_PROXYSAN", "").strip().lower() in _TRUTHY
+
+
+def _stack(skip: int = 2) -> tuple:
+    """Cheap provenance: raw (filename, lineno, func) frames, no formatting."""
+    frames = []
+    try:
+        f = sys._getframe(skip)
+    except ValueError:  # pragma: no cover - shallow stack
+        return ()
+    while f is not None and len(frames) < _STACK_DEPTH:
+        code = f.f_code
+        frames.append((code.co_filename, f.f_lineno, code.co_name))
+        f = f.f_back
+    return tuple(frames)
+
+
+def format_stack(stack: Iterable) -> str:
+    return "\n".join(f"    {fn}:{ln} in {name}" for fn, ln, name in stack)
+
+
+def _conn_id(connector: Any) -> str:
+    """Stable identity for a mediated channel, shared across Store views."""
+    for attr in ("namespace", "name", "directory", "prefix"):
+        v = getattr(connector, attr, None)
+        if isinstance(v, str) and v:
+            return f"{type(connector).__name__}:{v}"
+    return f"{type(connector).__name__}@{id(connector):x}"
+
+
+@dataclass
+class MintRecord:
+    store: str
+    key: str
+    kind: str  # "object" | "owned"
+    stack: tuple
+    connector: Any = field(repr=False, default=None)
+
+
+@dataclass
+class Violation:
+    category: str
+    store: str
+    key: str
+    message: str
+    stack: tuple = ()
+    minted_at: tuple = ()
+    freed_at: tuple = ()
+
+    def render(self) -> str:
+        out = [f"[proxysan:{self.category}] {self.message} (store={self.store!r}, key={self.key!r})"]
+        if self.stack:
+            out.append("  at:\n" + format_stack(self.stack))
+        if self.minted_at:
+            out.append("  minted at:\n" + format_stack(self.minted_at))
+        if self.freed_at:
+            out.append("  freed at:\n" + format_stack(self.freed_at))
+        return "\n".join(out)
+
+    def __str__(self) -> str:  # pragma: no cover - repr convenience
+        return self.render()
+
+
+class _Expectation:
+    """Records routed away from the violation list inside ``expecting()``."""
+
+    def __init__(self):
+        self.records: list[Violation] = []
+
+    def categories(self) -> set:
+        return {v.category for v in self.records}
+
+
+class Sanitizer:
+    """Event recorder + checker.  All hooks are cheap no-ops when a store
+    is not tracked; mutation is guarded by one reentrant lock."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self.enabled = False  # global (every store)
+        self._opted: set[str] = set()  # per-store opt-ins
+        self._opted_out: set[str] = set()  # per-store opt-OUTs (win over enabled)
+        # (conn_id, key) -> MintRecord for payloads we saw minted
+        self._live: "OrderedDict[tuple, MintRecord]" = OrderedDict()
+        # (conn_id, key) -> (stack, via) for payloads we saw freed
+        self._freed: "OrderedDict[tuple, tuple]" = OrderedDict()
+        # staleness: per-key write and cache-fill sequence numbers
+        self._put_seq: dict[tuple, int] = {}
+        self._fill_seq: dict[tuple, int] = {}
+        # borrow tokens: (conn_id, key) -> {token: "out" | "released"}
+        self._borrows: dict[tuple, dict] = {}
+        self.violations: list[Violation] = []
+        self.counters: dict[str, int] = {}
+        self._expect: list[_Expectation] = []
+
+    # -- wiring ---------------------------------------------------------------
+    def track_store(self, name: str) -> None:
+        with self._lock:
+            self._opted.add(name)
+            self._opted_out.discard(name)
+
+    def untrack_store(self, name: str) -> None:
+        """Explicit opt-out: wins over global enable, and also silences
+        the out-of-Store hooks (ownership, lifetimes) for this store —
+        otherwise an opted-out durable store's owned manifests would
+        still surface as gating leaks through ``active_for``."""
+        with self._lock:
+            self._opted_out.add(name)
+            self._opted.discard(name)
+
+    def tracked(self, store_name: str) -> bool:
+        if store_name in self._opted_out:
+            return False
+        return self.enabled or store_name in self._opted
+
+    def _count(self, what: str, n: int = 1) -> None:
+        self.counters[what] = self.counters.get(what, 0) + n
+
+    def _violate(self, v: Violation) -> None:
+        with self._lock:
+            self._count("violations_total")
+            if self._expect:
+                self._expect[-1].records.append(v)
+            elif len(self.violations) < _MAX_VIOLATIONS:
+                self.violations.append(v)
+
+    @contextmanager
+    def expecting(self):
+        exp = _Expectation()
+        with self._lock:
+            self._expect.append(exp)
+        try:
+            yield exp
+        finally:
+            with self._lock:
+                self._expect.remove(exp)
+
+    # -- store events ---------------------------------------------------------
+    def on_put(self, store: str, connector, key: str, *,
+               kind: str = "object", overwrite: bool = False) -> None:
+        k = (_conn_id(connector), key)
+        with self._lock:
+            self._count("puts")
+            self._put_seq[k] = self._put_seq.get(k, 0) + 1
+            self._freed.pop(k, None)  # a re-put resurrects the key
+            rec = self._live.get(k)
+            if rec is None:
+                self._live[k] = MintRecord(store, key, kind, _stack(3), connector)
+            elif kind == "owned":
+                rec.kind = kind
+
+    def on_resolve(self, store: str, connector, key: str, *, hit: bool) -> None:
+        k = (_conn_id(connector), key)
+        with self._lock:
+            self._count("resolves")
+            if hit:
+                freed = self._freed.get(k)
+                if freed is not None:
+                    self._violate(Violation(
+                        "use_after_evict", store, key,
+                        "cached resolve returned a value for a freed key",
+                        stack=_stack(3), freed_at=freed[0],
+                        minted_at=(),
+                    ))
+                    return
+                fill = self._fill_seq.get(k)
+                put = self._put_seq.get(k)
+                if fill is not None and put is not None and fill < put:
+                    self._violate(Violation(
+                        "stale_cache_read", store, key,
+                        "resolve-cache hit served after the key was re-put "
+                        "(read mutable keys with fresh=True)",
+                        stack=_stack(3),
+                    ))
+            else:
+                self._fill_seq[k] = self._put_seq.get(k, 0)
+
+    def on_resolve_missing(self, store: str, connector, key: str) -> None:
+        k = (_conn_id(connector), key)
+        with self._lock:
+            self._count("resolve_missing")
+            if k in self._freed:
+                # The loud, correct failure mode: freed key raises KeyError.
+                self._count("resolve_after_free_raised")
+
+    def on_evict(self, store: str, connector, key: str, *, via: str = "evict") -> None:
+        k = (_conn_id(connector), key)
+        with self._lock:
+            self._count(f"evict_{via}")
+            rec = self._live.pop(k, None)
+            self._put_seq.pop(k, None)
+            self._fill_seq.pop(k, None)
+            already = self._freed.get(k)
+            if rec is None and already is not None and via in ("owned-free", "owned-del"):
+                self._violate(Violation(
+                    "double_free", store, key,
+                    f"ownership free ({via}) of a key already freed",
+                    stack=_stack(3), freed_at=already[0],
+                ))
+                return
+            self._freed[k] = (_stack(3), via)
+            while len(self._freed) > _MAX_FREED:
+                self._freed.popitem(last=False)
+
+    # -- ownership events -----------------------------------------------------
+    def on_own_mint(self, store: str, connector, key: str) -> None:
+        k = (_conn_id(connector), key)
+        with self._lock:
+            self._count("own_mints")
+            rec = self._live.get(k)
+            if rec is None:
+                self._live[k] = MintRecord(store, key, "owned", _stack(3), connector)
+            else:
+                rec.kind = "owned"
+
+    def on_own_free(self, store: str, connector, key: str, *, via: str) -> None:
+        self.on_evict(store, connector, key, via=via)
+
+    def on_double_free(self, store: str, connector, key: str) -> None:
+        k = (_conn_id(connector), key)
+        with self._lock:
+            freed = self._freed.get(k)
+            self._violate(Violation(
+                "double_free", store, key,
+                "free() called on an already-freed ownership cell",
+                stack=_stack(3), freed_at=freed[0] if freed else (),
+            ))
+
+    def on_borrow(self, connector, key: str, token: str, *, mut: bool) -> None:
+        k = (_conn_id(connector), key)
+        with self._lock:
+            self._count("mut_borrows" if mut else "borrows")
+            self._borrows.setdefault(k, {})[token] = "out"
+
+    def on_release(self, store: str, connector, key: str, token: str) -> None:
+        k = (_conn_id(connector), key)
+        with self._lock:
+            tokens = self._borrows.get(k)
+            state = tokens.get(token) if tokens else None
+            if state == "out":
+                tokens[token] = "released"
+                self._count("releases")
+            elif state == "released":
+                self._count("redundant_releases")  # idempotent re-release
+            else:
+                self._violate(Violation(
+                    "refcount_underflow", store, key,
+                    f"release of borrow token {token!r} that was never "
+                    "issued for this cell",
+                    stack=_stack(3),
+                ))
+
+    def on_move(self, connector, key: str) -> None:
+        with self._lock:
+            self._count("moves")
+
+    # -- reporting ------------------------------------------------------------
+    def live_records(self, *, store: str | None = None,
+                     kinds: tuple = ("owned", "object")) -> list[MintRecord]:
+        with self._lock:
+            recs = list(self._live.values())
+        return [r for r in recs
+                if r.kind in kinds and (store is None or r.store == store)]
+
+    def leak_report(self, *, store: str | None = None,
+                    kinds: tuple = ("owned", "object")) -> list[dict]:
+        """Minted payloads still resident in their connector.
+
+        Residency is checked at report time (cold path) so payloads whose
+        store/connector was torn down — or that another process freed —
+        don't count.
+        """
+        leaks = []
+        for rec in self.live_records(store=store, kinds=kinds):
+            try:
+                resident = rec.connector is not None and rec.connector.exists(rec.key)
+            except Exception:
+                resident = False
+            if resident:
+                leaks.append({
+                    "kind": rec.kind,
+                    "store": rec.store,
+                    "key": rec.key,
+                    "minted_at": format_stack(rec.stack),
+                })
+        return leaks
+
+    def assert_clean(self, *, store: str | None = None,
+                     kinds: tuple = ("owned", "object")) -> None:
+        problems = [v.render() for v in self.violations]
+        problems += [
+            f"[proxysan:leak] {l['kind']} {l['key']!r} in store {l['store']!r} "
+            f"never freed\n  minted at:\n{l['minted_at']}"
+            for l in self.leak_report(store=store, kinds=kinds)
+        ]
+        if problems:
+            raise AssertionError(
+                f"ProxySan found {len(problems)} problem(s):\n" + "\n".join(problems)
+            )
+
+    def report(self, out=None) -> int:
+        """Human-readable end-of-run report; returns the problem count."""
+        out = out if out is not None else sys.stderr
+        leaks = self.leak_report()
+        n = len(self.violations) + len(leaks)
+        if n == 0:
+            print("[proxysan] clean: no violations, no leaks "
+                  f"(counters: {self.counters})", file=out)
+            return 0
+        print(f"[proxysan] {len(self.violations)} violation(s), "
+              f"{len(leaks)} leak(s):", file=out)
+        for v in self.violations:
+            print(v.render(), file=out)
+        for l in leaks:
+            print(f"[proxysan:leak] {l['kind']} {l['key']!r} in store "
+                  f"{l['store']!r} never freed\n  minted at:\n{l['minted_at']}",
+                  file=out)
+        return n
+
+    def reset(self) -> None:
+        with self._lock:
+            self._live.clear()
+            self._freed.clear()
+            self._put_seq.clear()
+            self._fill_seq.clear()
+            self._borrows.clear()
+            self.violations.clear()
+            self.counters.clear()
+
+
+# ---------------------------------------------------------------------------
+# Module-level singleton.  ``current()`` is None until someone opts in, so
+# the instrumented hot paths pay one attribute load + None test when the
+# sanitizer is off.
+# ---------------------------------------------------------------------------
+
+_SAN: Sanitizer | None = None
+_SAN_LOCK = threading.Lock()
+
+
+def _get() -> Sanitizer:
+    global _SAN
+    with _SAN_LOCK:
+        if _SAN is None:
+            _SAN = Sanitizer()
+        return _SAN
+
+
+def current() -> Sanitizer | None:
+    """The active sanitizer, or None when nothing opted in."""
+    s = _SAN
+    return s if s is not None and (s.enabled or s._opted) else None
+
+
+def enable() -> Sanitizer:
+    """Enable globally (all stores)."""
+    s = _get()
+    s.enabled = True
+    return s
+
+
+def disable() -> None:
+    s = _SAN
+    if s is not None:
+        s.enabled = False
+        s._opted.clear()
+
+
+def store_sanitizer(store_name: str, opt_in: bool | None = None) -> Sanitizer | None:
+    """Resolve the sanitizer a Store should hook into (None = untracked).
+
+    ``opt_in`` is tri-state: ``True`` tracks this store even without
+    ``REPRO_PROXYSAN``; ``None`` follows the env switch; ``False`` is an
+    explicit opt-OUT that wins over the env switch — for stores whose
+    residency is the product, not a leak (checkpoint chunks are durable
+    artifacts a later process restores from; reporting them would make
+    every retained checkpoint a false positive).
+    """
+    if opt_in is False:
+        s = _SAN
+        if s is not None:
+            s.untrack_store(store_name)
+        return None
+    if opt_in:
+        s = _get()
+        s.track_store(store_name)
+        return s
+    s = _SAN
+    if s is not None and s.tracked(store_name):
+        return s
+    return None
+
+
+def active_for(store_name: str) -> Sanitizer | None:
+    """Sanitizer for out-of-Store call sites (ownership, stream evicts)."""
+    s = _SAN
+    if s is not None and s.tracked(store_name):
+        return s
+    return None
+
+
+@contextmanager
+def expecting():
+    """Scope intentional lifecycle misuse (tests of the failure paths)."""
+    s = _get()
+    with s.expecting() as exp:
+        yield exp
+
+
+def _atexit_report() -> None:  # pragma: no cover - exercised in subprocesses
+    s = _SAN
+    if s is not None and (s.enabled or s._opted):
+        s.report()
+
+
+if env_enabled():
+    enable()
+
+atexit.register(_atexit_report)

@@ -24,6 +24,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Generic, Sequence, TypeVar
 
 from repro.core import framing
+from repro.core import sanitize as _sanitize
 from repro.core.connectors import (
     Connector,
     InMemoryConnector,
@@ -235,6 +236,7 @@ class Store(Generic[T]):
         cache_size: int = 16,
         timed_metrics: bool = True,
         register: bool = True,
+        sanitize: bool | None = None,
     ):
         self.name = name
         self.connector = connector if connector is not None else InMemoryConnector(name)
@@ -243,6 +245,11 @@ class Store(Generic[T]):
         self.cache_size = cache_size
         self._cache = _ResolveCache(cache_size)
         self.metrics = StoreMetrics()
+        # ProxySan tri-state: True opts this store in, None follows
+        # REPRO_PROXYSAN, False opts out (durable stores — checkpoint
+        # chunks are artifacts, not leaks).  _san None keeps every hook
+        # below a single falsy test.
+        self._san = _sanitize.store_sanitizer(name, sanitize)
         # One-bool guard around the perf_counter pairs on put/resolve:
         # counts/bytes are always kept (cheap adds), the clock reads are
         # skippable fixed overhead on the tiny-object hot path.
@@ -359,6 +366,8 @@ class Store(Generic[T]):
         m.put_bytes += nbytes
         if not fresh:
             self._cache.invalidate(key)  # overwrite must not serve a stale resolve
+        if self._san:
+            self._san.on_put(self.name, self.connector, key, overwrite=not fresh)
         return key
 
     def put_if_absent(self, obj: Any, key: str) -> bool:
@@ -383,6 +392,8 @@ class Store(Generic[T]):
         m.put_count += 1
         m.put_bytes += nbytes
         self._cache.invalidate(key)  # key may have been cached before an evict
+        if self._san:
+            self._san.on_put(self.name, self.connector, key)
         return True
 
     def put_batch(self, objs: Sequence[Any], *, keys: Sequence[str] | None = None) -> list[str]:
@@ -400,6 +411,9 @@ class Store(Generic[T]):
         if not fresh:  # minted keys can't be cached anywhere yet
             for k in keys:
                 self._cache.invalidate(k)
+        if self._san:
+            for k in keys:
+                self._san.on_put(self.name, self.connector, k, overwrite=not fresh)
         return keys
 
     def resolve(
@@ -440,6 +454,8 @@ class Store(Generic[T]):
             obj = self._cache.get((key, deserializer))
         if obj is not _MISS:
             self.metrics.cache_hits += 1
+            if self._san:
+                self._san.on_resolve(self.name, self.connector, key, hit=True)
         else:
             self.metrics.cache_misses += 1
             gen = self._cache.generation
@@ -451,6 +467,8 @@ class Store(Generic[T]):
             else:
                 payload = get_payload(self.connector, key)
                 if payload is None:
+                    if self._san:
+                        self._san.on_resolve_missing(self.name, self.connector, key)
                     if default is not _RAISE:
                         return default
                     raise KeyError(
@@ -468,10 +486,14 @@ class Store(Generic[T]):
                 self.metrics.get_time += time.perf_counter() - t0
             if not (evict_on_resolve or bypass):
                 self._cache.set_if((key, deserializer), obj, gen)
+                if self._san:
+                    self._san.on_resolve(self.name, self.connector, key, hit=False)
         if evict_on_resolve:
             # also on a cache hit: the one-shot contract reclaims the payload
             self.connector.evict(key)
             self._cache.invalidate(key)
+            if self._san:
+                self._san.on_evict(self.name, self.connector, key, via="resolve-evict")
         return obj
 
     def get(self, key: str, default: Any = None, *, fresh: bool = False) -> Any:
@@ -493,6 +515,8 @@ class Store(Generic[T]):
         self.connector.evict(key)
         self._cache.invalidate(key)
         self.metrics.evict_count += 1
+        if self._san:
+            self._san.on_evict(self.name, self.connector, key, via="evict")
 
     # -- proxies ---------------------------------------------------------------
     def proxy(
@@ -505,6 +529,14 @@ class Store(Generic[T]):
     ) -> Proxy[T]:
         """Serialize ``obj`` into the channel and return a lazy proxy of it."""
         key = self.put(obj, key=key)
+        if lifetime is not None:
+            try:
+                lifetime.add(self, key)
+            except BaseException:
+                # an ended lifetime must not orphan the payload we just
+                # minted on its behalf (found by ProxySan's leak report)
+                self.evict(key)
+                raise
         factory = StoreFactory(
             key,
             self.name,
@@ -513,10 +545,7 @@ class Store(Generic[T]):
             deserializer=self._carried_deserializer(),
             serializer=self._carried_serializer(),
         )
-        p = Proxy(factory, metadata={"key": key, "store": self.name})
-        if lifetime is not None:
-            lifetime.add(self, key)
-        return p
+        return Proxy(factory, metadata={"key": key, "store": self.name})
 
     def proxy_from_key(
         self, key: str, *, block: bool = False, evict_on_resolve: bool = False

@@ -34,6 +34,7 @@ import time
 from collections import deque
 from typing import Any, Callable, Iterator, Protocol, runtime_checkable
 
+from repro.core import sanitize as _sanitize
 from repro.core.proxy import Proxy, extract
 from repro.core.store import Store, StoreFactory, invalidate_resolve_cache
 
@@ -280,7 +281,8 @@ class FileLogSubscriber:
                 continue
             if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError("no stream event within timeout")
-            time.sleep(delay)
+            # documented adaptive size-watch backoff, bounded by ``poll``
+            time.sleep(delay)  # proxylint: disable=no-sleep-poll
             delay = min(delay * 2.0, self.poll)
 
     def close(self) -> None:
@@ -324,7 +326,7 @@ class StreamProducer:
         self.filter = filter_
         self.aggregator = aggregator
         self.evict_on_resolve = evict_on_resolve
-        self._buffers: dict[str, list[tuple[Any, dict]]] = {}
+        self._buffers: dict[str, list[tuple[Any, dict, Any]]] = {}
         self._seq: dict[str, int] = {}
         self._event_codecs: dict[str, Any] = {}  # store name → picklable codec
 
@@ -358,12 +360,18 @@ class StreamProducer:
             return self._stores["*"]
         raise KeyError(f"no store mapped for topic {topic!r}")
 
-    def send(self, topic: str, obj: Any, *, metadata: dict | None = None) -> None:
+    def send(self, topic: str, obj: Any, *, metadata: dict | None = None,
+             lifetime: Any | None = None) -> None:
+        """Queue ``obj`` for the topic.  ``lifetime`` (a
+        :class:`repro.core.lifetimes.Lifetime`) takes custody of the bulk
+        payload: the minted key is attached at flush, so a payload the
+        consumer never resolves (``evict_on_resolve`` one-shots included)
+        is evicted when the lifetime closes instead of leaking."""
         metadata = metadata or {}
         if self.filter is not None and not self.filter(obj, metadata):
             return
         buf = self._buffers.setdefault(topic, [])
-        buf.append((obj, metadata))
+        buf.append((obj, metadata, lifetime))
         if len(buf) >= self.batch_size:
             self.flush_topic(topic)
 
@@ -373,16 +381,25 @@ class StreamProducer:
             return
         store = self.store_for(topic)
         if self.aggregator is not None and len(buf) > 1:
-            objs = [o for o, _ in buf]
+            objs = [o for o, _, _ in buf]
             merged_meta: dict = {}
-            for _, m in buf:
+            for _, m, _ in buf:
                 merged_meta.update(m)
-            buf = [(self.aggregator(objs), merged_meta)]
+            # the merged payload belongs to every lifetime that covered a
+            # constituent send (closing any of them may evict it)
+            lifetimes = [lt for _, _, lt in buf if lt is not None]
+            buf = [(self.aggregator(objs), merged_meta,
+                    lifetimes if lifetimes else None)]
         # one vectored connector round for the whole batch (bulk first, then
         # events: a consumer that sees an event can always fetch its object)
-        keys = store.put_batch([obj for obj, _ in buf])
+        keys = store.put_batch([obj for obj, _, _ in buf])
+        for key, (_, _, lt) in zip(keys, buf):
+            if lt is None:
+                continue
+            for one in lt if isinstance(lt, list) else (lt,):
+                one.add(store, key)
         deserializer = self._event_deserializer(store)
-        for key, (_, metadata) in zip(keys, buf):
+        for key, (_, metadata, _) in zip(keys, buf):
             seq = self._seq.get(topic, 0)
             self._seq[topic] = seq + 1
             event = {
@@ -506,6 +523,10 @@ class StreamConsumer:
                 if event.get("evict_on_resolve"):
                     event["connector"].evict(event["key"])
                     invalidate_resolve_cache(event["store"], event["key"])
+                    san = _sanitize.active_for(event["store"])
+                    if san:
+                        san.on_evict(event["store"], event["connector"],
+                                     event["key"], via="stream-skip")
                 continue
             return event
 

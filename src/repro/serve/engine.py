@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.lifetimes import ContextLifetime
 from repro.core.proxy import extract
 from repro.core.store import Store
 from repro.core.streaming import StreamConsumer, StreamProducer
@@ -174,6 +175,15 @@ class ServeEngine:
             )
         self._cache = None  # paged: (L, P+1, ps, ...); dense: (L, B, S, ...)
         self._live_prompts: dict[str, np.ndarray] = {}  # for prefix sharing
+        # Per-request lifetimes, split by custodian.  Request-side payloads
+        # (persistent prompt bulks) are consumed by THIS engine, so close()
+        # always reclaims them.  Response-side payloads (completion bulks)
+        # are custody shared with the client: a resolving client reclaims
+        # them itself (one-shot stream contract), and close() sweeps only
+        # what no client claimed — unless the response stream outlives the
+        # engine (restart handoff), see close(reclaim_responses=False).
+        self._req_lifetimes: dict[str, ContextLifetime] = {}
+        self._resp_lifetimes: dict[str, ContextLifetime] = {}
         self.completed: dict[str, dict] = {}
         self.rejected: dict[str, str] = {}
         self.metrics = {
@@ -443,6 +453,18 @@ class ServeEngine:
             self.metrics["tokens"] += 1
         return firsts
 
+    def _request_lifetime(self, req_id: str) -> ContextLifetime:
+        lt = self._req_lifetimes.get(req_id)
+        if lt is None:
+            lt = self._req_lifetimes[req_id] = ContextLifetime()
+        return lt
+
+    def _response_lifetime(self, req_id: str) -> ContextLifetime:
+        lt = self._resp_lifetimes.get(req_id)
+        if lt is None:
+            lt = self._resp_lifetimes[req_id] = ContextLifetime()
+        return lt
+
     def admit(self, req: Request, slot_idx: int) -> int:
         """Admit one request into ``slot_idx``; returns its *first* token.
 
@@ -552,12 +574,34 @@ class ServeEngine:
                     # here, in the engine — overlapped with the decode
                     # loop, never in an intermediate scheduler
                     body = extract(proxy)
+                    f = object.__getattribute__(proxy, "__factory__")
+                    if not getattr(f, "evict_on_resolve", True):
+                        # persistent prompt bulk (producer without the
+                        # one-shot contract): the request's lifetime takes
+                        # custody so close() reclaims it
+                        self._request_lifetime(req_id).add(
+                            Store.get_or_reattach(f.store_name, f.connector),
+                            f.key,
+                        )
                     req = Request(
                         req_id=req_id,
                         prompt=np.asarray(body["prompt"], np.int32),
                         max_new_tokens=int(meta.get("max_new_tokens", 16)),
                     )
                 except BaseException as e:
+                    if req_id is None:
+                        # unaddressable event: nobody else will ever pull
+                        # this topic, so its unresolved bulk payload would
+                        # be resident forever — reclaim it (best-effort:
+                        # the malformed_events count is the signal, and a
+                        # half-broken factory must not kill the puller)
+                        try:
+                            f = object.__getattribute__(proxy, "__factory__")
+                            Store.get_or_reattach(
+                                f.store_name, f.connector
+                            ).evict(f.key)
+                        except BaseException:  # proxylint: disable=swallowed-error
+                            pass
                     with cond:
                         state["pulled"] += 1
                         if req_id is None:
@@ -591,6 +635,11 @@ class ServeEngine:
                     "kind": "done",
                     "n_tokens": len(entry["tokens"]),
                 },
+                # the response lifetime takes custody of the completion
+                # bulk: a client that never resolves it (crashed, filtered)
+                # no longer leaks it past engine.close(); a client that
+                # does resolve it evicts it first (one-shot contract)
+                lifetime=self._response_lifetime(req_id),
             )
             response_producer.flush_topic(response_topic)
 
@@ -793,9 +842,32 @@ class ServeEngine:
         return self.completed
 
     # -- lifecycle -----------------------------------------------------------
-    def close(self) -> None:
+    def close(self, *, reclaim_responses: bool = True) -> None:
+        """Tear the engine down and end every per-request scope.
+
+        ``reclaim_responses=False`` is for the restart handoff: the
+        response stream outlives this engine (``run(close_responses=
+        False)`` or an engine replaced mid-stream), so completion bulks a
+        lagging client has not resolved yet must stay resident — stream
+        payloads resolve blocking, and evicting one under a live client
+        wedges it.  Custody then rests with the clients' one-shot
+        resolves (and ultimately whoever closes the topic).
+        """
         for seq in self.pages.live_sequences():
             self.pages.free_sequence(seq)
         self._live_prompts.clear()
+        # Request-side scopes: persistent prompt bulks were consumed by
+        # this engine's puller — always safe to reclaim.
+        lifetimes, self._req_lifetimes = self._req_lifetimes, {}
+        for lt in lifetimes.values():
+            lt.close()
+        # Response-side scopes: evict completion bulks no client resolved.
+        # Default assumes the driver pattern (clients joined before close;
+        # resolved one-shot payloads are already gone, the evict is then a
+        # no-op), so in-flight resolves never race this.
+        resp, self._resp_lifetimes = self._resp_lifetimes, {}
+        if reclaim_responses:
+            for lt in resp.values():
+                lt.close()
         if self._owns_store:  # never close a store the caller handed in
             self.kv_store.close()

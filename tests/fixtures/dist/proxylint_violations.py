@@ -1,0 +1,42 @@
+"""Seeded ProxyLint violations — at least one per rule.
+
+Never imported or executed: the lint tests point ``proxy_lint`` at this
+file and assert the run exits non-zero with every rule represented.
+Lives under a ``dist/`` directory on purpose, so the cross-process-only
+``mutable-key-fresh`` rule is in scope.
+"""
+import time
+
+import jax
+
+
+def sleep_poll(flag):
+    while not flag():
+        time.sleep(0.01)  # violation: no-sleep-poll
+
+
+def busy_wait(store, key):
+    while not store.exists(key):  # violation: connector-wait-protocol
+        pass
+
+
+def stale_read(store, key, obj):
+    store.put(obj, key=key)  # overwrite: `key` is a mutable cell
+    return store.get(key)  # violation: mutable-key-fresh
+
+
+def donated_reuse(params, cache, tokens):
+    step = jax.jit(lambda p, c, t: (c, t), donate_argnums=(1,))
+    out, logits = step(params, cache, tokens)
+    return cache, logits  # violation: donated-reuse (cache died at the call)
+
+
+def discarded_mint(store, obj):
+    owned_proxy(store, obj)  # violation: owned-lifetime (mint discarded)
+
+
+def swallow(risky):
+    try:
+        risky()
+    except Exception:
+        pass  # violation: swallowed-error

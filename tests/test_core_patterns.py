@@ -133,6 +133,7 @@ class TestProxyFutures:
             # simulate a different process: fresh objects from pickles
             p2 = pickle.loads(pickle.dumps(p))
             np.testing.assert_array_equal(extract(p2), np.arange(5))
+            s.evict(f.key)  # reclaim the settled payload (ProxySan-clean)
 
 
 # ---------------------------------------------------------------------------

@@ -26,8 +26,27 @@ from repro.dist.lease import (
 )
 
 
+_OPEN_STORES: list[Store] = []
+
+
 def _store(name, conn=None):
-    return Store(name, conn or InMemoryConnector(), register=False)
+    s = Store(name, conn or InMemoryConnector(), register=False)
+    _OPEN_STORES.append(s)
+    return s
+
+
+@pytest.fixture(autouse=True)
+def _close_test_stores():
+    """Close every helper-made store (and its in-memory namespace): lease
+    registry chains persist for the service lifetime by design, so an
+    unclosed test store reads as a pile of leaks in ProxySan's report."""
+    yield
+    while _OPEN_STORES:
+        s = _OPEN_STORES.pop()
+        for k in list(s.connector.keys()):  # FileConnector.close is a no-op
+            s.evict(k)
+        s.close()
+        s.connector.close()
 
 
 def _svc(conn=None, ttl=5.0, name=None):

@@ -1,0 +1,274 @@
+"""Dedicated lifetime suite (paper §IV-C, Listing 4).
+
+test_core_patterns covers the listing-level basics (one proxy per scope
+kind); this suite pins down the contracts the serving and streaming
+layers now lean on: multi-entry sweeps, the exception path, add-after-end,
+lease extension under load, StaticLifetime's *actual* interpreter-exit
+behavior (subprocess), custody handed to ``StreamProducer.send(lifetime=)``
+— including the aggregator's merged-payload case — and how lifetimes
+interact with Owned proxies under ProxySan (a lifetime sweeping an owned
+cell makes the later ``free()`` a double-free, and the sanitizer says so).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import pytest
+
+from repro.core import sanitize
+from repro.core.connectors import FileConnector, new_key
+from repro.core.lifetimes import ContextLifetime, LeaseLifetime, StaticLifetime
+from repro.core.ownership import _state, free, owned_proxy
+from repro.core.store import Store
+from repro.core.streaming import (
+    QueuePublisher,
+    QueueSubscriber,
+    StreamConsumer,
+    StreamProducer,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture
+def store():
+    st = Store(f"lt-{new_key()}", register=False)
+    yield st
+
+
+def proxy_key(p) -> str:
+    return object.__getattribute__(p, "__proxy_metadata__")["key"]
+
+
+class TestContextLifetime:
+    def test_exit_evicts_every_entry(self, store):
+        """A scope owning many objects — direct keys and proxies mixed —
+        sweeps all of them at exit, in one pass."""
+        with ContextLifetime() as lt:
+            keys = [store.put({"i": i}) for i in range(4)]
+            for k in keys:
+                lt.add(store, k)
+            p = store.proxy("tail", lifetime=lt)
+            keys.append(proxy_key(p))
+            assert all(store.exists(k) for k in keys)
+            assert sorted(lt.keys()) == sorted(keys)
+        assert lt.done()
+        assert not any(store.exists(k) for k in keys)
+        assert list(lt.keys()) == []  # entries handed off, not retained
+
+    def test_exception_path_still_evicts(self, store):
+        """Cleanup is exceptional-path-safe — the point of tying lifetime
+        to a ``with`` block rather than to manual evict calls."""
+        with pytest.raises(RuntimeError, match="boom"):
+            with ContextLifetime() as lt:
+                p = store.proxy("v", lifetime=lt)
+                key = proxy_key(p)
+                raise RuntimeError("boom")
+        assert not store.exists(key)
+
+    def test_add_proxy_takes_custody(self, store):
+        lt = ContextLifetime()
+        p = store.proxy("payload")  # minted outside any scope
+        lt.add_proxy(p)
+        lt.close()
+        assert not store.exists(proxy_key(p))
+
+    def test_add_after_end_raises(self, san):
+        store = Store(f"lt-end-{new_key()}", sanitize=True, register=False)
+        lt = ContextLifetime()
+        lt.close()
+        with pytest.raises(RuntimeError, match="ended lifetime"):
+            lt.add(store, "k")
+        with pytest.raises(RuntimeError, match="ended lifetime"):
+            store.proxy("v", lifetime=lt)
+        # the refused proxy's payload must not be orphaned (a real leak
+        # ProxySan found here: put-then-add minted before the raise)
+        assert san.leak_report(store=store.name) == []
+
+    def test_close_is_idempotent(self, store):
+        lt = ContextLifetime()
+        key = store.put("v")
+        lt.add(store, key)
+        lt.close()
+        lt.close()  # second close: no error, no double-evict side effects
+        assert lt.done()
+
+
+class TestLeaseLifetime:
+    def test_expiry_evicts(self, store):
+        lease = LeaseLifetime(store, expiry=0.1)
+        key = store.put("leased")
+        lease.add(store, key)
+        deadline = time.monotonic() + 5
+        while not lease.done() and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert lease.done()
+        assert not store.exists(key)
+
+    def test_extend_outlives_original_expiry(self, store):
+        lease = LeaseLifetime(store, expiry=0.15)
+        key = store.put("renewed")
+        lease.add(store, key)
+        lease.extend(0.4)
+        time.sleep(0.25)  # past the original expiry, inside the extension
+        assert not lease.done()
+        assert store.exists(key)
+        lease.close()
+
+    def test_remaining_counts_down(self, store):
+        lease = LeaseLifetime(store, expiry=30.0)
+        r0 = lease.remaining()
+        assert 0 < r0 <= 30.0
+        lease.extend(10.0)
+        assert lease.remaining() > r0  # extension visible immediately
+        lease.close()
+        assert lease.done()
+
+    def test_extend_after_expiry_raises(self, store):
+        lease = LeaseLifetime(store, expiry=0.05)
+        deadline = time.monotonic() + 5
+        while not lease.done() and time.monotonic() < deadline:
+            time.sleep(0.02)
+        with pytest.raises(RuntimeError, match="expired lease"):
+            lease.extend(1.0)
+
+
+STATIC_CHILD = textwrap.dedent(
+    """
+    import sys
+
+    sys.path.insert(0, sys.argv[2])
+    from repro.core.connectors import FileConnector
+    from repro.core.lifetimes import StaticLifetime
+    from repro.core.store import Store
+
+    store = Store("static-child", FileConnector(sys.argv[1]))
+    lt = StaticLifetime()
+    key = store.put({"pinned": True})
+    lt.add(store, key)
+    assert store.exists(key)  # alive for the whole program...
+    print(key)
+    # ...and reclaimed by the atexit hook after this line
+    """
+)
+
+
+class TestStaticLifetime:
+    @pytest.mark.multiproc(timeout=60)
+    def test_atexit_reclaims_in_real_interpreter_exit(self, tmp_path):
+        """The registered atexit hook actually runs: a child process pins a
+        payload for its whole life; after a *normal* exit the file-backed
+        cell is gone."""
+        child = tmp_path / "static_child.py"
+        child.write_text(STATIC_CHILD)
+        chan = tmp_path / "chan"
+        r = subprocess.run(
+            [sys.executable, str(child), str(chan), SRC],
+            capture_output=True, text=True, timeout=60,
+        )
+        assert r.returncode == 0, r.stderr
+        key = r.stdout.strip().splitlines()[-1]
+        assert key
+        conn = FileConnector(str(chan))
+        assert not conn.exists(key)  # swept by atexit, not leaked
+
+    def test_manual_close_before_exit(self, store):
+        lt = StaticLifetime()
+        key = store.put("pinned")
+        lt.add(store, key)
+        assert store.exists(key)
+        lt.close()  # test hygiene: don't wait for interpreter exit
+        assert not store.exists(key)
+
+
+class TestOwnedProxyInteraction:
+    def test_lifetime_sweep_of_owned_cell_makes_free_a_double_free(self, san):
+        """A lifetime and an owner are two custodians for one cell — a
+        custody conflict.  The sweep wins the race here, and ProxySan
+        flags the owner's later ``free()`` for what it now is."""
+        store = Store(f"lt-own-{new_key()}", sanitize=True, register=False)
+        o = owned_proxy(store, {"shared-custody": 1})
+        lt = ContextLifetime()
+        lt.add(store, _state(o).key)
+        lt.close()  # the sweep evicts the owned cell
+        assert not store.exists(_state(o).key)
+        with sanitize.expecting() as exp:
+            free(o)
+        assert exp.categories() == {"double_free"}
+
+    def test_free_then_sweep_is_benign(self, san):
+        """The reverse order is fine: the owner freed its cell, and the
+        lifetime's later sweep of the same key is a no-op evict — counted,
+        never flagged."""
+        store = Store(f"lt-own2-{new_key()}", sanitize=True, register=False)
+        o = owned_proxy(store, {"freed-first": 1})
+        lt = ContextLifetime()
+        lt.add(store, _state(o).key)
+        free(o)
+        before = len(san.violations)
+        lt.close()
+        assert len(san.violations) == before
+
+    def test_sweep_counter_under_sanitizer(self, san):
+        store = Store(f"lt-cnt-{new_key()}", sanitize=True, register=False)
+        base = san.counters.get("lifetime_sweeps", 0)
+        lt = ContextLifetime()
+        lt.add(store, store.put("a"))
+        lt.close()
+        empty = ContextLifetime()
+        empty.close()  # nothing owned: not a sweep
+        assert san.counters.get("lifetime_sweeps", 0) == base + 1
+
+
+class TestStreamCustody:
+    """``StreamProducer.send(lifetime=)``: the producer attaches the minted
+    key at flush time, so payloads the consumer never resolves are
+    reclaimed by scope end — the serve engine's per-request pattern."""
+
+    def _pair(self, store, **producer_kw):
+        ns = f"ltc-{new_key()}"
+        producer = StreamProducer(QueuePublisher(ns), {"t": store}, **producer_kw)
+        consumer = StreamConsumer(QueueSubscriber("t", ns), timeout=5)
+        return producer, consumer
+
+    def test_unresolved_payload_reclaimed_at_scope_end(self, store):
+        producer, consumer = self._pair(store)
+        lt = ContextLifetime()
+        producer.send("t", {"bulk": list(range(16))}, lifetime=lt)
+        producer.flush_topic("t")
+        proxy, _ = consumer.next_with_metadata()
+        key = proxy_key(proxy)
+        assert store.exists(key)  # consumer saw the event, never resolved
+        lt.close()
+        assert not store.exists(key)
+
+    def test_lifetime_is_optional(self, store):
+        producer, consumer = self._pair(store)
+        producer.send("t", {"free-floating": True})
+        producer.flush_topic("t")
+        proxy, _ = consumer.next_with_metadata()
+        assert store.exists(proxy_key(proxy))  # unowned: survives (by design)
+        store.evict(proxy_key(proxy))
+
+    def test_aggregated_batch_owned_by_every_constituent_lifetime(self, store):
+        """The aggregator merges N sends into one payload; that payload
+        belongs to every lifetime that covered a constituent — closing any
+        one of them may evict it (documented sharp edge)."""
+        producer, consumer = self._pair(
+            store, batch_size=8, aggregator=lambda objs: {"merged": objs}
+        )
+        lt_a, lt_b = ContextLifetime(), ContextLifetime()
+        producer.send("t", {"from": "a"}, lifetime=lt_a)
+        producer.send("t", {"from": "b"}, lifetime=lt_b)
+        producer.flush_topic("t")
+        proxy, _ = consumer.next_with_metadata()
+        key = proxy_key(proxy)
+        assert store.exists(key)
+        lt_a.close()  # either custodian suffices
+        assert not store.exists(key)
+        lt_b.close()  # the other's sweep is a harmless no-op

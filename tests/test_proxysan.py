@@ -1,0 +1,342 @@
+"""ProxySan suite: every violation category produced by driving the real
+Store/ownership lifecycle, the leak report, ``expecting()`` scoping,
+per-store opt-in, serve request-proxy reclamation, and a cross-process
+smoke (the scripts/check.sh target) whose leak report must come back
+clean under ``REPRO_PROXYSAN=1``.
+
+State discipline: the module-level sanitizer is a process singleton, so
+every test goes through the shared ``san`` fixture (conftest), which
+snapshots the tracking tables and restores them on the way out — nothing
+a test mints (or the violations it provokes on purpose) can bleed into
+the conftest session gate or into other tests.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import sanitize
+from repro.core.connectors import FileConnector, InMemoryConnector, new_key
+from repro.core.ownership import (
+    _state,
+    borrow,
+    free,
+    owned_proxy,
+    release,
+    release_by_token,
+)
+from repro.core.sanitize import Sanitizer
+from repro.core.store import Store
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def tracked_store(name_prefix: str, connector=None, **kw) -> Store:
+    return Store(
+        f"{name_prefix}-{new_key()}", connector,
+        sanitize=True, register=False, **kw,
+    )
+
+
+class TestViolationCategories:
+    def test_use_after_evict_via_stale_shared_cache(self, san):
+        """Two Store views of one channel: view A caches a resolve, view B
+        frees the key.  A's next cached read hands out a freed payload —
+        the exact bug class the paper's ownership rules exist to prevent."""
+        conn = InMemoryConnector(f"uae-{new_key()}")
+        a = tracked_store("uae-a", conn)
+        b = tracked_store("uae-b", conn)
+        key = a.put({"v": 1})
+        assert a.get(key) == {"v": 1}  # cache fill
+        assert a.get(key) == {"v": 1}  # legitimate hit
+        with sanitize.expecting() as exp:
+            b.evict(key)
+            assert a.get(key) == {"v": 1}  # stale cache: value for a dead key
+        assert exp.categories() == {"use_after_evict"}
+
+    def test_freed_key_keyerror_is_counted_not_flagged(self, san):
+        store = tracked_store("uaf-loud")
+        o = owned_proxy(store, [1, 2, 3])
+        key = _state(o).key
+        free(o)
+        before = len(san.violations)
+        with pytest.raises(KeyError):
+            store.resolve(key)
+        # the loud failure is the *correct* outcome — counted, never flagged
+        assert san.counters.get("resolve_after_free_raised", 0) >= 1
+        assert len(san.violations) == before
+
+    def test_double_free_flagged(self, san):
+        store = tracked_store("df")
+        o = owned_proxy(store, {"x": 1})
+        free(o)
+        with sanitize.expecting() as exp:
+            free(o)  # forgiving API: a no-op — but exactly what ProxySan flags
+        assert exp.categories() == {"double_free"}
+
+    def test_refcount_underflow_on_unissued_token(self, san):
+        store = tracked_store("rc")
+        o = owned_proxy(store, {"x": 1})
+        with sanitize.expecting() as exp:
+            release_by_token(_state(o), "token-never-issued")
+        assert exp.categories() == {"refcount_underflow"}
+        free(o)
+
+    def test_redundant_release_is_benign(self, san):
+        store = tracked_store("rr")
+        o = owned_proxy(store, {"x": 1})
+        r = borrow(o)
+        token = object.__getattribute__(r, "__proxy_metadata__")["token"]
+        release(r)
+        before = len(san.violations)
+        release_by_token(_state(o), token)  # idempotent re-release
+        assert san.counters.get("redundant_releases", 0) >= 1
+        assert len(san.violations) == before
+        free(o)
+
+    def test_stale_cache_read_after_foreign_re_put(self, san):
+        """A re-put through another Store view invalidates nothing in this
+        process — the cached read silently serves the old value unless the
+        reader asks for ``fresh=True`` (ProxyLint's mutable-key-fresh rule,
+        observed at runtime)."""
+        conn = InMemoryConnector(f"stale-{new_key()}")
+        a = tracked_store("stale-a", conn)
+        b = tracked_store("stale-b", conn)
+        a.put({"gen": 1}, key="cell")
+        assert a.get("cell") == {"gen": 1}  # fill
+        b.put({"gen": 2}, key="cell")  # re-put behind a's cache
+        with sanitize.expecting() as exp:
+            assert a.get("cell") == {"gen": 1}  # stale!
+        assert exp.categories() == {"stale_cache_read"}
+        # the sanctioned read is clean and sees the new value
+        before = len(san.violations)
+        assert a.get("cell", fresh=True) == {"gen": 2}
+        assert len(san.violations) == before
+        a.evict("cell")
+
+
+class TestLeakReport:
+    def test_owned_cell_leak_named_with_mint_stack(self, san):
+        store = tracked_store("leak")
+        o = owned_proxy(store, np.arange(8))
+        key = _state(o).key
+        leaks = san.leak_report(store=store.name, kinds=("owned",))
+        assert [l["key"] for l in leaks] == [key]
+        assert leaks[0]["kind"] == "owned"
+        assert "test_proxysan" in leaks[0]["minted_at"]  # provenance
+        free(o)
+        assert san.leak_report(store=store.name, kinds=("owned",)) == []
+
+    def test_object_payload_leak_cleared_by_evict(self, san):
+        store = tracked_store("obj-leak")
+        key = store.put({"bulk": list(range(10))})
+        leaks = san.leak_report(store=store.name, kinds=("object",))
+        assert [l["key"] for l in leaks] == [key]
+        store.evict(key)
+        assert san.leak_report(store=store.name) == []
+
+    def test_foreign_eviction_not_reported(self, san):
+        """Residency is checked at report time: a key another process (here:
+        a direct connector evict the sanitizer never saw) freed is gone."""
+        conn = InMemoryConnector(f"foreign-{new_key()}")
+        store = tracked_store("foreign", conn)
+        key = store.put([1])
+        conn.evict(key)  # behind the sanitizer's back
+        assert san.leak_report(store=store.name) == []
+
+    def test_assert_clean_on_isolated_instance(self):
+        """Unit-level: a private Sanitizer instance, no global state."""
+        s = Sanitizer()
+        conn = InMemoryConnector(f"iso-{new_key()}")
+        conn.put("k", b"x")
+        s.on_put("iso", conn, "k")
+        with pytest.raises(AssertionError, match="never freed"):
+            s.assert_clean()
+        s.on_evict("iso", conn, "k")
+        conn.evict("k")
+        s.assert_clean()
+
+
+class TestWiring:
+    def test_env_enabled_parsing(self, monkeypatch):
+        for val, expect in (
+            ("1", True), ("true", True), ("YES", True), ("on", True),
+            ("0", False), ("no", False), ("", False),
+        ):
+            monkeypatch.setenv("REPRO_PROXYSAN", val)
+            assert sanitize.env_enabled() is expect, val
+        monkeypatch.delenv("REPRO_PROXYSAN")
+        assert sanitize.env_enabled() is False
+
+    def test_per_store_opt_in_tracks_only_that_store(self, san):
+        san.enabled = False  # isolate the opt-in path (fixture restores)
+        opted = tracked_store("opted")
+        plain = Store(f"plain-{new_key()}", register=False)
+        assert opted._san is san
+        assert plain._san is None
+        assert sanitize.current() is san
+        assert sanitize.active_for(opted.name) is san
+        assert sanitize.active_for(plain.name) is None
+
+    def test_explicit_opt_out_wins_over_global_enable(self, san):
+        """``Store(sanitize=False)`` — the durable-store escape hatch
+        (checkpoint chunks): untracked even while the env switch is on,
+        including the out-of-Store ownership hooks via ``active_for``."""
+        san.enabled = True
+        durable = Store(f"durable-{new_key()}", sanitize=False, register=False)
+        assert durable._san is None
+        assert sanitize.active_for(durable.name) is None
+        key = durable.put(b"artifact")  # resident at exit — by design
+        assert san.leak_report(store=durable.name) == []
+        assert durable.get(key) == b"artifact"
+        durable.evict(key)
+        # re-opting in (a later Store view of the same name) flips it back
+        san.track_store(durable.name)
+        assert sanitize.active_for(durable.name) is san
+
+    def test_expecting_routes_away_from_the_violation_list(self, san):
+        store = tracked_store("exp")
+        o = owned_proxy(store, [1])
+        free(o)
+        before = len(san.violations)
+        with sanitize.expecting() as exp:
+            free(o)
+        assert len(san.violations) == before
+        assert len(exp.records) == 1
+        assert exp.records[0].category == "double_free"
+
+    def test_counters_track_lifecycle_events(self, san):
+        store = tracked_store("cnt")
+        base = dict(san.counters)
+        key = store.put([1, 2])
+        store.get(key)
+        store.get(key)
+        store.evict(key)
+        o = owned_proxy(store, [3])
+        free(o)
+
+        def grew(name):
+            return san.counters.get(name, 0) - base.get(name, 0)
+
+        assert grew("puts") >= 2  # the plain put + the owned mint
+        assert grew("resolves") >= 2
+        assert grew("evict_evict") >= 1
+        assert grew("own_mints") >= 1
+        assert grew("evict_owned-free") >= 1
+
+
+class TestServeRequestProxies:
+    def test_engine_close_reclaims_request_payloads(self, san):
+        """The PR's serve-leak acceptance: run a serve whose responses no
+        client ever resolves, then show every request-minted payload
+        (prompt bulk, completion bulk, KV page cells) is reclaimed by
+        ``engine.close()`` — the per-request ContextLifetime at work."""
+        from _serve_toy import CountingModel
+        from repro.configs import get_smoke_config
+        from repro.core.streaming import (
+            QueuePublisher,
+            QueueSubscriber,
+            StreamConsumer,
+            StreamProducer,
+        )
+        from repro.serve.engine import ServeEngine, serve_context
+
+        san.enabled = True  # track every store the serve stack creates
+        cfg = get_smoke_config("smollm-135m")
+        ns = f"sanserve-{new_key()}"
+        req_store = Store(f"{ns}-req")
+        resp_store = Store(f"{ns}-resp")
+        producer = StreamProducer(QueuePublisher(ns), {"requests": req_store})
+        consumer = StreamConsumer(QueueSubscriber("requests", ns), timeout=30)
+        resp_producer = StreamProducer(
+            QueuePublisher(ns), {"responses": resp_store}
+        )
+        engine = ServeEngine(
+            serve_context(cfg), {}, slots=2, max_len=32, page_size=4,
+            eos_id=-1, model=CountingModel(cfg),
+        )
+        rng = np.random.default_rng(0)
+        for i in range(3):
+            producer.send(
+                "requests",
+                {"prompt": rng.integers(1, cfg.vocab, 4).astype(np.int32)},
+                metadata={"req_id": f"r{i}", "max_new_tokens": 3},
+            )
+            producer.flush_topic("requests")
+        producer.close_topic("requests")
+        completed = engine.run(consumer, resp_producer)
+        assert sorted(completed) == ["r0", "r1", "r2"]
+        kv_name = engine.kv_store.name
+        # responses were never consumed: before close, the completion bulks
+        # are resident by design (the client may still resolve them)
+        assert san.leak_report(store=resp_store.name) != []
+        engine.close()
+        for name in (req_store.name, resp_store.name, kv_name):
+            assert san.leak_report(store=name) == [], name
+
+
+CHILD = textwrap.dedent(
+    """
+    import sys
+
+    sys.path.insert(0, sys.argv[2])
+    from repro.core import sanitize
+    from repro.core.connectors import FileConnector
+    from repro.core.ownership import free, owned_proxy
+    from repro.core.store import Store
+
+    assert sanitize.current() is not None, "REPRO_PROXYSAN did not enable"
+    store = Store("sansmoke", FileConnector(sys.argv[1]))
+    req = store.resolve("req", block=True, timeout=30, evict_on_resolve=True)
+    store.put([x * 2 for x in req], key="resp")
+    scratch = owned_proxy(store, {"scratch": req})
+    free(scratch)
+    store.wait_for("ack", timeout=30)  # parent evicted "resp" before this
+    sanitize.current().assert_clean(store="sansmoke")
+    print("CHILD-CLEAN")
+    """
+)
+
+
+class TestCrossProcessSmoke:
+    @pytest.mark.multiproc(timeout=120)
+    def test_proxysan_smoke_clean_report(self, san, tmp_path):
+        """The check.sh smoke: a producer/consumer pair over a FileConnector,
+        both sides sanitized, both leak reports clean.  The child runs with
+        ``REPRO_PROXYSAN=1`` (the env path) and its atexit report must say
+        clean; the parent's keys that the *child* freed must not be reported
+        (residency is checked at report time)."""
+        workdir = tmp_path / "chan"
+        child = tmp_path / "child.py"
+        child.write_text(CHILD)
+        store = Store(
+            "sansmoke-parent", FileConnector(str(workdir)),
+            sanitize=True, register=False,
+        )
+        store.put([1, 2, 3], key="req")
+        env = {**os.environ, "REPRO_PROXYSAN": "1", "PYTHONPATH": SRC}
+        proc = subprocess.Popen(
+            [sys.executable, str(child), str(workdir), SRC],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        )
+        try:
+            store.wait_for("resp", timeout=60)
+            assert store.resolve("resp", fresh=True) == [2, 4, 6]
+            store.evict("resp")
+            store.put(True, key="ack")
+            out, err = proc.communicate(timeout=60)
+        finally:
+            proc.kill()
+        assert proc.returncode == 0, err
+        assert "CHILD-CLEAN" in out
+        assert "[proxysan] clean" in err  # the child's atexit report
+        store.evict("ack")
+        # "req" was freed by the child; the parent minted it but must not
+        # report it — only truly-resident payloads count
+        assert san.leak_report(store=store.name) == []

@@ -329,9 +329,17 @@ class TestAdmissionControl:
 
 class TestNotificationDrivenLoop:
     def test_no_sleep_poll_in_run(self):
+        # the whole engine module must be clean under every ProxyLint rule
+        # (no-sleep-poll flags ANY time.sleep here: serve/engine.py is a
+        # designated notification-driven hot-path module)
+        import repro.serve.engine as engine_mod
+        from repro.analysis.lint import lint_paths
+
+        violations = lint_paths([engine_mod.__file__])
+        assert violations == [], "\n".join(v.render() for v in violations)
+        # and the idle path is a condition-variable wait, not a poll
         src = inspect.getsource(ServeEngine.run)
-        assert "time.sleep" not in src
-        assert "cond.wait" in src  # idle path is a condition-variable wait
+        assert "cond.wait" in src
 
     @pytest.mark.multiproc(timeout=60)  # threads + watchdog: never wedge
     def test_gappy_stream_never_busy_waits(self):
@@ -377,7 +385,7 @@ class TestNotificationDrivenLoop:
         done = {}
 
         def finish_later():
-            time.sleep(1.0)
+            time.sleep(2.5)
             s["producer"].close_topic("requests")
 
         t = threading.Thread(target=finish_later)
@@ -388,8 +396,9 @@ class TestNotificationDrivenLoop:
         t.join()
         assert "now" in completed
         # the request itself decoded long before the topic closed: its
-        # latency must not include the 1 s close delay
-        assert completed["now"]["latency"] < 0.9
+        # latency must not include the 2.5 s close delay (2.0 leaves
+        # headroom for jit warmup + ProxySan stack-capture overhead)
+        assert completed["now"]["latency"] < 2.0
         engine.close()
 
 
@@ -451,6 +460,10 @@ class TestFailurePaths:
         assert engine.metrics["malformed_events"] == 1
         assert "ok" in completed
         engine.close()
+        # the skipped event's bulk was reclaimed, not left resident forever
+        # (nobody else ever pulls this topic)
+        req_store = s["producer"].store_for("requests")
+        assert list(req_store.connector.keys()) == []
 
     def test_stream_level_failure_still_fatal(self):
         """A broker/subscriber failure (not one request's fault) aborts

@@ -177,7 +177,9 @@ class TestDeltaContract:
             max_requests=2, close_responses=False,
         )
         assert len(engine1.completed) == 2
-        engine1.close()
+        # the stream outlives engine1: completion bulks the collector has
+        # not resolved yet must survive its close (handoff form)
+        engine1.close(reclaim_responses=False)
         assert not client.closed  # topic still open across the restart
 
         engine2 = make_engine()
@@ -204,6 +206,8 @@ class TestMetaOnlyEvents:
         return producer, consumer
 
     def test_send_meta_roundtrip_and_ordering(self):
+        from repro.core.proxy import extract
+
         producer, consumer = self._pair(timeout=5)
         producer.send("t", {"big": 1}, metadata={"kind": "bulk"})
         # send_meta flushes buffered sends first: order == call order
@@ -211,6 +215,7 @@ class TestMetaOnlyEvents:
         producer.send_meta("t", {"kind": "delta", "i": 1})
         proxy, meta = consumer.next_with_metadata()
         assert proxy is not None and meta["kind"] == "bulk"
+        assert extract(proxy) == {"big": 1}  # consume (one-shot: evicts)
         for i in range(2):
             proxy, meta = consumer.next_with_metadata()
             assert proxy is None  # metadata-only: nothing to resolve
@@ -400,7 +405,10 @@ class TestCrossProcessClient:
                 max_requests=2, close_responses=False,
             )
             assert len(engine1.completed) == 2
-            engine1.close()
+            # handoff form: the external client is still consuming — a
+            # reclaiming close would evict completion bulks it has not
+            # resolved yet and wedge its blocking resolves
+            engine1.close(reclaim_responses=False)
 
             # restart: a new engine resumes the request topic exactly after
             # the last consumed event (the subscriber pickle carries the
@@ -410,7 +418,7 @@ class TestCrossProcessClient:
             engine2 = make_engine()
             engine2.run(consumer2, resp_producer())
             assert len(engine2.completed) == 2
-            engine2.close()
+            engine2.close(reclaim_responses=False)
 
             out, err = proc.communicate(timeout=90)
         except BaseException:

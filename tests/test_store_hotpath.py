@@ -388,10 +388,16 @@ class TestResolveCache:
         conn = InMemoryConnector()
         writer = Store(f"hb-w-{id(conn)}", conn, register=False)
         reader = Store(f"hb-r-{id(conn)}", conn, register=False)
+        from repro.core import sanitize
+
         k = writer.put({"expires": 100})
         assert reader.get(k) == {"expires": 100}  # cached
         writer.put({"expires": 200}, key=k)
-        assert reader.get(k) == {"expires": 100}  # documented cache behavior
+        # the unfresh read is the documented-stale demonstration — under
+        # ProxySan it is (correctly) a stale_cache_read, so scope it
+        with sanitize.expecting() as exp:
+            assert reader.get(k) == {"expires": 100}  # documented cache behavior
+        assert exp.categories() <= {"stale_cache_read"}
         assert reader.get(k, fresh=True) == {"expires": 200}
         conn.close()
 
