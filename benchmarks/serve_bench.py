@@ -40,6 +40,13 @@ Gated metrics:
   sharing over fresh pages WITH it, for a workload of prompts sharing a
   64-token system prefix.  Deterministic page arithmetic (refcounted
   aliasing through the ownership store), no timers involved.
+- ``spec_accepted_tokens_per_step`` — speculative decode's accepted
+  tokens per slot-step with a self-draft (deterministic counter
+  arithmetic off the engine's metrics, no timers).  The self-draft
+  ceiling is spec_k+1; a broken draft/verify path collapses the rate to
+  exactly 1.0 (every step accepts only the corrected token), far below
+  the committed baseline.  ``check.sh`` passes ``--require`` for this
+  metric so it cannot silently vanish from the bench.
 
 Full runs repeat the suite three times and commit the element-wise median
 (``BENCH_serve.json``); ``--quick`` runs once into
@@ -112,7 +119,7 @@ def _send(producer, rng, req_id: str, max_new: int, sent_at=None):
     producer.flush_topic("requests")
 
 
-def _make_engine(**kw):
+def _make_engine(spec_self_draft: bool = False, **kw):
     import jax
 
     from repro.configs import get_smoke_config
@@ -124,6 +131,9 @@ def _make_engine(**kw):
     ctx = serve_context(cfg)
     model = build_model(ctx)
     params = materialize_params(model.param_specs(), jax.random.PRNGKey(0))
+    if spec_self_draft:
+        # the acceptance-maximizing degenerate draft: the target itself
+        kw.update(spec_k=SPEC_K, draft_model=model, draft_params=params)
     kw.setdefault("slots", SLOTS)
     kw.setdefault("max_len", MAX_LEN)
     kw.setdefault("page_size", PAGE_SIZE)
@@ -359,7 +369,56 @@ def bench_prefix_sharing(engine, metrics: dict) -> None:
     metrics["info_prefix_pages_unshared_run"] = float(pages_unshared)
 
 
-def run_suite(engine=None, pd_engines=None, prefix_engine=None) -> dict:
+SPEC_K = 3
+SPEC_MAX_NEW = 32
+
+
+def bench_spec_decode(engine, spec_engine, metrics: dict) -> None:
+    """Speculative decode acceptance, straight off the engine counters.
+
+    Both sides are deterministic step arithmetic (no timers): the
+    speculative engine serves a slots-wide workload and the gated rate is
+    accepted-tokens / slot-steps; the SAME workload on the plain engine
+    yields the decode-step ratio the speculation is worth (info — it is
+    rate/1 by construction, kept for the trajectory record).  With a
+    self-draft the rate sits near the spec_k+1 ceiling; a broken
+    draft/verify path collapses it to exactly 1.0."""
+    rng = np.random.default_rng(5)
+
+    p0 = engine.metrics["decode_steps"]
+    producer, consumer, _, _ = _streams("specbase")
+    for i in range(SLOTS):
+        _send(producer, rng, f"sb{i}", SPEC_MAX_NEW)
+    producer.close_topic("requests")
+    engine.run(consumer, max_requests=SLOTS)
+    plain_steps = engine.metrics["decode_steps"] - p0
+
+    m0 = dict(spec_engine.metrics)
+    producer, consumer, _, _ = _streams("spec")
+    for i in range(SLOTS):
+        _send(producer, rng, f"sp{i}", SPEC_MAX_NEW)
+    producer.close_topic("requests")
+    t0 = time.perf_counter()
+    spec_engine.run(consumer, max_requests=SLOTS)
+    wall = time.perf_counter() - t0
+    accepted = (
+        spec_engine.metrics["spec_accepted_tokens"] - m0["spec_accepted_tokens"]
+    )
+    slot_steps = (
+        spec_engine.metrics["spec_slot_steps"] - m0["spec_slot_steps"]
+    )
+    spec_steps = spec_engine.metrics["decode_steps"] - m0["decode_steps"]
+    metrics["spec_accepted_tokens_per_step"] = accepted / slot_steps
+    metrics["info_spec_vs_plain_decode_steps"] = plain_steps / spec_steps
+    metrics["info_spec_tokens_per_s"] = SLOTS * SPEC_MAX_NEW / wall
+    assert spec_engine.pages.pages_in_use() == 0, "spec bench leaked KV pages"
+    assert spec_engine.draft_pages.pages_in_use() == 0, (
+        "spec bench leaked draft pages"
+    )
+
+
+def run_suite(engine=None, pd_engines=None, prefix_engine=None,
+              spec_engine=None) -> dict:
     engine = engine or _make_engine()
     # warmup: compile prefill/admit/decode outside every timed phase
     producer, consumer, _, _ = _streams("warm")
@@ -376,6 +435,8 @@ def run_suite(engine=None, pd_engines=None, prefix_engine=None) -> dict:
     if prefix_engine is not None:
         bench_prefix_sharing(prefix_engine, metrics)
         assert prefix_engine.pages.pages_in_use() == 0, "prefix bench leaked"
+    if spec_engine is not None:  # quick too: the CI gate covers acceptance
+        bench_spec_decode(engine, spec_engine, metrics)
     if pd_engines is not None:  # full runs only: the baseline comparisons
         bench_batched_prefill(engine, metrics)
         bench_paged_vs_dense(pd_engines, metrics)
@@ -389,6 +450,8 @@ def main(quick: bool = False) -> dict:
     runs = 1 if quick else 3
     engine = _make_engine()  # one engine: jit once, every phase warm
     prefix_engine = _make_engine(max_len=128, page_size=8)
+    spec_engine = _make_engine(spec_self_draft=True)
+    _throughput_round(spec_engine, "spec-warm", 8)  # compile draft/verify
     pd_engines = None
     if not quick:
         pd_engines = (
@@ -398,7 +461,8 @@ def main(quick: bool = False) -> dict:
         for r, e in enumerate(pd_engines):  # compile outside the timed rounds
             _throughput_round(e, f"pd-warm{r}", PD_MAX_NEW)
     samples = [
-        run_suite(engine, pd_engines=pd_engines, prefix_engine=prefix_engine)
+        run_suite(engine, pd_engines=pd_engines, prefix_engine=prefix_engine,
+                  spec_engine=spec_engine)
         for _ in range(runs)
     ]
     metrics = {

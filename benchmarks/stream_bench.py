@@ -190,6 +190,36 @@ def bench_filelog(metrics: dict, tmpdir: str) -> None:
     metrics["filelog_vs_naive_ratio"] = min(raw, 5.0)
 
 
+FILE_PUTS = 200
+
+
+def bench_file_put(metrics: dict, tmpdir: str) -> None:
+    """FileConnector cross-process put rate: fsync-per-object ``put_parts``
+    vs ``put_batch``'s one-directory-fsync-per-batch durability point.
+    Absolute rates only (``info_``): fsync latency is pure filesystem
+    weather, so neither number is gated — the batch win is just recorded
+    as the trajectory artifact for the durability-batching change."""
+    from repro.core import FileConnector
+
+    payload = b"p" * 4096
+    c = FileConnector(os.path.join(tmpdir, "puts"))
+    try:
+        for i in range(20):  # warm the directory + page cache
+            c.put_parts(f"w{i}", (payload,))
+        t0 = time.perf_counter()
+        for i in range(FILE_PUTS):
+            c.put_parts(f"s{i}", (payload,))
+        single = FILE_PUTS / (time.perf_counter() - t0)
+        items = [(f"b{i}", (payload,)) for i in range(FILE_PUTS)]
+        t0 = time.perf_counter()
+        c.put_batch(items)
+        batched = FILE_PUTS / (time.perf_counter() - t0)
+    finally:
+        c.close()
+    metrics["info_file_put_per_s"] = single
+    metrics["info_file_put_batch_per_s"] = batched
+
+
 def bench_fig5_f05_ideal_ratio() -> float:
     from concurrent.futures import ThreadPoolExecutor
 
@@ -211,6 +241,7 @@ def run_suite() -> dict:
     d = tempfile.mkdtemp(prefix="stream-bench-")
     try:
         bench_filelog(metrics, d)
+        bench_file_put(metrics, d)
     finally:
         shutil.rmtree(d, ignore_errors=True)
     for size in SIZES:

@@ -56,6 +56,17 @@ echo "== kernels: Pallas interpret-mode vs jnp oracles =="
 # box can run (no TPU).
 python -m pytest -x -q tests/test_kernels.py
 
+echo
+echo "== serve: speculative decode bit-identity =="
+# Spec decode's whole contract in one named gate (runs in --fast too):
+# with a perfect self-draft AND with a draft built to always disagree,
+# the engine's emitted tokens equal the target-only reference decode
+# exactly — greedy rejection makes the output draft-independent by
+# construction.  The multi-query verify kernel that backs it is pinned
+# alongside (interpret-mode Pallas vs the dense staircase oracle).
+python -m pytest -x -q tests/test_serve_spec.py tests/test_kernels.py \
+    -k "bit_identical or multi_query"
+
 if [[ "${1:-}" != "--fast" ]]; then
     echo
     echo "== perf smoke: proxy_overhead --quick =="
@@ -85,8 +96,11 @@ if [[ "${1:-}" != "--fast" ]]; then
     # deterministic step-count) ratios with large headroom over their
     # failure modes (streaming broken → ttft_speedup ~1 vs the 10× cap;
     # static batching → exactly 1.0 vs 1.88; serialized decode → ~1 vs
-    # ~3.1-3.8).
-    python scripts/compare_bench.py --serve --tolerance 0.25
+    # ~3.1-3.8; draft rejected every step → accepted/slot-step exactly
+    # 1.0 vs the ≥1.5 gate).  --require pins the speculative-decode
+    # metric: dropping it from the bench is itself a gate failure.
+    python scripts/compare_bench.py --serve --tolerance 0.25 \
+        --require spec_accepted_tokens_per_step
 fi
 
 echo

@@ -77,6 +77,14 @@ def compare_proxy(args) -> int:
 
 def compare_metrics(args, what: str) -> int:
     fresh, base = load_metrics(args.fresh), load_metrics(args.baseline)
+    missing = [n for n in args.require if n not in fresh or n not in base]
+    if missing:
+        for n in missing:
+            print(f"[compare_bench] required metric {n!r} missing "
+                  f"(fresh: {n in fresh}, baseline: {n in base})")
+        print("[compare_bench] FAIL: a --require'd metric is absent — a "
+              "gated metric silently disappearing is itself a regression")
+        return 1
     shared = sorted(set(fresh) & set(base))
     if not shared:
         print("[compare_bench] no shared metrics between fresh and baseline")
@@ -119,6 +127,11 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--serve", action="store_true",
                     help="compare BENCH_serve metric dictionaries (serving "
                          "gate: ttft/continuous-batching/slot-scaling)")
+    ap.add_argument("--require", action="append", default=[], metavar="NAME",
+                    help="metric-dict modes: fail unless NAME is present in "
+                         "BOTH fresh and baseline metric sets (repeatable) — "
+                         "pins a gated metric so it cannot silently vanish "
+                         "from the bench")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fractional regression vs baseline "
                          "(quick runs use few reps; leave headroom for noise)")

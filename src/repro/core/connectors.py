@@ -447,7 +447,7 @@ class FileConnector:
     def put(self, key: str, data: bytes) -> None:
         self.put_parts(key, (data,))
 
-    def put_parts(self, key: str, parts: Sequence) -> int:
+    def _write_one(self, key: str, parts: Sequence, *, fsync: bool) -> int:
         tmp = self._path(key) + f".tmp.{os.getpid()}.{threading.get_ident()}"
         total = 0
         with open(tmp, "wb") as f:
@@ -456,12 +456,37 @@ class FileConnector:
             for part in parts:
                 total += f.write(part)
             f.flush()
-            os.fsync(f.fileno())
+            if fsync:
+                os.fsync(f.fileno())
         os.replace(tmp, self._path(key))
         return total
 
+    def put_parts(self, key: str, parts: Sequence) -> int:
+        return self._write_one(key, parts, fsync=True)
+
     def put_batch(self, items: Sequence[tuple[str, Sequence]]) -> int:
-        return sum(self.put_parts(key, parts) for key, parts in items)
+        """Batched multi-object put: one durability point per BATCH.
+
+        Every object still lands via its own tmp-write + atomic rename —
+        a concurrent ``get``/``exists`` never observes a partial object —
+        but the per-object ``fsync`` is replaced by a single directory
+        fsync after the last rename.  A crash can lose the tail of an
+        unflushed batch (callers treat a batch as one unit of progress);
+        it can never expose a torn object.  For stream payload batches
+        this turns N storage flushes into one."""
+        total = sum(
+            self._write_one(key, parts, fsync=False) for key, parts in items
+        )
+        if items:
+            self._sync_dir()
+        return total
+
+    def _sync_dir(self) -> None:
+        fd = os.open(self.directory, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
 
     def put_parts_new(self, key: str, parts: Sequence) -> int | None:
         """Atomic put-if-absent: ``link(2)`` the temp file into place.
@@ -570,6 +595,16 @@ class SharedMemoryConnector:
     (then the segment is replaced and the old mapping stays valid until the
     views die).  The guard cannot see other processes' views: treat keys as
     write-once across processes, or evict before re-putting.
+
+    Attach amortization: ``get``/``exists`` keep a per-process cache of
+    read-only attachments keyed by segment name + *generation* (the
+    /dev/shm inode), so the polling hot paths pay one shm_open + mmap per
+    segment lifetime instead of one per call.  A cheap stat validates the
+    generation on every hit: an evict-and-recreate under the same name (by
+    any process) changes the inode and forces a re-attach, and a local
+    evict or put-side replacement drops the entry eagerly.  The cache
+    never exports views (``get`` copies; ``get_view`` has its own retained
+    mappings), so dropping an entry is always just an munmap.
     """
 
     _live: "weakref.WeakSet[SharedMemoryConnector]" = None  # type: ignore[assignment]
@@ -584,6 +619,11 @@ class SharedMemoryConnector:
         # (which would disarm the in-place-overwrite guard).
         self._retained: list = []
         self._retained_lock = threading.Lock()
+        # Attach cache: key -> (SharedMemory, /dev/shm inode).  Read-only,
+        # never exports views (get copies under the lock), dropped on local
+        # evict/replace and on inode change (cross-process generation bump).
+        self._attached: dict = {}
+        self._attached_lock = threading.Lock()
         if SharedMemoryConnector._live is None:
             import atexit
             import weakref
@@ -628,9 +668,11 @@ class SharedMemoryConnector:
                 # mapping stays valid until those views die).
                 seg.unlink()
                 seg.close()
+                self._drop_attached(key)  # new generation under the same name
                 seg = shared_memory.SharedMemory(name=name, create=True, size=size)
             # else: resize-safe reuse — overwrite in place (the length
-            # header below masks any trailing stale bytes)
+            # header below masks any trailing stale bytes; a cached reader
+            # attachment maps the same inode, so it stays valid)
         try:
             seg.buf[:8] = bytes(8)  # mark unready while the body is written
             off = 8
@@ -709,20 +751,63 @@ class SharedMemoryConnector:
 
         return _watch_dir("/dev/shm", ready, timeout, f"any of {len(keys)} keys")
 
-    def get(self, key: str) -> bytes | None:
+    def _drop_attached(self, key: str) -> None:
+        with self._attached_lock:
+            ent = self._attached.pop(key, None)
+            if ent is not None:
+                try:
+                    ent[0].close()
+                except BufferError:  # pragma: no cover - cache exports no views
+                    pass
+
+    def _read_cached(self, key: str, reader):
+        """Run ``reader(segment)`` against the cached read-only attachment.
+
+        A stat of the /dev/shm inode validates the cached generation on
+        every call (an evict-and-recreate under the same name changes it);
+        the read runs under the cache lock so a concurrent local evict
+        can't unmap the segment mid-read.  Without /dev/shm there is no
+        generation witness, so the call degrades to attach-read-detach.
+        """
         from multiprocessing import shared_memory
 
+        name = self._name(key)
+        if not os.path.isdir("/dev/shm"):  # pragma: no cover - non-Linux
+            try:
+                seg = shared_memory.SharedMemory(name=name)
+            except FileNotFoundError:
+                return None
+            try:
+                return reader(seg)
+            finally:
+                seg.close()
         try:
-            seg = shared_memory.SharedMemory(name=self._name(key))
+            ino = os.stat(os.path.join("/dev/shm", name)).st_ino
         except FileNotFoundError:
+            self._drop_attached(key)
             return None
-        try:
+        with self._attached_lock:
+            ent = self._attached.get(key)
+            if ent is None or ent[1] != ino:
+                if ent is not None:
+                    ent[0].close()  # stale generation; cache exports no views
+                try:
+                    seg = shared_memory.SharedMemory(name=name)
+                except FileNotFoundError:
+                    self._attached.pop(key, None)
+                    return None
+                ent = (seg, ino)
+                self._attached[key] = ent
+            return reader(ent[0])
+
+    def get(self, key: str) -> bytes | None:
+        def read(seg):
             h = int.from_bytes(bytes(seg.buf[:8]), "little")
             if h == 0:
                 return None  # created but not yet published
             return bytes(seg.buf[8 : 8 + h - 1])
-        finally:
-            seg.close()
+
+        return self._read_cached(key, read)
 
     def get_view(self, key: str) -> memoryview | None:
         from multiprocessing import shared_memory
@@ -767,21 +852,15 @@ class SharedMemoryConnector:
             return any(k == key for k, _ in self._retained)
 
     def exists(self, key: str) -> bool:
-        from multiprocessing import shared_memory
-
-        try:
-            seg = shared_memory.SharedMemory(name=self._name(key))
-        except FileNotFoundError:
-            return False
-        try:
-            # unpublished segments are invisible (commit protocol above)
-            return bytes(seg.buf[:8]) != bytes(8)
-        finally:
-            seg.close()
+        # unpublished segments are invisible (commit protocol above)
+        return bool(
+            self._read_cached(key, lambda seg: bytes(seg.buf[:8]) != bytes(8))
+        )
 
     def evict(self, key: str) -> None:
         from multiprocessing import shared_memory
 
+        self._drop_attached(key)
         try:
             seg = shared_memory.SharedMemory(name=self._name(key))
         except FileNotFoundError:
@@ -794,6 +873,13 @@ class SharedMemoryConnector:
         self._reap_retained()
 
     def close(self) -> None:
+        with self._attached_lock:
+            for seg, _ in self._attached.values():
+                try:
+                    seg.close()
+                except BufferError:  # pragma: no cover - cache exports no views
+                    pass
+            self._attached.clear()
         self._reap_retained()
 
     def __reduce__(self):

@@ -208,10 +208,29 @@ def logical_to_spec(
     return PartitionSpec(*entries)
 
 
+_noop_constraint_warned = False
+
+
 def shard_constraint(x, axes, rules: AxisRules, mesh: Mesh):
-    """``with_sharding_constraint`` via logical axes; no-op on 1-device
-    meshes (smoke tests / CPU examples stay constraint-free HLO)."""
+    """``with_sharding_constraint`` via logical axes.
+
+    On a 1-device mesh the constraint is deliberately dropped (smoke tests
+    and CPU examples stay constraint-free HLO) — announced once per
+    process, so a "why is nothing sharded" investigation finds the cause
+    in the warning log rather than in this source file.  On real meshes
+    the resolved :func:`logical_to_spec` constraint is always placed.
+    """
     if mesh.size <= 1:
+        global _noop_constraint_warned
+        if not _noop_constraint_warned:
+            _noop_constraint_warned = True
+            import warnings
+
+            warnings.warn(
+                "shard_constraint is a no-op on a 1-device mesh: activation "
+                "constraints are dropped (further drops are silent)",
+                stacklevel=2,
+            )
         return x
     spec = logical_to_spec(x.shape, axes, rules, mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

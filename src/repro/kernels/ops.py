@@ -56,16 +56,20 @@ def flash_attention(
 
 @partial(jax.jit, static_argnames=("impl",))
 def paged_attention(
-    q: jax.Array,  # (B, 1, H, D) — one new token per sequence
+    q: jax.Array,  # (B, T, H, D) — T freshly written tokens per sequence
     k_pages: jax.Array,  # (P, page_size, Hkv, D) — the KV page pool
     v_pages: jax.Array,  # (P, page_size, Hkv, Dv)
     block_tables: jax.Array,  # (B, n) int32 physical page ids, token order
-    lens: jax.Array,  # (B,) int32 valid tokens per sequence
+    lens: jax.Array,  # (B,) int32 valid tokens through each FIRST query
     *,
     impl: str = "auto",  # auto | pallas | interpret | jnp
 ) -> jax.Array:
-    """Model-layout paged-attention decode over a block-table-indexed pool."""
-    B, _, H, D = q.shape
+    """Model-layout paged-attention decode over a block-table-indexed pool.
+
+    T == 1 is the single-token decode step; T == k+1 is speculative
+    decode's verify pass (query ``t`` attends keys ``< lens[b] + t``).
+    """
+    B, T, H, D = q.shape
     P, _, Hkv, Dv = v_pages.shape
     g = H // Hkv
     if impl == "auto":
@@ -74,13 +78,24 @@ def paged_attention(
         from repro.models.layers import paged_decode_attention
 
         return paged_decode_attention(q, k_pages, v_pages, block_tables, lens)
-    qg = q[:, 0].reshape(B, Hkv, g, D)
+    # queries-major row stacking: row t*g + lane matches the kernel's
+    # ``t = row // group`` per-row causal mask
+    qg = (
+        q.reshape(B, T, Hkv, g, D)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(B, Hkv, T * g, D)
+    )
     bt = jnp.clip(block_tables.astype(jnp.int32), 0, P - 1)  # DMA-safe padding
     obh = paged_attention_grouped(
         qg, k_pages, v_pages, bt, lens.astype(jnp.int32),
+        num_queries=T,
         interpret=(impl == "interpret"),
     )
-    return obh.reshape(B, 1, H, Dv)
+    return (
+        obh.reshape(B, Hkv, T, g, Dv)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(B, T, H, Dv)
+    )
 
 
 @partial(jax.jit, static_argnames=("impl", "chunk"))

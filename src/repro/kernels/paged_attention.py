@@ -1,23 +1,30 @@
-"""Pallas TPU paged-attention decode kernel (single query token, GQA).
+"""Pallas TPU paged-attention decode kernel (T ≥ 1 query tokens, GQA).
 
 The serving engine stores KV in a page pool ``(P, page_size, Hkv, D)``; a
 sequence's cache is the ordered list of physical pages its ``PageTable``
-block table names.  This kernel attends one new query token per sequence
-directly against that pool: the block table is a **scalar-prefetched**
-operand, so each grid step's BlockSpec index_map reads ``bt[b, i]`` and the
-page gather *is* the DMA schedule — no dense ``(B, max_len, ...)`` cache is
-ever materialized, and sequences pay for the pages they occupy, not for
-``max_len``.
+block table names.  This kernel attends a small block of freshly written
+query tokens per sequence directly against that pool: the block table is a
+**scalar-prefetched** operand, so each grid step's BlockSpec index_map reads
+``bt[b, i]`` and the page gather *is* the DMA schedule — no dense
+``(B, max_len, ...)`` cache is ever materialized, and sequences pay for the
+pages they occupy, not for ``max_len``.
 
-Layout: q ``(B, Hkv, G, D)`` (one token per sequence, q heads grouped by
-their kv head, as in flash_attention's wrapper), k/v pages
-``(P, page_size, Hkv, D)``, block tables ``(B, n)`` int32, lens ``(B,)``
-int32 (tokens < lens[b] attended).  Grid ``(B, Hkv, n)``: the page axis is
-sequential, so the online-softmax stats (m, l, acc) live in VMEM scratch
-that persists across pages — same accumulator discipline as
-flash_attention.  Pages at or beyond a sequence's length are skipped with
-``pl.when`` (their DMA still lands on a valid page — callers pad short
-block-table rows with any in-range page id).
+The query block covers speculative decode's verify pass: T = k+1 positions
+per sequence attend in ONE kernel launch.  Queries stack into the row axis
+as ``(T*G, D)`` — row ``r`` is query ``t = r // G``, head-group lane
+``g = r % G`` — so the single-token layout (T == 1) is the degenerate case
+and compiles to exactly the previous kernel.
+
+Layout: q ``(B, Hkv, T*G, D)`` (T tokens per sequence, q heads grouped by
+their kv head, queries-major), k/v pages ``(P, page_size, Hkv, D)``, block
+tables ``(B, n)`` int32, lens ``(B,)`` int32 — ``lens[b]`` counts valid
+tokens through the FIRST query's own position, so query ``t`` attends
+``pos < lens[b] + t``.  Grid ``(B, Hkv, n)``: the page axis is sequential,
+so the online-softmax stats (m, l, acc) live in VMEM scratch that persists
+across pages — same accumulator discipline as flash_attention.  Pages at or
+beyond every query's reach are skipped with ``pl.when`` (their DMA still
+lands on a valid page — callers pad short block-table rows with any
+in-range page id).
 """
 from __future__ import annotations
 
@@ -35,17 +42,18 @@ NEG_INF = -1e30
 def _paged_kernel(
     bt_ref,  # (B, n) int32 scalar-prefetch: the block tables
     lens_ref,  # (B,) int32 scalar-prefetch: valid tokens per sequence
-    q_ref,  # (1, 1, G, D)
+    q_ref,  # (1, 1, T*G, D)
     k_ref,  # (1, page_size, 1, D)
     v_ref,  # (1, page_size, 1, Dv)
-    o_ref,  # (1, 1, G, Dv)
-    m_scr,  # (G, 1) f32
-    l_scr,  # (G, 1) f32
-    acc_scr,  # (G, Dv) f32
+    o_ref,  # (1, 1, T*G, Dv)
+    m_scr,  # (T*G, 1) f32
+    l_scr,  # (T*G, 1) f32
+    acc_scr,  # (T*G, Dv) f32
     *,
     scale: float,
     page_size: int,
     num_page_slots: int,
+    group: int,
 ):
     b = pl.program_id(0)
     i = pl.program_id(2)
@@ -57,18 +65,22 @@ def _paged_kernel(
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     seq_len = lens_ref[b]
+    num_queries = q_ref.shape[2] // group
 
-    @pl.when(i * page_size < seq_len)  # page entirely past the sequence: skip
+    # page entirely past even the LAST query's reach: skip
+    @pl.when(i * page_size < seq_len + num_queries - 1)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        q = q_ref[0, 0].astype(jnp.float32)  # (T*G, D)
         k = k_ref[0, :, 0].astype(jnp.float32)  # (page_size, D)
         v = v_ref[0, :, 0].astype(jnp.float32)  # (page_size, Dv)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        ) * scale  # (G, page_size)
+        ) * scale  # (T*G, page_size)
         pos = i * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(pos < seq_len, s, NEG_INF)
-        m_prev = m_scr[...]  # (G, 1)
+        # row r is query t = r // group: it attends pos < seq_len + t
+        t_row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        s = jnp.where(pos < seq_len + t_row, s, NEG_INF)
+        m_prev = m_scr[...]  # (T*G, 1)
         m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
         p = jnp.exp(s - m_new)
         corr = jnp.exp(m_prev - m_new)
@@ -85,18 +97,22 @@ def _paged_kernel(
 
 
 def paged_attention_grouped(
-    q: jax.Array,  # (B, Hkv, G, D)
+    q: jax.Array,  # (B, Hkv, T*G, D) — queries-major row stacking
     k_pages: jax.Array,  # (P, page_size, Hkv, D)
     v_pages: jax.Array,  # (P, page_size, Hkv, Dv)
     block_tables: jax.Array,  # (B, n) int32 physical page ids, in token order
-    lens: jax.Array,  # (B,) int32
+    lens: jax.Array,  # (B,) int32 — valid tokens through the first query
     *,
+    num_queries: int = 1,
     scale: float | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    B, Hkv, G, D = q.shape
+    B, Hkv, QG, D = q.shape
     P, page_size, _, Dv = v_pages.shape
     n = block_tables.shape[1]
+    if QG % num_queries:
+        raise ValueError(f"query rows {QG} not divisible by T={num_queries}")
+    G = QG // num_queries
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
 
     kernel = functools.partial(
@@ -104,12 +120,13 @@ def paged_attention_grouped(
         scale=scale,
         page_size=page_size,
         num_page_slots=n,
+        group=G,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # (block_tables, lens) usable in index_maps
         grid=(B, Hkv, n),
         in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, h, i, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, QG, D), lambda b, h, i, bt, ln: (b, h, 0, 0)),
             pl.BlockSpec(
                 (1, page_size, 1, D), lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0)
             ),
@@ -117,17 +134,17 @@ def paged_attention_grouped(
                 (1, page_size, 1, Dv), lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0)
             ),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, Dv), lambda b, h, i, bt, ln: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, QG, Dv), lambda b, h, i, bt, ln: (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, 1), jnp.float32),
-            pltpu.VMEM((G, Dv), jnp.float32),
+            pltpu.VMEM((QG, 1), jnp.float32),
+            pltpu.VMEM((QG, 1), jnp.float32),
+            pltpu.VMEM((QG, Dv), jnp.float32),
         ],
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), v_pages.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, QG, Dv), v_pages.dtype),
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),

@@ -57,6 +57,13 @@ def main(argv=None) -> int:
     ap.add_argument("--no-paged", dest="paged", action="store_false",
                     help="dense (L, B, max_len) KV layout instead of the "
                          "paged pool (the benchmark baseline)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decode: draft-proposed tokens per "
+                         "slot per step (0 = off); emitted tokens stay "
+                         "bit-identical to plain greedy decode")
+    ap.add_argument("--draft-config", default=None, choices=arch_names(True),
+                    help="smoke config for the draft model (--spec-k > 0); "
+                         "defaults to --arch (self-draft)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -124,9 +131,26 @@ def main(argv=None) -> int:
     sender.start()
     collector.start()
 
+    draft_model = draft_params = None
+    if args.spec_k > 0:
+        if args.draft_config is None or args.draft_config == args.arch:
+            # self-draft: reuses the target's params (the degenerate case
+            # that maximizes acceptance; a real deployment would pass a
+            # smaller --draft-config)
+            draft_model, draft_params = model, params
+        else:
+            dcfg = get_smoke_config(args.draft_config)
+            dctx = serve_context(dcfg, use_kernels=args.use_kernels)
+            draft_model = build_model(dctx)
+            with dctx.mesh:
+                draft_params = materialize_params(
+                    draft_model.param_specs(), jax.random.PRNGKey(1)
+                )
+
     engine = ServeEngine(
         ctx, params, slots=args.slots, max_len=args.max_len,
         page_size=args.page_size, eos_id=-1, paged=args.paged,
+        spec_k=args.spec_k, draft_model=draft_model, draft_params=draft_params,
     )
     t0 = time.perf_counter()
     completed = engine.run(consumer, resp_producer)
@@ -142,12 +166,19 @@ def main(argv=None) -> int:
 
     lat = [c["latency"] for c in completed.values()]
     ttfts = list(client.ttft_s(sent_at).values())
+    spec_note = ""
+    if args.spec_k > 0 and engine.metrics["spec_slot_steps"]:
+        rate = (
+            engine.metrics["spec_accepted_tokens"]
+            / engine.metrics["spec_slot_steps"]
+        )
+        spec_note = f" accepted/slot-step {rate:.2f} (spec_k={args.spec_k});"
     print(
         f"[serve] {args.arch} (smoke): {len(completed)}/{args.requests} requests, "
         f"{engine.metrics['tokens']} tokens in {wall:.1f}s "
         f"({engine.metrics['tokens']/wall:.1f} tok/s); "
         f"mean latency {np.mean(lat):.2f}s; "
-        f"mean ttft {np.mean(ttfts):.3f}s (streamed deltas); "
+        f"mean ttft {np.mean(ttfts):.3f}s (streamed deltas);{spec_note} "
         f"pages in use at exit: {engine.pages.pages_in_use()}"
     )
     streamed_ok = all(
@@ -158,6 +189,8 @@ def main(argv=None) -> int:
     ok = (
         len(completed) == args.requests
         and engine.pages.pages_in_use() == 0
+        and (engine.draft_pages is None
+             or engine.draft_pages.pages_in_use() == 0)
         and len(client.results) == args.requests
         and streamed_ok
     )

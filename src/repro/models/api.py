@@ -76,6 +76,16 @@ def decode_input_specs(cfg: ArchConfig, batch: int) -> dict:
     }
 
 
+def verify_input_specs(cfg: ArchConfig, batch: int, num_tokens: int) -> dict:
+    """Abstract inputs for speculative decode's verify pass: ``num_tokens``
+    (= spec_k + 1) stacked positions per row, each row at its own length —
+    the ``verify_batch`` operand shapes the dry-run lowers against."""
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, num_tokens), jnp.int32),
+        "lens": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
 def decode_cache_specs(model, cfg: ArchConfig, batch: int, max_len: int):
     """ParamSpec pytree for the decode-time cache/state of any family."""
     if cfg.family == "rwkv":

@@ -250,45 +250,55 @@ def blockwise_attention(
 
 
 def decode_attention(
-    q: jax.Array,  # (B, 1, H, D)
+    q: jax.Array,  # (B, T, H, D) — T freshly written decode tokens
     k_cache: jax.Array,  # (B, S, Hkv, D)
     v_cache: jax.Array,  # (B, S, Hkv, Dv)
-    length: jax.Array,  # (,) current valid length (tokens < length attended)
+    length: jax.Array,  # (,) valid length through the FIRST query's position
     *,
     scale: float | None = None,
 ) -> jax.Array:
-    """Single-token attention over a (possibly sequence-sharded) KV cache."""
-    B, _, H, D = q.shape
+    """Attention for T ≥ 1 decode tokens over a (possibly sequence-sharded)
+    KV cache.  ``length`` counts valid cache entries through the first
+    query's own position (``cache_index + 1``); query ``t`` additionally
+    sees the ``t`` queries written before it, i.e. attends keys
+    ``< length + t``.  T == 1 is the classic single-token decode step;
+    T == k+1 is the speculative verify pass."""
+    B, T, H, D = q.shape
     _, S, Hkv, Dv = v_cache.shape
     G = H // Hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
-    qg = q.reshape(B, Hkv, G, D)
-    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache, preferred_element_type=jnp.float32)
+    qg = q.reshape(B, T, Hkv, G, D)
+    s = jnp.einsum(
+        "bthgd,bshd->bhgts", qg, k_cache, preferred_element_type=jnp.float32
+    )
     s = s * scale
-    mask = jnp.arange(S) < length
-    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    mask = jnp.arange(S)[None, :] < (length + jnp.arange(T))[:, None]  # (T, S)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum(
-        "bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+        "bhgts,bshd->bthgd", p.astype(v_cache.dtype), v_cache,
         preferred_element_type=jnp.float32,
     )
-    return o.reshape(B, 1, H, Dv).astype(v_cache.dtype)
+    return o.reshape(B, T, H, Dv).astype(v_cache.dtype)
 
 
 def paged_decode_attention(
-    q: jax.Array,  # (B, 1, H, D)
+    q: jax.Array,  # (B, T, H, D) — T freshly written decode tokens
     k_pages: jax.Array,  # (P, page_size, Hkv, D)
     v_pages: jax.Array,  # (P, page_size, Hkv, Dv)
     block_tables: jax.Array,  # (B, n) int32 physical page ids, token order
-    lens: jax.Array,  # (B,) valid tokens per sequence
+    lens: jax.Array,  # (B,) valid tokens through each row's FIRST query
     *,
     scale: float | None = None,
 ) -> jax.Array:
     """jnp reference for the paged decode kernel: gather each sequence's
     pages through its block table into a contiguous view, then attend with
-    a per-sequence length mask.  ``lens[b] == 0`` rows produce garbage (a
-    uniform average), never NaN — idle serving slots are unread anyway."""
-    B, _, H, D = q.shape
+    a per-sequence length mask.  Query ``t`` of row ``b`` sits at absolute
+    position ``lens[b] - 1 + t`` and attends keys ``< lens[b] + t`` (T == 1
+    is the single-token decode step, T == k+1 the speculative verify).
+    ``lens[b] == 0`` rows produce garbage (a uniform average), never NaN —
+    idle serving slots are unread anyway."""
+    B, T, H, D = q.shape
     P, ps, Hkv, Dv = v_pages.shape
     n = block_tables.shape[1]
     G = H // Hkv
@@ -296,17 +306,20 @@ def paged_decode_attention(
     bt = jnp.clip(block_tables, 0, P - 1)
     k = k_pages[bt].reshape(B, n * ps, Hkv, k_pages.shape[-1])
     v = v_pages[bt].reshape(B, n * ps, Hkv, Dv)
-    qg = q.reshape(B, Hkv, G, D)
-    s = jnp.einsum("bhgd,bshd->bhgs", qg, k, preferred_element_type=jnp.float32)
+    qg = q.reshape(B, T, Hkv, G, D)
+    s = jnp.einsum("bthgd,bshd->bhgts", qg, k, preferred_element_type=jnp.float32)
     s = s * scale
-    mask = jnp.arange(n * ps)[None, :] < lens[:, None]
-    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    mask = (
+        jnp.arange(n * ps)[None, None, :]
+        < (lens[:, None] + jnp.arange(T)[None, :])[:, :, None]
+    )  # (B, T, n*ps)
+    s = jnp.where(mask[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum(
-        "bhgs,bshd->bhgd", p.astype(v.dtype), v,
+        "bhgts,bshd->bthgd", p.astype(v.dtype), v,
         preferred_element_type=jnp.float32,
     )
-    return o.reshape(B, 1, H, Dv).astype(v.dtype)
+    return o.reshape(B, T, H, Dv).astype(v.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -317,7 +330,9 @@ def paged_decode_attention(
 def _decode_attention_core(ctx: "ModelContext", q, k_cache, v_cache, length):
     """Decode-step dispatch: when kernels are enabled, view the dense
     per-slot cache as contiguous pages (an arange block table) and run the
-    paged-attention kernel; else the plain masked jnp decode attention."""
+    paged-attention kernel; else the plain masked jnp decode attention.
+    Handles T ≥ 1 query tokens (q ``(B, T, H, D)``): both backends mask
+    query ``t`` to keys ``< length + t``."""
     B, S, Hkv, Dv = v_cache.shape
     if ctx.use_kernels and q.shape[-1] == Dv and S % 16 == 0:
         from repro.kernels.ops import paged_attention
@@ -478,8 +493,10 @@ def apply_mla(
             "bshd,btod->bhst", q_rope, kr_c, preferred_element_type=jnp.float32
         )
         S = ckv_c.shape[1]
-        mask = jnp.arange(S) < (cache_index + 1)
-        s = jnp.where(mask[None, None, None, :], s * scale, -jnp.inf)
+        Sq = x.shape[1]
+        # query t (of Sq freshly written tokens) attends keys < index+1+t
+        mask = jnp.arange(S)[None, :] < (cache_index + 1 + jnp.arange(Sq))[:, None]
+        s = jnp.where(mask[None, None], s * scale, -jnp.inf)
         p = jax.nn.softmax(s, axis=-1)
         o_lat = jnp.einsum("bhst,btk->bshk", p.astype(ckv_c.dtype), ckv_c)
         o = jnp.einsum("bshk,khd->bshd", o_lat, params["w_uv"])

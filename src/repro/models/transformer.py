@@ -241,12 +241,16 @@ class DecoderLM:
             }
         return stack_specs(per, cfg.n_layers)
 
-    def decode_step(self, params, cache, tokens, index):
-        """One decode step.  tokens (B, 1); cache stacked (L, ...);
-        index: scalar position of the new token."""
+    def _decode_trunk(self, params, cache, tokens, index):
+        """Shared decode trunk: embed ``tokens`` (B, K) at positions
+        ``index .. index+K-1``, run every layer against the stacked cache
+        (each layer writes its K new KV entries at ``index``), and return
+        (hidden (B, K, E), new stacked cache)."""
         cfg, ctx = self.cfg, self.ctx
-        B = tokens.shape[0]
-        rope = self._rope({"tokens": tokens}, positions=jnp.full((1, 1), index))
+        K = tokens.shape[1]
+        rope = self._rope(
+            {"tokens": tokens}, positions=index + jnp.arange(K)[None]
+        )
         x = L.apply_embed(ctx, params["embed"], tokens)
 
         all_layers = []
@@ -281,9 +285,46 @@ class DecoderLM:
             jax.tree.map(lambda *cs: jnp.concatenate(cs, 0), *new_caches)
             if len(new_caches) > 1 else new_caches[0]
         )
+        return x, new_cache
+
+    def decode_step(self, params, cache, tokens, index):
+        """One decode step.  tokens (B, 1); cache stacked (L, ...);
+        index: scalar position of the new token."""
+        cfg, ctx = self.cfg, self.ctx
+        x, new_cache = self._decode_trunk(params, cache, tokens, index)
         hn = L.apply_norm(cfg, params["final_norm"], x)
         logits = L.apply_unembed(ctx, params["embed"], hn)
         return logits[:, 0], new_cache
+
+    def decode_multi(self, params, cache, tokens, index):
+        """K-token decode for speculative verify: ``tokens`` (B, K) are
+        already-chosen tokens (last accepted + k draft proposals) written
+        at positions ``index .. index+K-1``; query ``t`` attends the cache
+        through position ``index+t`` (causal within the block).  Returns
+        (logits (B, K, V), new cache) — ``logits[:, t]`` is the target
+        distribution AFTER token ``t``, so K == 1 reduces exactly to
+        :meth:`decode_step`."""
+        cfg, ctx = self.cfg, self.ctx
+        x, new_cache = self._decode_trunk(params, cache, tokens, index)
+        hn = L.apply_norm(cfg, params["final_norm"], x)
+        logits = L.apply_unembed(ctx, params["embed"], hn)
+        return logits, new_cache
+
+    def verify_batch(self, params, cache, tokens, lens):
+        """Per-row multi-position decode (the speculative verify pass):
+        row ``b``'s K tokens sit at positions ``lens[b] .. lens[b]+K-1``
+        of its own cache row.  ``cache`` leaves are stacked ``(L, B, S,
+        ...)``; ``tokens`` (B, K); ``lens`` (B,) per-row cached lengths.
+        Returns (logits (B, K, V), new cache)."""
+
+        def one(cache_b, tok_b, len_b):
+            cb = jax.tree.map(lambda c: c[:, None], cache_b)
+            logits, nc = self.decode_multi(params, cb, tok_b[None], len_b)
+            return logits[0], jax.tree.map(lambda c: c[:, 0], nc)
+
+        return jax.vmap(one, in_axes=(1, 0, 0), out_axes=(0, 1))(
+            cache, tokens, lens
+        )
 
     def _prefill_trunk(self, params, tokens, max_len: int):
         """Shared prefill trunk: run the full (B, S) prompt batch, return

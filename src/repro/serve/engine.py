@@ -41,6 +41,23 @@ Admission is backpressured through PageTable reservations: a request is
 admitted only when the pool can cover its *whole* generation, so decode
 never OOMs mid-sequence; requests the pool can never fit are rejected onto
 the response stream as errors.
+
+Speculative decode (``spec_k > 0`` + a ``draft_model``): each step, the
+draft proposes up to k tokens per active slot (k+1 chained single-token
+steps over its own page pool, re-feeding the previous token so the draft
+cache self-heals after full acceptance), then the target verifies all k+1
+positions in ONE jit'd paged forward (``verify_batch`` → multi-query paged
+attention: query t attends keys < len+t).  Greedy rejection accepts the
+longest draft prefix matching the target's own argmaxes plus one corrected
+token — emitted tokens are ALWAYS target argmaxes, so the output is
+bit-identical to plain greedy decode for any draft; draft quality only
+moves the accepted-tokens/step rate.  Rejected draft KV "rolls back" by
+never scattering positions past the accepted length into the pool (a
+PageTable only grows), and ``k_eff = min(k, remaining-1, horizon)`` clamps
+keep every extend inside the admission reservation, so speculation can
+never OOM and pricing is unchanged.  The draft runs a second PageTable (its
+own Store, no prefix sharing) in lockstep: ``can_admit`` checks both pools
+and ``_finish`` frees both.
 """
 from __future__ import annotations
 
@@ -114,6 +131,9 @@ class ServeEngine:
         paged: bool = True,
         batch_prefill: bool = True,
         share_prefixes: bool = True,
+        spec_k: int = 0,
+        draft_model=None,
+        draft_params=None,
     ):
         from repro.core.connectors import new_key
         from repro.serve.kvcache import PageTable
@@ -137,6 +157,21 @@ class ServeEngine:
         self.paged = paged and max_len % page_size == 0
         self.batch_prefill = batch_prefill
         self.share_prefixes = share_prefixes
+        # speculative decode: a draft model proposes spec_k tokens per slot
+        # per step; the target verifies all of them in one paged forward.
+        # Greedy rejection keeps the longest matching prefix plus the
+        # target's corrected token, so the emitted stream is bit-identical
+        # to target-only greedy decode by construction.
+        if spec_k > 0 and draft_model is None:
+            raise ValueError("spec_k > 0 requires a draft_model")
+        if spec_k > 0 and not self.paged:
+            raise ValueError(
+                "speculative decode requires the paged cache layout "
+                "(max_len must be a multiple of page_size, paged=True)"
+            )
+        self.spec_k = int(spec_k)
+        self.draft_model = draft_model
+        self.draft_params = draft_params if draft_params is not None else {}
         self._can_batch = hasattr(self.model, "prefill_batch")
         # pool geometry, pinned at construction (tests may shrink the
         # allocator's num_pages afterwards to force backpressure — the
@@ -150,6 +185,29 @@ class ServeEngine:
         # serve-profile shardings for the cache (kv_seq over the model
         # axis); a no-op placement on the 1-device smoke mesh
         self._cache_shardings = sharding_tree(self._cache_specs, ctx.rules, ctx.mesh)
+        if self.spec_k:
+            from repro.serve.kvcache import page_bytes_for
+
+            # The draft pool mirrors the target pool's geometry (same page
+            # ids, same null page) but is priced off the DRAFT model's
+            # per-token cache, and lives in its own store so its page
+            # cells never collide with the target's keys.  No prefix
+            # sharing on the draft side: its KV is advisory (drafts only
+            # steer acceptance, never the emitted tokens).
+            self._draft_store = Store(f"kvdraft-{new_key()}")
+            self.draft_pages = PageTable(
+                num_pages=self.pages.num_pages,
+                page_size=page_size,
+                store=self._draft_store,
+                page_bytes=page_bytes_for(draft_model, self.cfg.dtype, page_size),
+            )
+            self._draft_cache_specs = self._pool_specs(draft_model)
+            self._draft_shardings = sharding_tree(
+                self._draft_cache_specs, ctx.rules, ctx.mesh
+            )
+        else:
+            self._draft_store = None
+            self.draft_pages = None
         # cache donated on the per-token hot path too: the step rewrites
         # the KV buffers in place instead of allocating a full copy per
         # token (self._cache is reassigned from the result, so the donated
@@ -173,7 +231,20 @@ class ServeEngine:
                     p, tokens, lens, self.max_len
                 )
             )
+        if self.spec_k:
+            self._spec_draft = jax.jit(self._spec_draft_body, donate_argnums=(1,))
+            self._spec_verify = jax.jit(self._spec_verify_body, donate_argnums=(1,))
+            self._draft_prefill = jax.jit(
+                lambda p, tokens: self.draft_model.prefill(p, tokens, self.max_len)
+            )
+            if hasattr(self.draft_model, "prefill_batch"):
+                self._draft_prefill_many = jax.jit(
+                    lambda p, tokens, lens: self.draft_model.prefill_batch(
+                        p, tokens, lens, self.max_len
+                    )
+                )
         self._cache = None  # paged: (L, P+1, ps, ...); dense: (L, B, S, ...)
+        self._draft_cache = None  # spec_k only: draft model's page pool
         self._live_prompts: dict[str, np.ndarray] = {}  # for prefix sharing
         # Per-request lifetimes, split by custodian.  Request-side payloads
         # (persistent prompt bulks) are consumed by THIS engine, so close()
@@ -198,20 +269,22 @@ class ServeEngine:
             "batched_prefills": 0,
             "prefix_shared_pages": 0,
             "cow_page_copies": 0,
+            "spec_steps": 0,
+            "spec_slot_steps": 0,
+            "spec_accepted_tokens": 0,
         }
 
     def _page_bytes(self, page_size: int) -> int:
         """Host-side KV bytes one page represents (the PageTable cell size)."""
-        from repro.dist.sharding import count_params
+        from repro.serve.kvcache import page_bytes_for
 
-        per_token = count_params(self.model.cache_specs(1, 1))
-        return page_size * per_token * jnp.dtype(self.cfg.dtype).itemsize
+        return page_bytes_for(self.model, self.cfg.dtype, page_size)
 
-    def _pool_specs(self):
+    def _pool_specs(self, model=None):
         """Page-pool cache specs: each dense (L, B, S, ...) leaf becomes
         (L, P+1, page_size, ...) — axis 1 is the physical page id (the
         last index is the null scratch page), axis 2 the in-page offset."""
-        per_page = self.model.cache_specs(1, self.pages.page_size)
+        per_page = (model or self.model).cache_specs(1, self.pages.page_size)
         P = self._null_page + 1
 
         def to_pool(s):
@@ -312,10 +385,131 @@ class ServeEngine:
         """Copy-on-write mirror: duplicate physical page src → dst."""
         return jax.tree.map(lambda leaf: leaf.at[:, dst].set(leaf[:, src]), pool)
 
+    # -- speculative decode (spec_k > 0) -------------------------------------
+    #
+    # Per step, three phases over the same block-table machinery as
+    # _decode_paged_body:
+    #   draft:  k+1 chained single-token steps on the DRAFT pool propose
+    #           d_1..d_k per slot (the first step re-feeds the previous
+    #           token so a fully-accepted run's bonus token is caught up —
+    #           rewriting position pos-1 with the same token is a no-op);
+    #   verify: ONE multi-position target forward feeds [last, d_1..d_k]
+    #           at positions pos..pos+k and computes the acceptance length
+    #           in-graph: a = LCP(draft, target argmax) + 1 — the emitted
+    #           tokens are ALWAYS the target's argmaxes, so the stream is
+    #           bit-identical to target-only greedy decode;
+    #   rollback: pages past the accepted length are simply not scattered
+    #           back (dst redirected to the null page) — the PageTable
+    #           never rolls back, and stale draft-side bytes are rewritten
+    #           by the next step before anything attends them.
+    #
+    # Per-slot speculation depth k_eff clamps to (remaining-1, max_len-2-pos)
+    # so every extend stays inside the admission-time reservation; rows pad
+    # their draft tokens with -1 beyond k_eff, which can never match an
+    # argmax, capping acceptance exactly at k_eff+1.
+
+    def _gather_dense(self, pool, bt):
+        """(L, P+1, ps, ...) pool → contiguous (L, B, n*ps, ...) view."""
+        ps = self.pages.page_size
+        n = bt.shape[1]
+
+        def gather(leaf):
+            g = leaf[:, bt]
+            return g.reshape(g.shape[:2] + (n * ps,) + g.shape[4:])
+
+        return jax.tree.map(gather, pool)
+
+    def _scatter_span(self, pool, dense, bt, first, last):
+        """Scatter pages ``first[b]..last[b]`` of each row's dense view back
+        to their physical pages; rows/pages outside the span write the null
+        scratch page.  The static write bound covers the k+1 positions one
+        speculative step can touch."""
+        ps = self.pages.page_size
+        n = bt.shape[1]
+        n_wr = min(n, (self.spec_k + ps - 1) // ps + 1)
+
+        def pick(nd_b, p_idx):  # (L, n*ps, ...) → page p_idx's (L, ps, ...)
+            return jax.lax.dynamic_slice_in_dim(nd_b, p_idx * ps, ps, axis=1)
+
+        for j in range(n_wr):
+            slot_j = jnp.clip(first + j, 0, n - 1)  # (B,)
+            keep = (first + j >= 0) & (first + j <= last)
+            dstp = jnp.take_along_axis(bt, slot_j[:, None], axis=1)[:, 0]
+            dst = jnp.where(keep, dstp, self._null_page)
+
+            def scatter(leaf, nd):
+                written = jax.vmap(pick, in_axes=(1, 0), out_axes=1)(nd, slot_j)
+                return leaf.at[:, dst].set(written.astype(leaf.dtype))
+
+            pool = jax.tree.map(scatter, pool, dense)
+        return pool
+
+    def _spec_draft_body(self, draft_params, pool, bt, prev, last, lens, k_eff):
+        """Draft proposal: k+1 chained decode steps on the draft pool.
+
+        Step 0 re-feeds ``prev`` at position lens-1 (catch-up: after a
+        fully-accepted run the draft cache is one token behind the
+        target's; otherwise the rewrite is byte-identical).  Step 1 feeds
+        ``last`` at lens and yields d_1; step j>=2 chains the argmax.
+        Returns (new_pool, drafts (B, k)) — drafts are advisory only."""
+        dense = self._gather_dense(pool, bt)
+
+        def one(cache_b, tok_b, idx_b):
+            c = jax.tree.map(lambda x: x[:, None], cache_b)
+            logits, nc = self.draft_model.decode_step(
+                draft_params, c, tok_b[None, None], idx_b
+            )
+            return jax.tree.map(lambda x: x[:, 0], nc), logits[0]
+
+        step = jax.vmap(one, in_axes=(1, 0, 0), out_axes=(1, 0))
+        cur = prev
+        drafts = []
+        for j in range(self.spec_k + 1):
+            dense, logits = step(dense, cur, lens - 1 + j)
+            nxt = jnp.argmax(
+                logits[:, : self.cfg.vocab], axis=-1
+            ).astype(jnp.int32)
+            if j == 0:
+                cur = last  # step 0's output is `last` itself: known
+            else:
+                drafts.append(nxt)
+                cur = nxt
+        # persist positions lens-1 .. lens-1+k_eff (catch-up + the drafts
+        # the verify pass may accept); later writes are scratch
+        first = (lens - 1) // self.pages.page_size
+        lastp = (lens - 1 + k_eff) // self.pages.page_size
+        pool = self._scatter_span(pool, dense, bt, first, lastp)
+        return pool, jnp.stack(drafts, axis=1)
+
+    def _spec_verify_body(self, params, pool, bt, tokens, lens, k_eff):
+        """Target verify: ONE multi-position forward over the paged pool.
+
+        ``tokens`` (B, k+1) = [last, d_1..d_k] per row (-1 beyond k_eff),
+        landing at positions lens..lens+k.  Acceptance and rollback are
+        in-graph: a = LCP + 1, and only pages holding accepted positions
+        scatter back — everything past them is dropped on the floor."""
+        dense = self._gather_dense(pool, bt)
+        logits, new_dense = self.model.verify_batch(params, dense, tokens, lens)
+        out = jnp.argmax(logits[..., : self.cfg.vocab], axis=-1).astype(
+            jnp.int32
+        )  # (B, k+1): out[:, t] corrects/extends after fed token t
+        match = (out[:, :-1] == tokens[:, 1:]).astype(jnp.int32)  # (B, k)
+        acc = jnp.cumprod(match, axis=1).sum(axis=1) + 1  # (B,) in 1..k+1
+        acc = jnp.minimum(acc, k_eff + 1)  # -1 padding already enforces this
+        first = lens // self.pages.page_size
+        lastp = (lens + acc - 1) // self.pages.page_size
+        pool = self._scatter_span(pool, new_dense, bt, first, lastp)
+        return pool, out, acc
+
     def _ensure_cache(self):
         if self._cache is None:
             cache = materialize_params(self._cache_specs, jax.random.PRNGKey(0))
             self._cache = jax.device_put(cache, self._cache_shardings)
+        if self.spec_k and self._draft_cache is None:
+            cache = materialize_params(
+                self._draft_cache_specs, jax.random.PRNGKey(0)
+            )
+            self._draft_cache = jax.device_put(cache, self._draft_shardings)
 
     def _apply_cow(self):
         """Mirror queued PageTable copy-on-write events on the device pool
@@ -337,6 +531,19 @@ class ServeEngine:
         while n < needed:
             n *= 2
         return min(n, max(self._pages_per_slot, 1))
+
+    def _bt_width_spec(self, needed: int) -> int:
+        """Speculative block-table width: like _bt_width, but capped one
+        burst wider than a full slot.  The verify forward WRITES k+1
+        positions starting at pos regardless of per-row k_eff, and
+        ``dynamic_update_slice`` clamps out-of-range starts — a too-narrow
+        gathered view would silently shift those writes onto valid KV.  The
+        extra columns are null pages: written as scratch, never scattered."""
+        cap = -(-(self.max_len + self.spec_k) // self.pages.page_size)
+        n = 1
+        while n < needed:
+            n *= 2
+        return min(max(n, 1), max(cap, 1))
 
     # -- request admission --------------------------------------------------
     def _prefix_parent(self, prompt: np.ndarray) -> tuple[str | None, int]:
@@ -374,15 +581,27 @@ class ServeEngine:
             )
         else:
             self.pages.allocate(req.req_id, len(req.prompt), reserve_tokens=total)
+        if self.spec_k:
+            # lockstep draft allocation (no sharing: draft KV is advisory);
+            # keep the two pools atomic — a draft-side failure must not
+            # leave a half-admitted sequence holding target pages
+            try:
+                self.draft_pages.allocate(
+                    req.req_id, len(req.prompt), reserve_tokens=total
+                )
+            except BaseException:
+                self.pages.free_sequence(req.req_id)
+                raise
         self._live_prompts[req.req_id] = np.asarray(req.prompt, np.int32)
 
-    def _slot_ids_row(self, req_id: str) -> np.ndarray:
+    def _slot_ids_row(self, req_id: str, table=None) -> np.ndarray:
         """Physical destination pages for one admitted row's insert: owned
         pages in token order; borrowed (shared-prefix) pages and the
         unallocated tail map to the null page."""
+        table = table if table is not None else self.pages
         ids = np.full((self._pages_per_slot,), self._null_page, np.int32)
-        borrowed = self.pages.borrowed_pages(req_id)
-        for j, p in enumerate(self.pages.pages_of(req_id)):
+        borrowed = table.borrowed_pages(req_id)
+        for j, p in enumerate(table.pages_of(req_id)):
             if p not in borrowed:
                 ids[j] = p
         return ids
@@ -416,6 +635,30 @@ class ServeEngine:
                 self.params, jnp.asarray(tokens), jnp.asarray(lens)
             )
             self._cache = self._insert_pages(self._cache, caches, jnp.asarray(ids))
+            if self.spec_k:
+                ids_d = np.full((B * mp,), self._null_page, np.int32)
+                for req, slot_idx in batch:
+                    ids_d[slot_idx * mp : (slot_idx + 1) * mp] = (
+                        self._slot_ids_row(req.req_id, self.draft_pages)
+                    )
+                if hasattr(self.draft_model, "prefill_batch"):
+                    _, dcaches = self._draft_prefill_many(
+                        self.draft_params, jnp.asarray(tokens), jnp.asarray(lens)
+                    )
+                    self._draft_cache = self._insert_pages(
+                        self._draft_cache, dcaches, jnp.asarray(ids_d)
+                    )
+                else:
+                    for req, slot_idx in batch:
+                        prompt = jnp.asarray(req.prompt[None], jnp.int32)
+                        _, dcache1 = self._draft_prefill(self.draft_params, prompt)
+                        self._draft_cache = self._insert_pages(
+                            self._draft_cache,
+                            dcache1,
+                            jnp.asarray(
+                                self._slot_ids_row(req.req_id, self.draft_pages)
+                            ),
+                        )
             if len(batch) > 1:
                 self.metrics["batched_prefills"] += 1
             logits_np = np.asarray(logits, np.float32)
@@ -432,6 +675,15 @@ class ServeEngine:
                     self._cache = self._insert_pages(
                         self._cache, cache1, jnp.asarray(ids)
                     )
+                    if self.spec_k:
+                        _, dcache1 = self._draft_prefill(self.draft_params, prompt)
+                        self._draft_cache = self._insert_pages(
+                            self._draft_cache,
+                            dcache1,
+                            jnp.asarray(
+                                self._slot_ids_row(req.req_id, self.draft_pages)
+                            ),
+                        )
                 else:
                     self._cache = self._admit_cache(
                         self._cache, cache1, jnp.int32(slot_idx)
@@ -480,6 +732,8 @@ class ServeEngine:
         slot = self.slots[slot_idx]
         req = slot.req
         self.pages.free_sequence(req.req_id)  # ownership free → pages + store
+        if self.spec_k:
+            self.draft_pages.free_sequence(req.req_id)
         self._live_prompts.pop(req.req_id, None)
         now = time.perf_counter()
         self.completed[req.req_id] = {
@@ -492,6 +746,80 @@ class ServeEngine:
         slot.generated = []
         slot.first_token_at = None
         slot.pages = []
+
+    def _spec_decode_step(self, active, send_delta, finish_if_done):
+        """One speculative engine step over the active slots: draft k
+        proposals per slot, verify all of them in one target forward, emit
+        the accepted run (target argmaxes — bit-identical to plain greedy).
+
+        Per-slot depth ``k_eff`` clamps speculation to what the request can
+        still accept (remaining-1) and to the cache horizon (max_len-2-pos),
+        so both pools' extends stay inside the admission reservation.  A
+        k_eff of 0 degenerates to an exact single-token decode step."""
+        k = self.spec_k
+        B = len(self.slots)
+        prev = np.zeros((B,), np.int32)
+        last = np.zeros((B,), np.int32)
+        lens = np.ones((B,), np.int32)  # idle rows decode garbage at pos 0
+        k_eff = np.zeros((B,), np.int32)
+        for i in active:
+            s = self.slots[i]
+            g = len(s.generated)
+            remaining = s.req.max_new_tokens - g
+            k_eff[i] = max(0, min(k, remaining - 1, self.max_len - 2 - s.pos))
+            last[i] = s.generated[-1]
+            prev[i] = s.generated[-2] if g >= 2 else int(s.req.prompt[-1])
+            lens[i] = s.pos
+            # both pools must own every page a fully-accepted run writes
+            # BEFORE the step (extend within the reservation never fails)
+            if self.pages.extend(s.req.req_id, s.pos + int(k_eff[i]) + 1):
+                s.pages = self.pages.pages_of(s.req.req_id)
+            self.draft_pages.extend(s.req.req_id, s.pos + int(k_eff[i]))
+        self._apply_cow()
+        width = self._bt_width_spec(max(
+            self.pages.pages_needed(self.slots[i].pos + k + 1) for i in active
+        ))
+        bt = np.full((B, width), self._null_page, np.int32)
+        bt_d = np.full((B, width), self._null_page, np.int32)
+        for i in active:
+            s = self.slots[i]
+            m = min(len(s.pages), width)
+            bt[i, :m] = s.pages[:m]
+            dpages = self.draft_pages.pages_of(s.req.req_id)
+            md = min(len(dpages), width)
+            bt_d[i, :md] = dpages[:md]
+        self._ensure_cache()
+        self._draft_cache, drafts = self._spec_draft(
+            self.draft_params, self._draft_cache, jnp.asarray(bt_d),
+            jnp.asarray(prev), jnp.asarray(last), jnp.asarray(lens),
+            jnp.asarray(k_eff),
+        )
+        drafts_np = np.asarray(drafts, np.int32)  # (B, k)
+        ver = np.full((B, k + 1), -1, np.int32)
+        ver[:, 0] = last
+        for i in active:  # -1 beyond k_eff never matches an argmax
+            ver[i, 1 : 1 + k_eff[i]] = drafts_np[i, : k_eff[i]]
+        self._cache, out, acc = self._spec_verify(
+            self.params, self._cache, jnp.asarray(bt), jnp.asarray(ver),
+            jnp.asarray(lens), jnp.asarray(k_eff),
+        )
+        self.metrics["decode_steps"] += 1
+        self.metrics["spec_steps"] += 1
+        out_np = np.asarray(out, np.int32)
+        acc_np = np.asarray(acc, np.int32)
+        for i in active:
+            s = self.slots[i]
+            self.metrics["spec_slot_steps"] += 1
+            for t in out_np[i, : int(acc_np[i])]:
+                t = int(t)
+                s.generated.append(t)
+                s.pos += 1  # this token's KV scattered back by the verify
+                self.metrics["tokens"] += 1
+                self.metrics["spec_accepted_tokens"] += 1
+                send_delta(s.req.req_id, t, len(s.generated) - 1)
+                if t == self.eos_id:
+                    break  # accepted run truncates at eos; pages free below
+            finish_if_done(i)
 
     # -- main loop ----------------------------------------------------------
     def run(
@@ -705,9 +1033,12 @@ class ServeEngine:
                         f"request needs {self.pages.pages_needed(total)} "
                         f"pages; the pool has {self.pages.num_pages}",
                     )
-                if not self.pages.can_admit(total):
+                if not self.pages.can_admit(total) or (
+                    self.spec_k and not self.draft_pages.can_admit(total)
+                ):
                     # backpressure: head-of-line waits for pages (FIFO —
-                    # later requests must not starve an earlier one)
+                    # later requests must not starve an earlier one); under
+                    # speculation BOTH pools must cover the full generation
                     self.metrics["queued_admissions"] += 1
                     return ("wait", None, -1, "")
                 free = [
@@ -773,6 +1104,11 @@ class ServeEngine:
                             # not wake-up
                             self.metrics["idle_waits"] += 1
                             cond.wait(_WAIT_TICK)
+                    continue
+                if self.spec_k:
+                    # speculative multi-token step: draft proposes, target
+                    # verifies in one paged forward, accepted run streams out
+                    self._spec_decode_step(active, send_delta, finish_if_done)
                     continue
                 # batched decode step: every slot's last generated token is
                 # fed back at that slot's own position (idle slots decode
@@ -855,6 +1191,9 @@ class ServeEngine:
         """
         for seq in self.pages.live_sequences():
             self.pages.free_sequence(seq)
+        if self.spec_k:
+            for seq in self.draft_pages.live_sequences():
+                self.draft_pages.free_sequence(seq)
         self._live_prompts.clear()
         # Request-side scopes: persistent prompt bulks were consumed by
         # this engine's puller — always safe to reclaim.
@@ -871,3 +1210,5 @@ class ServeEngine:
                 lt.close()
         if self._owns_store:  # never close a store the caller handed in
             self.kv_store.close()
+        if self._draft_store is not None:  # always engine-owned
+            self._draft_store.close()

@@ -45,6 +45,20 @@ reserve_tokens=total)`` holds back the pages a sequence may grow into, so
 ``can_admit``/``pages_available`` answer "will this request ever OOM
 mid-decode?" at admission time — backpressure instead of a MemoryError
 halfway through a generation.
+
+Speculative decode and rollback
+-------------------------------
+Speculative decode (engine ``spec_k > 0``) extends a sequence by up to
+``k+1`` tokens per step *before* knowing how many the target model will
+accept.  The table never rolls back: ``extend`` is monotone, and rejection
+is expressed entirely on the device pool — pages past the accepted length
+are simply not scattered back, so their cells hold stale bytes that the
+next step overwrites before anything reads them.  Reservations make this
+safe: a k-token extend stays within the admission-time reservation because
+the engine clamps the per-step speculation depth to ``remaining - 1``
+tokens (``reserve_tokens`` already prices the full generation), so an
+admitted sequence's speculative extends can never fail — the
+admitted-⇒-extend-never-fails contract is unchanged by speculation.
 """
 from __future__ import annotations
 
@@ -61,6 +75,23 @@ from repro.core.ownership import (
     update,
 )
 from repro.core.store import Store
+
+
+def page_bytes_for(model, dtype, page_size: int) -> int:
+    """Host-side KV bytes one page of ``model``'s cache represents.
+
+    The PageTable cell size for a pool serving this model: per-token cache
+    footprint (from ``cache_specs``) times the page's token capacity.  The
+    engine prices its target pool with its own model here and — under
+    speculative decode — the *draft* pool with the draft model's (usually
+    much smaller) per-token cache, so the two pools' store residency each
+    reflect their real KV weight."""
+    import jax.numpy as jnp
+
+    from repro.dist.sharding import count_params
+
+    per_token = count_params(model.cache_specs(1, 1))
+    return page_size * per_token * jnp.dtype(dtype).itemsize
 
 
 @dataclass

@@ -81,6 +81,35 @@ class CountingModel:
         logits = jax.nn.one_hot(nxt.astype(jnp.int32), self.cfg.vocab)
         return logits, {"hist": hist}
 
+    def decode_multi(self, params, cache, tokens, index):
+        """K-token decode (speculative verify): ``tokens`` (B, K) land at
+        positions ``index .. index+K-1``; ``logits[:, t]`` predicts
+        position ``index+t+1`` from the prefix *through* token ``t``.
+        Integer-exact, so K == 1 is bit-identical to ``decode_step``."""
+        hist = cache["hist"]
+        K = tokens.shape[1]
+        outs = []
+        for t in range(K):  # static unroll: K is small (spec_k + 1)
+            tok = tokens[:, t].astype(jnp.float32)
+            hist = hist.at[:, :, index + t, 0].set(tok[None])
+            outs.append(self._next(hist, index + t))
+        logits = jax.nn.one_hot(jnp.stack(outs, 1).astype(jnp.int32), self.cfg.vocab)
+        return logits, {"hist": hist}
+
+    def verify_batch(self, params, cache, tokens, lens):
+        """Per-row multi-position decode: row ``b``'s K tokens sit at
+        positions ``lens[b] .. lens[b]+K-1`` of its own cache row (same
+        contract as ``DecoderLM.verify_batch``)."""
+
+        def one(cache_b, tok_b, len_b):
+            cb = jax.tree.map(lambda c: c[:, None], cache_b)
+            logits, nc = self.decode_multi(params, cb, tok_b[None], len_b)
+            return logits[0], jax.tree.map(lambda c: c[:, 0], nc)
+
+        return jax.vmap(one, in_axes=(1, 0, 0), out_axes=(0, 1))(
+            cache, tokens, lens
+        )
+
 
 def reference_decode(cfg, prompt, max_new: int, *, eos_id: int = -1,
                      max_len: int = 64, model=None) -> list[int]:

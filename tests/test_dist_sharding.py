@@ -81,6 +81,71 @@ class TestProfileResolution:
                 assert isinstance(spec, P)
 
 
+class TestShardConstraint:
+    def test_one_device_noop_warns_once(self):
+        """The 1-device drop is explicit: one warning per process, then
+        silent — and the value passes through untouched."""
+        import warnings
+
+        from repro.dist import sharding as sh
+
+        mesh = make_host_mesh()
+        x = np.ones((8, 4), np.float32)
+        old = sh._noop_constraint_warned
+        try:
+            sh._noop_constraint_warned = False
+            with warnings.catch_warnings(record=True) as w:
+                warnings.simplefilter("always")
+                y = sh.shard_constraint(x, ("batch", None), DEFAULT_RULES, mesh)
+                sh.shard_constraint(x, ("batch", None), DEFAULT_RULES, mesh)
+            assert y is x  # no-op returns the operand itself
+            msgs = [str(m.message) for m in w if "shard_constraint" in str(m.message)]
+            assert len(msgs) == 1  # warned exactly once
+            assert "no-op" in msgs[0]
+        finally:
+            sh._noop_constraint_warned = old
+
+    def test_multi_device_places_real_constraint(self):
+        """Dry-run under a forced 4-device mesh: the lowered HLO carries a
+        Sharding custom-call and the constrained output lands sharded over
+        the data axis (subprocess — the main process must keep 1 device)."""
+        import os
+        import subprocess
+        import sys
+        import textwrap
+
+        body = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.dist.sharding import DEFAULT_RULES, shard_constraint
+
+            mesh = jax.make_mesh((4, 1), ("data", "model"))
+
+            def f(x):
+                return shard_constraint(x, ("batch", None), DEFAULT_RULES, mesh)
+
+            x = jnp.zeros((8, 4), jnp.float32)
+            txt = jax.jit(f).lower(x).as_text()
+            assert "Sharding" in txt, txt  # constraint reached the HLO
+            out = jax.jit(f)(x)
+            shards = {s.device.id: s.index for s in out.addressable_shards}
+            assert len(shards) == 4  # one shard per device over batch
+            rows = sorted(idx[0].start or 0 for idx in shards.values())
+            assert rows == [0, 2, 4, 6], rows
+            print("OK")
+        """)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src"),
+             env.get("PYTHONPATH", "")]
+        )
+        r = subprocess.run([sys.executable, "-c", body], env=env,
+                           capture_output=True, text=True, timeout=300)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "OK" in r.stdout
+
+
 class TestCountParams:
     @pytest.mark.parametrize("name,lo,hi", [
         ("smollm-135m", 5e4, 5e6),

@@ -87,10 +87,10 @@ def paged_ref(q, k_pages, v_pages, block_tables, lens):
     return jnp.stack(rows)
 
 
-def paged_case(seed, B, P, n, ps, H, Hkv, D, dtype, *, lens=None):
+def paged_case(seed, B, P, n, ps, H, Hkv, D, dtype, *, lens=None, T=1):
     """Random pool + per-row unique block tables + mixed lengths."""
     ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-    q = rand(ks[0], (B, 1, H, D), dtype)
+    q = rand(ks[0], (B, T, H, D), dtype)
     k_pages = rand(ks[1], (P, ps, Hkv, D), dtype)
     v_pages = rand(ks[2], (P, ps, Hkv, D), dtype)
     rng = np.random.default_rng(seed)
@@ -157,6 +157,66 @@ def test_paged_attention_zero_length_row_is_finite(impl):
     lens = jnp.asarray([0, 5], jnp.int32)
     out = ops.paged_attention(q, kp, vp, bt, lens, impl=impl)
     assert np.all(np.isfinite(np.asarray(out, np.float32)))
+
+
+def paged_multi_ref(q, k_pages, v_pages, block_tables, lens):
+    """Dense multi-query oracle: query ``t`` attends keys ``< lens + t``
+    (speculative verify's per-position causal staircase)."""
+    T = q.shape[1]
+    cols = [
+        paged_ref(q[:, t : t + 1], k_pages, v_pages, block_tables,
+                  np.asarray(lens) + t)
+        for t in range(T)
+    ]
+    return jnp.concatenate(cols, axis=1)
+
+
+PAGED_MQ_SWEEP = [
+    # (B, pool_pages, n, page_size, H, Hkv, D, T, dtype)
+    (3, 24, 4, 8, 4, 2, 64, 2, jnp.float32),
+    (2, 16, 4, 8, 4, 1, 32, 4, jnp.float32),   # MQA, spec_k=3 verify width
+    (2, 24, 4, 8, 8, 2, 64, 4, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,P,n,ps,H,Hkv,D,T,dtype", PAGED_MQ_SWEEP)
+@pytest.mark.parametrize("impl", ["interpret", "jnp"])
+def test_paged_attention_multi_query_vs_ref(impl, B, P, n, ps, H, Hkv, D, T,
+                                            dtype):
+    """Speculative verify pass (T > 1): interpret-mode Pallas and the jnp
+    fallback both match the dense staircase oracle, including a row whose
+    last query exactly fills the block table."""
+    rng = np.random.default_rng(31)
+    lens = rng.integers(1, n * ps - T + 2, B).astype(np.int32)
+    lens[0] = n * ps - T + 1  # last query covers the final pool token
+    q, kp, vp, bt, lens = paged_case(
+        29, B, P, n, ps, H, Hkv, D, dtype, lens=lens, T=T
+    )
+    out = ops.paged_attention(q, kp, vp, bt, lens, impl=impl)
+    ref = paged_multi_ref(q, kp, vp, np.asarray(bt), np.asarray(lens))
+    assert out.shape == (B, T, H, D)
+    assert np.all(np.isfinite(np.asarray(out, np.float32)))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("impl", ["interpret", "jnp"])
+def test_paged_attention_multi_query_first_column_matches_single(impl):
+    """Column t=0 of a T-query verify equals the plain T=1 decode step:
+    stacking speculative queries cannot change the committed token."""
+    B, P, n, ps, H, Hkv, D, T = 2, 16, 4, 8, 4, 2, 64, 3
+    lens = np.asarray([ps + 3, 2 * ps], np.int32)
+    q, kp, vp, bt, lens = paged_case(
+        37, B, P, n, ps, H, Hkv, D, jnp.float32, lens=lens, T=T
+    )
+    multi = ops.paged_attention(q, kp, vp, bt, lens, impl=impl)
+    single = ops.paged_attention(q[:, :1], kp, vp, bt, lens, impl=impl)
+    np.testing.assert_allclose(
+        np.asarray(multi[:, :1], np.float32),
+        np.asarray(single, np.float32),
+        rtol=1e-5, atol=1e-5,
+    )
 
 
 def test_paged_attention_matches_contiguous_decode():

@@ -509,6 +509,116 @@ class TestPrefixSharingInvariants:
         store.close()
 
 
+    @SETTINGS
+    @given(
+        k=st.integers(1, 4),
+        accepts=st.lists(st.integers(1, 5), min_size=1, max_size=12),
+        share=st.booleans(),
+    )
+    def test_spec_overextend_rollback_never_leaks(self, k, accepts, share):
+        """Speculative decode extends a sequence up to k tokens past its
+        accepted length every step and 'rolls back' rejected drafts by
+        simply not advancing — the page list never shrinks, extends stay
+        inside the admission reservation (never raise), nothing leaks,
+        and teardown frees every page exactly once."""
+        pt, store = self._pt(num_pages=64, page_size=4)
+        prompt = 8
+        max_new = sum(min(a, k + 1) for a in accepts)
+        total = prompt + max_new
+        pt.allocate("seq", prompt, reserve_tokens=total)
+        if share:  # a prefix-sharing peer must not perturb any of this
+            pt.allocate("peer", prompt, reserve_tokens=prompt + 4,
+                        prefix_of="seq", prefix_tokens=prompt)
+        pos = prompt
+        for a in accepts:
+            remaining = total - pos
+            if remaining <= 0:
+                break
+            k_eff = max(0, min(k, remaining - 1))
+            before = list(pt.pages_of("seq"))
+            pt.extend("seq", pos + k_eff + 1)  # the speculative over-extend
+            after = pt.pages_of("seq")
+            assert after[: len(before)] == before  # never rolls pages back
+            pos += min(a, k_eff + 1)  # accepted prefix only; tail rejected
+            assert pt.pages_in_use() + pt.pages_free() == pt.num_pages
+        for sid in list(pt.live_sequences()):
+            pt.free_sequence(sid)
+        assert pt.pages_free() == pt.num_pages
+        assert pt.orphan_pages() == set()
+        assert sorted(pt._free) == list(range(pt.num_pages))
+        with pytest.raises(KeyError):
+            pt.free_sequence("seq")  # double-free is an error, not a leak
+        for p in range(pt.num_pages):
+            assert not store.exists(pt.page_key("seq", p))
+        store.close()
+
+
+class TestSpecAcceptanceInvariants:
+    """Greedy speculative acceptance (serve/engine.py): the verify math —
+    match the padded draft row against the target argmax row and accept
+    ``cumprod(match).sum() + 1`` — emits exactly the target-only greedy
+    stream for ANY draft, and every step accepts LCP + 1 tokens."""
+
+    @staticmethod
+    def _accept(drafts, outs, k, k_eff):
+        # mirror of _spec_verify_body: tokens row is [last, d_1..d_k_eff,
+        # -1 padding]; argmaxes are ≥ 0, so padding can never match
+        padded = list(drafts[:k_eff]) + [-1] * (k - k_eff)
+        match = np.cumprod([int(o == d) for o, d in zip(outs[:k], padded)])
+        return min(int(match.sum()) + 1, k_eff + 1)
+
+    @SETTINGS
+    @given(
+        drafts=st.lists(st.integers(0, 9), min_size=0, max_size=6),
+        outs=st.lists(st.integers(0, 9), min_size=7, max_size=7),
+        k=st.integers(1, 6),
+    )
+    def test_accepted_length_is_lcp_plus_one(self, drafts, outs, k):
+        k_eff = min(len(drafts), k)
+        acc = self._accept(drafts, outs, k, k_eff)
+        lcp = 0
+        while lcp < k_eff and outs[lcp] == drafts[lcp]:
+            lcp += 1
+        assert acc == lcp + 1
+        assert 1 <= acc <= k_eff + 1
+
+    @SETTINGS
+    @given(
+        target=st.lists(st.integers(0, 9), min_size=1, max_size=24),
+        draft=st.lists(st.integers(0, 9), min_size=1, max_size=24),
+        garbage=st.lists(st.integers(0, 9), min_size=1, max_size=8),
+        k=st.integers(1, 4),
+    )
+    def test_spec_stream_equals_target_greedy(self, target, draft, garbage, k):
+        """Run the engine's step loop shape over arbitrary (draft, target)
+        disagreement patterns: whatever the draft proposes — and whatever
+        garbage the target row carries *past* the first mismatch — the
+        emitted stream is bit-identical to target-only greedy decode."""
+
+        def draft_at(i):
+            return draft[i % len(draft)]
+
+        emitted, pos, per_step = [], 0, []
+        while pos < len(target):
+            k_eff = min(k, len(target) - pos - 1)
+            ds = [draft_at(pos + j) for j in range(k_eff)]
+            outs, poisoned = [], False
+            for j in range(k_eff + 1):
+                # target argmaxes are trustworthy only while the verified
+                # prefix matched; after the first mismatch the row is junk
+                outs.append(garbage[(pos + j) % len(garbage)] if poisoned
+                            else target[pos + j])
+                if j < k_eff and outs[j] != ds[j]:
+                    poisoned = True
+            acc = self._accept(ds, outs, k, k_eff)
+            emitted.extend(outs[:acc])
+            per_step.append(acc)
+            pos += acc
+        assert emitted == target  # bit-identical to target-only greedy
+        assert sum(per_step) == len(target)
+        assert all(1 <= a <= k + 1 for a in per_step)
+
+
 class TestShardingRules:
     @SETTINGS
     @given(

@@ -1,0 +1,258 @@
+"""Speculative decode over owned KV pages (engine ``spec_k > 0``).
+
+The contract under test: greedy speculative decode is **bit-identical to
+target-only greedy decode by construction** — the emitted tokens are always
+the target model's argmaxes; the draft only decides how many of them one
+step yields.  CountingModel makes the comparison exact (integer sums in
+f32), so every test here asserts token-for-token equality against
+``reference_decode``, including with a draft built to disagree on purpose.
+
+Paging: speculation runs TWO PageTables in lockstep (target + draft pool).
+Rejected draft tokens never roll the tables back — pages past the accepted
+length simply don't scatter to the device pool — so both pools must still
+drain to zero after every run, and admission must backpressure on
+whichever pool fills first.
+"""
+import numpy as np
+import pytest
+
+from _serve_toy import CountingModel, reference_decode
+from test_serve_engine import CFG, make_streams, send_request, serve
+from repro.serve.engine import Request, ServeEngine, serve_context
+
+
+class DisagreeingDraft(CountingModel):
+    """Adversarial draft: always proposes target+1 — never matches, so
+    every accepted run is exactly the single corrected token."""
+
+    def _next(self, hist, index):
+        return (super()._next(hist, index) + 1) % self.cfg.vocab
+
+
+def make_spec_engine(
+    *, slots=2, max_len=32, page_size=4, eos_id=-1, spec_k=3,
+    draft_cls=CountingModel, num_pages=None, draft_num_pages=None, **kw
+):
+    ctx = serve_context(CFG)
+    engine = ServeEngine(
+        ctx,
+        {},
+        slots=slots,
+        max_len=max_len,
+        page_size=page_size,
+        eos_id=eos_id,
+        model=CountingModel(CFG),
+        spec_k=spec_k,
+        draft_model=draft_cls(CFG),
+        **kw,
+    )
+    if num_pages is not None:
+        engine.pages.num_pages = num_pages
+        engine.pages._free = list(range(num_pages))
+    if draft_num_pages is not None:
+        engine.draft_pages.num_pages = draft_num_pages
+        engine.draft_pages._free = list(range(draft_num_pages))
+    return engine
+
+
+def make_requests(n, *, seed=0, prompt_len=5, max_new=10):
+    rng = np.random.default_rng(seed)
+    return {
+        f"r{i}": (rng.integers(1, CFG.vocab, prompt_len).astype(np.int32),
+                  max_new)
+        for i in range(n)
+    }
+
+
+def assert_reference(completed, reqs, *, eos_id=-1, max_len=32):
+    for rid, (prompt, max_new) in reqs.items():
+        ref = reference_decode(CFG, prompt, max_new, eos_id=eos_id,
+                               max_len=max_len)
+        assert completed[rid]["tokens"] == ref, rid
+
+
+class TestSpecBitIdentity:
+    def test_self_draft_bit_identical(self):
+        """Draft == target: near-full acceptance, same exact tokens."""
+        engine = make_spec_engine()
+        reqs = make_requests(4, max_new=12)
+        completed, _ = serve(engine, reqs)
+        assert_reference(completed, reqs)
+        m = engine.metrics
+        assert m["spec_steps"] == m["decode_steps"] > 0
+        # a perfect draft accepts k+1 tokens on almost every slot-step
+        assert m["spec_accepted_tokens"] / m["spec_slot_steps"] > 2.0
+        engine.close()
+
+    def test_adversarial_draft_bit_identical(self):
+        """A draft that ALWAYS disagrees still yields identical output —
+        just one (corrected) token per slot-step, like plain decode."""
+        engine = make_spec_engine(draft_cls=DisagreeingDraft)
+        reqs = make_requests(4, seed=1, max_new=9)
+        completed, _ = serve(engine, reqs)
+        assert_reference(completed, reqs)
+        m = engine.metrics
+        assert m["spec_accepted_tokens"] == m["spec_slot_steps"]
+        engine.close()
+
+    def test_eos_mid_accepted_run(self):
+        """An eos inside an accepted multi-token run truncates the stream
+        at the eos (inclusive), exactly where the reference stops."""
+        prompt = np.arange(1, 6, dtype=np.int32)
+        ref = reference_decode(CFG, prompt, 16, eos_id=-1, max_len=32)
+        eos = ref[len(ref) // 2]  # a token the generation provably emits
+        engine = make_spec_engine(eos_id=eos)
+        reqs = {"r0": (prompt, 16)}
+        completed, _ = serve(engine, reqs)
+        want = reference_decode(CFG, prompt, 16, eos_id=eos, max_len=32)
+        assert completed["r0"]["tokens"] == want
+        assert completed["r0"]["tokens"][-1] == eos
+        engine.close()
+
+    def test_max_len_boundary(self):
+        """Requests that run into the max_len horizon clamp speculation
+        (k_eff -> 0 near the edge) and stop exactly where plain decode
+        stops."""
+        engine = make_spec_engine(max_len=16)
+        prompt = np.arange(1, 9, dtype=np.int32)  # 8 tokens, 16-cap
+        reqs = {"r0": (prompt, 32)}
+        completed, _ = serve(engine, reqs)
+        ref = reference_decode(CFG, prompt, 32, eos_id=-1, max_len=16)
+        assert completed["r0"]["tokens"] == ref
+        engine.close()
+
+    def test_single_token_request(self):
+        """max_new=1 finishes at admission: no spec step runs at all."""
+        engine = make_spec_engine()
+        reqs = make_requests(2, seed=2, max_new=1)
+        completed, _ = serve(engine, reqs)
+        assert_reference(completed, reqs)
+        assert engine.metrics["spec_steps"] == 0
+        engine.close()
+
+    def test_delta_stream_matches_plain(self):
+        """Per-token deltas arrive for every accepted token with contiguous
+        indices — a client can't tell speculation from plain decode."""
+        engine = make_spec_engine()
+        reqs = make_requests(2, seed=3, max_new=8)
+        completed, streams = serve(engine, reqs, with_responses=True)
+        engine.close()
+        streams["resp_producer"].flush_topic("responses")
+        seen = {rid: [] for rid in reqs}
+        while True:
+            try:
+                proxy, meta = streams["resp_consumer"].next_with_metadata(
+                    timeout=0.5
+                )
+            except (StopIteration, TimeoutError):
+                break
+            if meta.get("kind") == "delta":
+                assert meta["index"] == len(seen[meta["req_id"]])
+                seen[meta["req_id"]].append(meta["token"])
+        for rid in reqs:
+            assert seen[rid] == completed[rid]["tokens"]
+
+
+class TestSpecConstruction:
+    def test_spec_requires_draft_model(self):
+        ctx = serve_context(CFG)
+        with pytest.raises(ValueError, match="draft_model"):
+            ServeEngine(ctx, {}, model=CountingModel(CFG), spec_k=2)
+
+    def test_spec_requires_paged_layout(self):
+        ctx = serve_context(CFG)
+        with pytest.raises(ValueError, match="paged"):
+            ServeEngine(
+                ctx, {}, model=CountingModel(CFG), max_len=30, page_size=4,
+                spec_k=2, draft_model=CountingModel(CFG),
+            )
+
+    def test_spec_k0_has_no_draft_pool(self):
+        ctx = serve_context(CFG)
+        engine = ServeEngine(ctx, {}, model=CountingModel(CFG))
+        assert engine.draft_pages is None
+        engine.close()
+
+
+class TestSpecPaging:
+    def test_both_pools_drain(self):
+        """Rejected-draft rollback never leaks: both PageTables return to
+        zero pages in use after the run (and the stores empty with them)."""
+        engine = make_spec_engine(draft_cls=DisagreeingDraft)
+        reqs = make_requests(6, seed=4, max_new=11)
+        completed, _ = serve(engine, reqs)
+        assert sorted(completed) == sorted(reqs)
+        assert engine.pages.pages_in_use() == 0
+        assert engine.draft_pages.pages_in_use() == 0
+        engine.close()
+
+    def test_draft_pool_backpressure(self):
+        """A draft pool too small for every slot stalls admission (FIFO)
+        instead of failing an extend mid-generation."""
+        engine = make_spec_engine(slots=2, draft_num_pages=4)  # 1 slot's worth
+        reqs = make_requests(3, seed=5, prompt_len=5, max_new=10)
+        completed, _ = serve(engine, reqs)
+        assert_reference(completed, reqs)
+        assert engine.metrics["queued_admissions"] > 0
+        assert engine.draft_pages.pages_in_use() == 0
+        engine.close()
+
+    def test_spec_with_prefix_sharing(self):
+        """Shared target-pool prefixes (and their COW) compose with
+        speculation; the draft pool never shares."""
+        engine = make_spec_engine(slots=4)
+        common = np.arange(1, 9, dtype=np.int32)  # two full shared pages
+        reqs = {
+            f"r{i}": (np.concatenate([common, [10 + i]]).astype(np.int32), 8)
+            for i in range(4)
+        }
+        completed, _ = serve(engine, reqs)
+        assert_reference(completed, reqs)
+        assert engine.metrics["prefix_shared_pages"] > 0
+        assert engine.pages.pages_in_use() == 0
+        assert engine.draft_pages.pages_in_use() == 0
+        engine.close()
+
+
+class TestVerifyBatchContract:
+    def test_decode_multi_k1_matches_decode_step(self):
+        """K == 1 multi-token decode is bit-identical to decode_step."""
+        import jax.numpy as jnp
+
+        model = CountingModel(CFG)
+        prompt = jnp.asarray(np.arange(1, 6, dtype=np.int32)[None])
+        _, cache = model.prefill({}, prompt, 16)
+        tok = jnp.asarray([[7]], jnp.int32)
+        l1, c1 = model.decode_step({}, cache, tok, jnp.int32(5))
+        l2, c2 = model.decode_multi({}, cache, tok, jnp.int32(5))
+        assert np.array_equal(np.asarray(l1), np.asarray(l2[:, 0]))
+        assert np.array_equal(
+            np.asarray(c1["hist"]), np.asarray(c2["hist"])
+        )
+
+    def test_verify_batch_per_row_positions(self):
+        """Rows verify at their OWN lengths: each row's logits equal the
+        same tokens replayed through sequential decode_steps."""
+        import jax.numpy as jnp
+
+        model = CountingModel(CFG)
+        prompts = np.asarray([[1, 2, 3, 0], [4, 5, 6, 7]], np.int32)
+        lens = np.asarray([3, 4], np.int32)
+        _, cache = model.prefill_batch(
+            {}, jnp.asarray(prompts), jnp.asarray(lens), 16
+        )
+        toks = np.asarray([[9, 8, 7], [6, 5, 4]], np.int32)
+        logits, _ = model.verify_batch(
+            {}, cache, jnp.asarray(toks), jnp.asarray(lens)
+        )
+        for b in range(2):
+            row_cache = {"hist": np.asarray(cache["hist"])[:, b : b + 1]}
+            c = {"hist": jnp.asarray(row_cache["hist"])}
+            for t in range(3):
+                lt, c = model.decode_step(
+                    {}, c, jnp.asarray([[toks[b, t]]], jnp.int32),
+                    jnp.int32(int(lens[b]) + t),
+                )
+                assert np.array_equal(
+                    np.asarray(lt[0]), np.asarray(logits[b, t])
+                ), (b, t)

@@ -181,6 +181,93 @@ class TestConnectorViews:
 
 
 # ---------------------------------------------------------------------------
+# Shm attach cache (open/attach amortization)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(not os.path.isdir("/dev/shm"), reason="needs /dev/shm")
+class TestShmAttachCache:
+    """``get``/``exists`` amortize shm_open+mmap across calls: one cached
+    read-only attachment per segment *generation* (the /dev/shm inode),
+    invalidated on local evict/replace and on cross-process recreate."""
+
+    def _count_attaches(self, monkeypatch):
+        import multiprocessing.shared_memory as shm_mod
+
+        calls = []
+        real = shm_mod.SharedMemory
+
+        class Counting(real):
+            def __init__(self, *a, **kw):
+                if not kw.get("create", False):
+                    calls.append(kw.get("name", a[0] if a else None))
+                super().__init__(*a, **kw)
+
+        monkeypatch.setattr(shm_mod, "SharedMemory", Counting)
+        return calls
+
+    def test_polling_reads_attach_once(self, monkeypatch):
+        calls = self._count_attaches(monkeypatch)
+        c = SharedMemoryConnector()
+        try:
+            c.put("k", b"payload")
+            base = len(calls)
+            for _ in range(10):
+                assert c.exists("k")
+                assert c.get("k") == b"payload"
+            assert len(calls) == base + 1  # 20 reads, one attach
+            c.evict("k")
+        finally:
+            c.close()
+
+    def test_evict_drops_cached_attachment(self):
+        c = SharedMemoryConnector()
+        try:
+            c.put("k", b"v")
+            assert c.get("k") == b"v"
+            assert "k" in c._attached
+            c.evict("k")
+            assert "k" not in c._attached
+            assert c.get("k") is None
+            assert not c.exists("k")
+        finally:
+            c.close()
+
+    def test_cross_process_recreate_detected_by_inode(self):
+        # a second connector on the same namespace stands in for another
+        # process: its evict+recreate changes the /dev/shm inode, which the
+        # first connector's stat check must treat as a new generation
+        c = SharedMemoryConnector()
+        peer = SharedMemoryConnector(c.namespace)
+        try:
+            c.put("k", b"old")
+            assert c.get("k") == b"old"  # fills the attach cache
+            peer.evict("k")
+            peer.put("k", b"new!")
+            assert c.get("k") == b"new!"  # stale mapping not served
+            assert c.exists("k")
+        finally:
+            c.evict("k")
+            for x in (c, peer):
+                x.close()
+
+    def test_in_place_overwrite_visible_through_cache(self):
+        # same-size overwrite reuses the segment (same inode): the cached
+        # mapping aliases the shared pages, so new bytes show through it
+        c = SharedMemoryConnector()
+        peer = SharedMemoryConnector(c.namespace)
+        try:
+            c.put("k", b"x" * 64)
+            assert c.get("k") == b"x" * 64
+            peer.put("k", b"y" * 8)  # fits: rewritten in place
+            assert c.get("k") == b"y" * 8
+        finally:
+            c.evict("k")
+            for x in (c, peer):
+                x.close()
+
+
+# ---------------------------------------------------------------------------
 # Resolve cache
 # ---------------------------------------------------------------------------
 
