@@ -14,6 +14,7 @@ paper places it around 10 kB (connector-dependent).
 """
 from __future__ import annotations
 
+import gc
 import pickle
 import time
 
@@ -42,16 +43,40 @@ def _best(fn, reps: int, trials: int = 3) -> float:
 
 
 def measure_rows(quick: bool = False) -> list[dict]:
-    """One measurement pass: a row of timings per object size."""
+    """One measurement pass: a row of timings per object size.
+
+    Collector pauses land inside individual timing loops and widen the
+    ratio dispersion (the gated quantity) far more than they shift its
+    centre, so the whole pass runs with GC off; nothing here allocates
+    cycles, so refcounting still frees the payload churn promptly.
+    """
     sizes = QUICK_SIZES if quick else SIZES
+    rows: list[dict] = []
+    gc_was_enabled = gc.isenabled()
+    gc.collect()
+    gc.disable()
+    try:
+        rows = _measure_rows_inner(sizes, quick)
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    return rows
+
+
+def _measure_rows_inner(sizes, quick: bool) -> list[dict]:
     rows: list[dict] = []
     with Store("overhead") as store:
         for size in sizes:
-            # sub-100-µs round trips need more reps for a stable ratio; at
-            # large sizes quick mode keeps the full rep count (still fast)
-            # so its ratios are comparable to the committed full-run baseline
-            base = QUICK_REPS if quick else REPS
-            reps = base * 10 if size <= 100_000 else REPS
+            # sub-100-µs round trips need more reps for a stable ratio — and
+            # quick mode needs *more* of them than the full run, not fewer:
+            # it is a single cold-process pass gated against the warmed
+            # median baseline, so its small-size loops carry the dispersion
+            # budget.  At large sizes quick mode keeps the full rep count
+            # (still fast) so its ratios stay comparable to the baseline.
+            if size <= 100_000:
+                reps = 300 if quick else REPS * 10
+            else:
+                reps = REPS
             obj = payload(size)
             for _ in range(WARMUP):
                 _ = pickle.loads(pickle.dumps(obj))
@@ -113,6 +138,89 @@ def measure_rows(quick: bool = False) -> list[dict]:
     return rows
 
 
+def measure_metrics(quick: bool = False) -> dict:
+    """PR 9 tier/network metrics (the size/ratio rows stay untouched).
+
+    - ``multi_route_overhead_ratio``: direct InMemory put+get time over the
+      same round trip through a two-tier ``MultiConnector`` (~1 kB payload,
+      hot-tier route).  Gated higher-is-better: 1.0 means routing is free;
+      a collapse means the policy/route-map fast path regressed.
+    - ``info_net_roundtrip_us``: 1 kB put+get against an in-process
+      ``StoreServer`` over real TCP.  Absolute wall time on a shared box —
+      informational, never gated.
+    """
+    from repro.core.connectors import InMemoryConnector, new_key
+    from repro.core.connectors_net import StoreServer, StoreServerConnector
+    from repro.core.multi import MultiConnector, Tier
+
+    reps = 200 if quick else 1000
+    blob = bytes(payload(1_000))
+
+    direct = InMemoryConnector(new_key())
+
+    def d_roundtrip():
+        direct.put("k", blob)
+        _ = direct.get("k")
+
+    multi = MultiConnector([
+        Tier("hot", InMemoryConnector(new_key()), max_bytes=100_000),
+        Tier("cold", InMemoryConnector(new_key())),
+    ])
+
+    def m_roundtrip():
+        multi.put("k", blob)
+        _ = multi.get("k")
+
+    for _ in range(WARMUP):
+        d_roundtrip()
+        m_roundtrip()
+    # Interleave the direct/multi trials: the gated value is their *ratio*,
+    # and on a CPU-share-throttled box a single scheduler burst can cover
+    # three consecutive trials of one side (the loops are ~ms-scale),
+    # skewing the ratio while both absolute times stay plausible.  With
+    # alternating trials a burst has to hit every trial of one side and
+    # none of the other to bias the min/min ratio.
+    t_direct = float("inf")
+    t_multi = float("inf")
+    gc_was_enabled = gc.isenabled()
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(5):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                d_roundtrip()
+            t_direct = min(t_direct, (time.perf_counter() - t0) / reps)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                m_roundtrip()
+            t_multi = min(t_multi, (time.perf_counter() - t0) / reps)
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    direct.close()
+    multi.close()
+
+    server = StoreServer(backing=InMemoryConnector(new_key()))
+    server.start()
+    net = StoreServerConnector(server.address, namespace="bench")
+
+    def n_roundtrip():
+        net.put("k", blob)
+        _ = net.get("k")
+
+    for _ in range(WARMUP):
+        n_roundtrip()
+    t_net = _best(n_roundtrip, reps // 4 or 1)
+    net.close()
+    server.stop()
+
+    return {
+        "multi_route_overhead_ratio": t_direct / t_multi,
+        "info_net_roundtrip_us": t_net * 1e6,
+    }
+
+
 def main(quick: bool = False, runs: int = 1) -> BenchResult:
     """Measure (``runs`` passes, element-wise median) and validate claims.
 
@@ -122,6 +230,7 @@ def main(quick: bool = False, runs: int = 1) -> BenchResult:
     import statistics
 
     all_rows = [measure_rows(quick) for _ in range(runs)]
+    all_metrics = [measure_metrics(quick) for _ in range(runs)]
     rows = []
     for idx in range(len(all_rows[0])):
         merged = {
@@ -132,6 +241,9 @@ def main(quick: bool = False, runs: int = 1) -> BenchResult:
         rows.append(merged)
     res = BenchResult("proxy_overhead")
     res.rows = rows
+    res.metrics = {
+        k: statistics.median(m[k] for m in all_metrics) for k in all_metrics[0]
+    }
     sizes = tuple(r["bytes"] for r in rows)
     crossover = None
     for r in rows:
@@ -157,6 +269,12 @@ def main(quick: bool = False, runs: int = 1) -> BenchResult:
         f"resolve cache: warm re-resolve {big['warm_speedup']:.1f}× faster "
         f"than the zero-copy cold resolve at {big['bytes'] // 1_000_000} MB "
         f"(target ≥{warm_target:.1f}×)",
+    )
+    route_ratio = res.metrics["multi_route_overhead_ratio"]
+    res.claim(
+        route_ratio >= 0.25,
+        f"tier routing: MultiConnector round trip within 4× of a direct "
+        f"InMemory round trip at 1 kB (ratio {route_ratio:.2f}, target ≥0.25)",
     )
     return res
 
@@ -184,6 +302,7 @@ def write_bench_json(res: BenchResult, *, quick: bool = False,
                 "runs": runs,  # rows are element-wise medians across runs
                 "unix_time": _time.time(),
                 "rows": res.rows,
+                "metrics": getattr(res, "metrics", {}),
                 "claims": res.claims,
                 "ok": res.ok,
             },

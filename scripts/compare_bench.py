@@ -7,7 +7,9 @@ Two modes:
   (``BENCH_proxy.quick.json``) against the committed full-run baseline
   (``BENCH_proxy.json``) at every object size both runs cover.  A fresh
   proxy-vs-value ratio more than ``--tolerance`` (default 25%) below the
-  baseline ratio at any size fails the check.
+  baseline ratio at any size fails the check.  The proxy bench also
+  carries a metric dict (tier-routing overhead, network round trip),
+  compared with the same rules as the metric modes below.
 - ``--stream``: compares ``BENCH_stream.quick.json`` against the committed
   ``BENCH_stream.json`` metric-by-metric.  Gated metrics are same-run
   ratios (load-immune on a CPU-share-throttled box) plus the wake latency;
@@ -67,6 +69,12 @@ def compare_proxy(args) -> int:
         print(f"[compare_bench] {size:>9} B: fresh ratio {fresh[size]:6.2f} "
               f"vs baseline {base[size]:6.2f} "
               f"(capped floor {floor:6.2f}) {status}")
+    # PR 9: the proxy bench also carries a metric dict (tier routing +
+    # network round trip) — gated with the same rules as --stream/--serve
+    f_metrics, b_metrics = load_metrics(args.fresh), load_metrics(args.baseline)
+    if f_metrics or b_metrics or args.require:
+        rc = _compare_metric_dicts(f_metrics, b_metrics, args, "proxy/tier")
+        failed |= rc != 0
     if failed:
         print(f"[compare_bench] FAIL: hot path regressed >"
               f"{args.tolerance:.0%} vs committed BENCH_proxy.json")
@@ -75,8 +83,7 @@ def compare_proxy(args) -> int:
     return 0
 
 
-def compare_metrics(args, what: str) -> int:
-    fresh, base = load_metrics(args.fresh), load_metrics(args.baseline)
+def _compare_metric_dicts(fresh, base, args, what: str) -> int:
     missing = [n for n in args.require if n not in fresh or n not in base]
     if missing:
         for n in missing:
@@ -117,6 +124,12 @@ def compare_metrics(args, what: str) -> int:
     return 0
 
 
+def compare_metrics(args, what: str) -> int:
+    return _compare_metric_dicts(
+        load_metrics(args.fresh), load_metrics(args.baseline), args, what
+    )
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("fresh", nargs="?", default=None)
@@ -128,10 +141,11 @@ def main(argv: list[str] | None = None) -> int:
                     help="compare BENCH_serve metric dictionaries (serving "
                          "gate: ttft/continuous-batching/slot-scaling)")
     ap.add_argument("--require", action="append", default=[], metavar="NAME",
-                    help="metric-dict modes: fail unless NAME is present in "
-                         "BOTH fresh and baseline metric sets (repeatable) — "
-                         "pins a gated metric so it cannot silently vanish "
-                         "from the bench")
+                    help="fail unless NAME is present in BOTH fresh and "
+                         "baseline metric sets (repeatable; all modes — the "
+                         "proxy bench carries a metric dict too) — pins a "
+                         "gated metric so it cannot silently vanish from "
+                         "the bench")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fractional regression vs baseline "
                          "(quick runs use few reps; leave headroom for noise)")

@@ -1,0 +1,11 @@
+#!/usr/bin/env python
+"""Thin wrapper: ``python scripts/store_server.py`` == ``python -m repro.launch.store_server``."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.store_server import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -106,6 +106,8 @@ HOT_PATH_SUFFIXES = (
     "core/futures.py",
     "core/store.py",
     "core/connectors.py",
+    "core/connectors_net.py",
+    "core/multi.py",
     "core/executor.py",
     "core/proxy.py",
     "serve/engine.py",

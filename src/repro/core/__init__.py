@@ -11,6 +11,7 @@ from repro.core.connectors import (
     FileConnector,
     InMemoryConnector,
     SharedMemoryConnector,
+    channel_identity,
     get_view,
     put_batch_payloads,
     put_payload,
@@ -20,6 +21,7 @@ from repro.core.connectors import (
     wait_for_key,
     wait_for_view,
 )
+from repro.core.connectors_net import StoreServer, StoreServerConnector
 from repro.core.executor import ProxyPolicy, StoreExecutor
 from repro.core.futures import ProxyFuture, wait_all
 from repro.core.lifetimes import (
@@ -28,6 +30,7 @@ from repro.core.lifetimes import (
     Lifetime,
     StaticLifetime,
 )
+from repro.core.multi import MultiConnector, Tier
 from repro.core.ownership import (
     OwnedProxy,
     OwnershipError,
@@ -70,6 +73,7 @@ __all__ = [
     "InMemoryConnector",
     "LeaseLifetime",
     "Lifetime",
+    "MultiConnector",
     "OwnedProxy",
     "OwnershipError",
     "Proxy",
@@ -85,9 +89,13 @@ __all__ = [
     "StoreExecutor",
     "StoreFactory",
     "StoreMetrics",
+    "StoreServer",
+    "StoreServerConnector",
     "StreamConsumer",
     "StreamProducer",
+    "Tier",
     "borrow",
+    "channel_identity",
     "clone",
     "default_deserializer",
     "default_serializer",

@@ -27,7 +27,33 @@ via :func:`put_payload` / :func:`put_batch_payloads` / :func:`get_view` /
   existence waits that are *notified* instead of polled: condition-variable
   wake-ups in memory, directory mtime/size watches on files, segment
   watches on shared memory.  Connectors without them fall back to the
-  exponential-backoff existence poll.
+  exponential-backoff existence poll (one shared deadline and one backoff
+  sweep across every key — the sweep never overshoots ``timeout`` by more
+  than the last clamped sleep).
+
+Tier routing (:mod:`repro.core.multi`): a :class:`~repro.core.multi.
+MultiConnector` composes a priority-ordered stack of these channels into
+one tiered store.  Each put is routed by policy — explicit per-key pins,
+``#tag`` segments carried in the key, then size thresholds
+(``min_bytes``/``max_bytes`` per tier; tiny → in-memory, medium → shm,
+bulk → file/network) — and the winning tier is recorded in a per-process
+route map so a resolve goes straight to the right backend.  A miss falls
+through the stack in priority order (the cross-process path, and the hook
+memory-pressure demotion rides: ``demote`` moves a payload to a colder
+tier and resolution keeps working transparently).
+
+Wire protocol (:mod:`repro.core.connectors_net`): the TCP store server
+speaks length-prefixed frames —
+
+    ``u32 frame_len | u8 op/status | body``
+
+— where a put body carries the key, the framed-part lengths, and then the
+raw PSF1 parts themselves, written with scatter-gather ``sendmsg`` (the
+out-of-band pickle-5 buffers are never joined in user space) and read
+with ``recv_into`` a single preallocated buffer (payload slices are
+zero-copy views of it).  Waits are server-side pushes: the client blocks
+on the response while the server blocks in the backing channel's native
+notification wait, so no one polls the network.
 """
 from __future__ import annotations
 
@@ -71,6 +97,27 @@ def new_key() -> str:
         pool = [f"{prefix}{n:012x}" for n in itertools.islice(count, _KEY_BLOCK)]
         _KEY_STATE["pool"].extend(pool[:-1])
         return pool[-1]
+
+
+def channel_identity(connector) -> str:
+    """Stable identity of the mediated channel *behind* a connector.
+
+    Two connector instances attached to the same channel — two clients of
+    one TCP store server, two shm connectors sharing a namespace, a
+    pickled copy on the far side — must compare equal here: ProxySan keys
+    its lifecycle records by this string, so a server-backed channel is
+    one object across clients, not one per socket.  Connectors with a
+    composite or remote channel export ``channel_id`` explicitly; the
+    rest are identified by their storage handle (namespace, directory).
+    """
+    cid = getattr(connector, "channel_id", None)
+    if isinstance(cid, str) and cid:
+        return f"{type(connector).__name__}:{cid}"
+    for attr in ("namespace", "name", "directory", "prefix"):
+        v = getattr(connector, attr, None)
+        if isinstance(v, str) and v:
+            return f"{type(connector).__name__}:{v}"
+    return f"{type(connector).__name__}@{id(connector):x}"
 
 
 @runtime_checkable
@@ -186,11 +233,17 @@ def wait_for(
     deadline = None if timeout is None else time.monotonic() + timeout
     delay = poll_min
     # documented fallback for connectors without native waits: bounded
-    # exponential backoff, not the protocol path
+    # exponential backoff, not the protocol path.  Each sleep is clamped to
+    # the remaining budget so the wait can never overshoot the deadline by
+    # a whole backoff interval.
     while not connector.exists(key):  # proxylint: disable=connector-wait-protocol
-        if deadline is not None and time.monotonic() > deadline:
-            raise TimeoutError(f"key {key!r} not set within {timeout}s")
-        time.sleep(delay)  # proxylint: disable=no-sleep-poll
+        if deadline is None:
+            time.sleep(delay)  # proxylint: disable=no-sleep-poll
+        else:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(f"key {key!r} not set within {timeout}s")
+            time.sleep(min(delay, remaining))  # proxylint: disable=no-sleep-poll
         delay = min(delay * 2.0, poll_max)
 
 
@@ -206,6 +259,12 @@ def wait_for_any(
     One multi-key wait (a single condition sleep / directory watch covers
     every key), not N sequential single-key waits — the ``wait_all`` barrier
     over futures is built on this.
+
+    The duck-typed fallback shares ONE deadline and ONE backoff across the
+    whole key set: every iteration sweeps all keys, then sleeps once, with
+    the sleep clamped to the remaining budget.  Per-key sequential waits
+    would overshoot ``timeout`` by up to N×backoff and starve keys late in
+    the list — pinned by the timeout-semantics conformance test.
     """
     keys = list(keys)
     if not keys:
@@ -219,10 +278,17 @@ def wait_for_any(
         for k in keys:
             if connector.exists(k):
                 return k
-        if deadline is not None and time.monotonic() > deadline:
-            raise TimeoutError(f"none of {len(keys)} keys set within {timeout}s")
-        # documented fallback backoff (see wait_for above)
-        time.sleep(delay)  # proxylint: disable=no-sleep-poll
+        # documented fallback backoff (see wait_for above); one clamped
+        # sleep per whole-set sweep
+        if deadline is None:
+            time.sleep(delay)  # proxylint: disable=no-sleep-poll
+        else:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"none of {len(keys)} keys set within {timeout}s"
+                )
+            time.sleep(min(delay, remaining))  # proxylint: disable=no-sleep-poll
         delay = min(delay * 2.0, poll_max)
 
 
@@ -521,11 +587,18 @@ class FileConnector:
         )
 
     def wait_for_any(self, keys: Sequence[str], timeout: float | None = None) -> str:
-        paths = [(k, self._path(k)) for k in keys]
-
+        # One directory listing per wake, not one stat(2) per candidate:
+        # with wide key sets (futures wait_all barriers) the per-key
+        # os.path.exists probe was an O(N) stat storm on every directory
+        # event.  The listing is a snapshot of the same rename-published
+        # namespace, so membership is exactly the exists() answer.
         def ready():
-            for k, p in paths:
-                if os.path.exists(p):
+            try:
+                present = set(os.listdir(self.directory))
+            except FileNotFoundError:
+                return None
+            for k in keys:
+                if k in present:
                     return k
             return None
 

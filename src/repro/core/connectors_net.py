@@ -1,0 +1,530 @@
+"""TCP store server: the network leg of the mediated-channel protocol.
+
+The paper's connectors (Redis, Margo, UCX endpoints) resolve a proxy "to
+data regardless of location"; this module is that leg for this repo — a
+:class:`StoreServer` hosting any backing connector behind a socket, and a
+:class:`StoreServerConnector` client implementing the *full* optional-
+method table of :mod:`repro.core.connectors` (``put_parts``, ``put_batch``,
+``put_parts_new``, ``get_view``, ``wait_for``, ``wait_for_any``), so the
+lease service, the dispatching loader, and the serve request/response
+protocol run across processes (and, with a routable address, hosts)
+unchanged.
+
+Wire format — length-prefixed PSF1 frames::
+
+    request  := u32 frame_len | u8 op     | body
+    response := u32 frame_len | u8 status | body
+
+Put bodies carry ``key | u32 nparts | u64 len × n | raw parts``: the
+framed PSF1 parts (header, pickle, out-of-band pickle-5 buffers) are
+handed to ``sendmsg`` as a scatter-gather list and are never joined in
+user space.  Responses land in ONE ``recv_into`` buffer per frame; payload
+and key fields are zero-copy views of it.
+
+Waits are server-side pushes: a ``WAIT``/``WAIT_ANY`` request parks the
+connection's server thread in the *backing* connector's native
+notification wait (condition variables for the in-memory backing) and the
+response is pushed the moment the key lands — the client simply blocks on
+the socket, polling nothing.
+
+Concurrency model: the client keeps a small pool of connections; each
+round trip checks one out (dialing on demand), so a thread blocked in a
+wait never blocks a concurrent put — the serve engine's puller thread and
+admission loop share one connector safely.  Server side is one thread per
+connection; a parked wait occupies only its own connection's thread.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import struct
+import threading
+from contextlib import contextmanager
+from typing import Iterable, Sequence
+
+from repro.core.connectors import (
+    InMemoryConnector,
+    get_payload,
+    put_batch_payloads,
+    put_payload,
+    put_payload_new,
+)
+from repro.core.connectors import (
+    wait_for as _wait_for,
+    wait_for_any as _wait_for_any,
+)
+from repro.core.framing import parts_nbytes
+
+# -- ops / statuses ----------------------------------------------------------
+
+OP_PUT = 1
+OP_PUT_NEW = 2
+OP_PUT_BATCH = 3
+OP_GET = 4
+OP_EXISTS = 5
+OP_EVICT = 6
+OP_WAIT = 7
+OP_WAIT_ANY = 8
+OP_KEYS = 9
+OP_PING = 10
+
+ST_OK = 0
+ST_MISSING = 1
+ST_EXISTS = 2
+ST_TIMEOUT = 3
+ST_ERR = 4
+
+_LEN = struct.Struct("<I")
+_U8 = struct.Struct("<B")
+_U16 = struct.Struct("<H")
+_U32 = struct.Struct("<I")
+_U64 = struct.Struct("<Q")
+_F64 = struct.Struct("<d")
+
+# sendmsg is capped at IOV_MAX buffers per call; stay far below it
+_IOV_CHUNK = 512
+# slack added to the socket read timeout over a wait's own deadline: the
+# server owns timeout arbitration, the socket guard only catches a dead
+# server
+_WAIT_SLACK_S = 30.0
+
+
+# -- low-level frame I/O -----------------------------------------------------
+
+
+def _sendmsg_all(sock: socket.socket, bufs: Sequence) -> None:
+    """Scatter-gather send of every buffer, handling partial sendmsg."""
+    views = []
+    for b in bufs:
+        mv = b if isinstance(b, memoryview) else memoryview(b)
+        if mv.ndim != 1 or mv.format != "B":
+            mv = mv.cast("B")
+        if mv.nbytes:
+            views.append(mv)
+    while views:
+        sent = sock.sendmsg(views[:_IOV_CHUNK])
+        i = 0
+        while i < len(views) and sent >= views[i].nbytes:
+            sent -= views[i].nbytes
+            i += 1
+        views = views[i:]
+        if sent and views:
+            views[0] = views[0][sent:]
+
+
+def _recv_exact(sock: socket.socket, n: int) -> memoryview:
+    """Read exactly ``n`` bytes into one fresh buffer (zero-copy slices of
+    the returned view are safe to retain: the buffer is never reused)."""
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        r = sock.recv_into(view[got:], n - got)
+        if r == 0:
+            raise ConnectionError("store-server peer closed mid-frame")
+        got += r
+    return view
+
+
+def send_frame(sock: socket.socket, code: int, body_parts: Sequence) -> None:
+    """One ``u32 len | u8 code | body`` frame, body as scatter-gather parts."""
+    body_len = parts_nbytes(body_parts)
+    head = _LEN.pack(1 + body_len) + _U8.pack(code)
+    _sendmsg_all(sock, [head, *body_parts])
+
+
+def recv_frame(sock: socket.socket) -> tuple[int, memoryview]:
+    """Read one frame; returns ``(code, body_view)``."""
+    (frame_len,) = _LEN.unpack(bytes(_recv_exact(sock, _LEN.size)))
+    frame = _recv_exact(sock, frame_len)
+    return frame[0], frame[1:]
+
+
+def _pack_key(key: str) -> bytes:
+    kb = key.encode()
+    return _U16.pack(len(kb)) + kb
+
+
+def _unpack_key(body: memoryview, off: int) -> tuple[str, int]:
+    (klen,) = _U16.unpack_from(body, off)
+    off += _U16.size
+    return bytes(body[off : off + klen]).decode(), off + klen
+
+
+def _unpack_parts(body: memoryview, off: int) -> tuple[list[memoryview], int]:
+    """Part lengths + raw bytes → zero-copy views of the receive buffer."""
+    (nparts,) = _U32.unpack_from(body, off)
+    off += _U32.size
+    lens = [
+        _U64.unpack_from(body, off + i * _U64.size)[0] for i in range(nparts)
+    ]
+    off += nparts * _U64.size
+    parts = []
+    for n in lens:
+        parts.append(body[off : off + n])
+        off += n
+    return parts, off
+
+
+def _pack_parts_meta(parts: Sequence) -> bytes:
+    return _U32.pack(len(parts)) + b"".join(
+        _U64.pack(p.nbytes if isinstance(p, memoryview) else len(p))
+        for p in parts
+    )
+
+
+# -- server ------------------------------------------------------------------
+
+
+class StoreServer:
+    """TCP front end over any backing connector (default: in-memory).
+
+    One accept thread, one thread per connection; every request on a
+    connection is handled in order, so a parked wait blocks only its own
+    connection (clients pool connections precisely for this).  Dispatch
+    errors are answered as ``ST_ERR`` frames, never by dropping the
+    connection — a misbehaving request can't wedge its peer.
+    """
+
+    def __init__(self, backing=None, host: str = "127.0.0.1", port: int = 0):
+        self.backing = backing if backing is not None else InMemoryConnector("srv")
+        self._listener = socket.create_server((host, port), backlog=64)
+        self.host, self.port = self._listener.getsockname()[:2]
+        self._stop = threading.Event()
+        self._conns: set[socket.socket] = set()
+        self._conns_lock = threading.Lock()
+        self._accept_thread: threading.Thread | None = None
+
+    # -- lifecycle --
+    def start(self) -> "StoreServer":
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="store-server-accept", daemon=True
+        )
+        self._accept_thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        self.start()
+        self._stop.wait()
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._conns_lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.close()
+            except OSError:
+                pass
+        self.backing.close()
+
+    @property
+    def address(self) -> str:
+        return f"{self.host}:{self.port}"
+
+    # -- loops --
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                return  # listener closed: shutting down
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._conns_lock:
+                self._conns.add(conn)
+            threading.Thread(
+                target=self._serve_conn, args=(conn,),
+                name="store-server-conn", daemon=True,
+            ).start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            while not self._stop.is_set():
+                try:
+                    op, body = recv_frame(conn)
+                except (ConnectionError, OSError):
+                    return  # client went away: normal teardown
+                try:
+                    status, out = self._dispatch(op, body)
+                except TimeoutError:
+                    status, out = ST_TIMEOUT, ()
+                except Exception as e:  # answered loudly, connection survives
+                    status, out = ST_ERR, (repr(e).encode(),)
+                try:
+                    send_frame(conn, status, out)
+                except (ConnectionError, OSError):
+                    return
+        finally:
+            with self._conns_lock:
+                self._conns.discard(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    # -- dispatch --
+    def _dispatch(self, op: int, body: memoryview) -> tuple[int, tuple]:
+        b = self.backing
+        if op == OP_PUT or op == OP_PUT_NEW:
+            key, off = _unpack_key(body, 0)
+            parts, _ = _unpack_parts(body, off)
+            if op == OP_PUT:
+                put_payload(b, key, parts)
+                return ST_OK, ()
+            if put_payload_new(b, key, parts) is None:
+                return ST_EXISTS, ()
+            return ST_OK, ()
+        if op == OP_PUT_BATCH:
+            (nitems,) = _U32.unpack_from(body, 0)
+            off = _U32.size
+            metas = []
+            for _ in range(nitems):
+                key, off = _unpack_key(body, off)
+                (nparts,) = _U32.unpack_from(body, off)
+                off += _U32.size
+                lens = [
+                    _U64.unpack_from(body, off + i * _U64.size)[0]
+                    for i in range(nparts)
+                ]
+                off += nparts * _U64.size
+                metas.append((key, lens))
+            items = []
+            for key, lens in metas:
+                parts = []
+                for n in lens:
+                    parts.append(body[off : off + n])
+                    off += n
+                items.append((key, parts))
+            put_batch_payloads(b, items)
+            return ST_OK, ()
+        if op == OP_GET:
+            key, _ = _unpack_key(body, 0)
+            payload = get_payload(b, key)
+            if payload is None:
+                return ST_MISSING, ()
+            if not isinstance(payload, (tuple, list)):
+                payload = (payload,)
+            return ST_OK, tuple(payload)
+        if op == OP_EXISTS:
+            key, _ = _unpack_key(body, 0)
+            return ST_OK, (_U8.pack(1 if b.exists(key) else 0),)
+        if op == OP_EVICT:
+            key, _ = _unpack_key(body, 0)
+            b.evict(key)
+            return ST_OK, ()
+        if op == OP_WAIT:
+            (t,) = _F64.unpack_from(body, 0)
+            key, _ = _unpack_key(body, _F64.size)
+            _wait_for(b, key, None if t < 0 else t)  # raises TimeoutError
+            return ST_OK, ()
+        if op == OP_WAIT_ANY:
+            (t,) = _F64.unpack_from(body, 0)
+            (nkeys,) = _U32.unpack_from(body, _F64.size)
+            off = _F64.size + _U32.size
+            keys = []
+            for _ in range(nkeys):
+                k, off = _unpack_key(body, off)
+                keys.append(k)
+            won = _wait_for_any(b, keys, None if t < 0 else t)
+            return ST_OK, (_pack_key(won),)
+        if op == OP_KEYS:
+            prefix, _ = _unpack_key(body, 0)
+            ks = getattr(b, "keys", lambda: ())()
+            hits = [k for k in ks if k.startswith(prefix)]
+            return ST_OK, (
+                _U32.pack(len(hits)),
+                b"".join(_pack_key(k) for k in hits),
+            )
+        if op == OP_PING:
+            info = f"{os.getpid()}:{type(self.backing).__name__}".encode()
+            return ST_OK, (info,)
+        raise ValueError(f"unknown store-server op {op}")
+
+
+# -- client ------------------------------------------------------------------
+
+
+class StoreServerConnector:
+    """Client connector for a :class:`StoreServer` channel.
+
+    Implements the full optional-method table, so every higher layer
+    (Store hot path, futures, streams, lease service, serve protocol)
+    treats a remote server exactly like a local channel.  Keys are
+    namespaced client-side (``<namespace>|<key>`` on the wire) so many
+    logical stores can share one server process.
+
+    Picklable: the reduced form carries only ``(address, namespace)`` —
+    the far side re-dials, which is exactly the paper's "factory carries
+    server address info" contract.
+    """
+
+    def __init__(
+        self,
+        address: str,
+        namespace: str = "d",
+        *,
+        connect_timeout: float = 5.0,
+        op_timeout: float = 60.0,
+    ):
+        host, _, port = address.rpartition(":")
+        self.address = address
+        self.host, self.port = host or "127.0.0.1", int(port)
+        self.namespace = namespace
+        # one channel across every client socket/process (ProxySan keying)
+        self.channel_id = f"tcp://{self.host}:{self.port}/{namespace}"
+        self.connect_timeout = connect_timeout
+        self.op_timeout = op_timeout
+        self._prefix = namespace + "|"
+        self._pool: list[socket.socket] = []
+        self._pool_lock = threading.Lock()
+
+    # -- connection pool --
+    def _dial(self) -> socket.socket:
+        sock = socket.create_connection(
+            (self.host, self.port), timeout=self.connect_timeout
+        )
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return sock
+
+    @contextmanager
+    def _conn(self):
+        with self._pool_lock:
+            sock = self._pool.pop() if self._pool else None
+        if sock is None:
+            sock = self._dial()
+        try:
+            yield sock
+        except BaseException:
+            # a failed round trip leaves the stream in an unknown state:
+            # drop the socket, never return it to the pool
+            try:
+                sock.close()
+            except OSError:
+                pass
+            raise
+        else:
+            with self._pool_lock:
+                self._pool.append(sock)
+
+    def _request(
+        self, op: int, body_parts: Sequence, *, timeout: float | None = "op"
+    ) -> tuple[int, memoryview]:
+        """One pooled round trip; returns ``(status, body)``.
+
+        ``timeout`` is the socket read guard: default is the flat op
+        budget; wait ops pass their own deadline (+slack) or ``None`` for
+        an unbounded wait.  Protocol-level statuses (MISSING/EXISTS/
+        TIMEOUT) are returns, not errors — the connection stays pooled.
+        """
+        with self._conn() as sock:
+            sock.settimeout(self.op_timeout if timeout == "op" else timeout)
+            send_frame(sock, op, body_parts)
+            status, body = recv_frame(sock)
+        if status == ST_ERR:
+            raise RuntimeError(
+                f"store server error: {bytes(body).decode(errors='replace')}"
+            )
+        return status, body
+
+    # -- required protocol --
+    def put(self, key: str, data: bytes) -> None:
+        self.put_parts(key, (data,))
+
+    def get(self, key: str) -> bytes | None:
+        view = self.get_view(key)
+        return None if view is None else bytes(view)
+
+    def exists(self, key: str) -> bool:
+        status, body = self._request(OP_EXISTS, (_pack_key(self._prefix + key),))
+        return status == ST_OK and body[0] == 1
+
+    def evict(self, key: str) -> None:
+        self._request(OP_EVICT, (_pack_key(self._prefix + key),))
+
+    def close(self) -> None:
+        # closes this client's sockets only; the server channel (and other
+        # clients) live on — same semantics as FileConnector.close()
+        with self._pool_lock:
+            pool, self._pool = self._pool, []
+        for sock in pool:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    # -- optional-method table --
+    def put_parts(self, key: str, parts: Sequence) -> int:
+        meta = _pack_key(self._prefix + key) + _pack_parts_meta(parts)
+        self._request(OP_PUT, (meta, *parts))
+        return parts_nbytes(parts)
+
+    def put_parts_new(self, key: str, parts: Sequence) -> int | None:
+        meta = _pack_key(self._prefix + key) + _pack_parts_meta(parts)
+        status, _ = self._request(OP_PUT_NEW, (meta, *parts))
+        return None if status == ST_EXISTS else parts_nbytes(parts)
+
+    def put_batch(self, items: Sequence[tuple[str, Sequence]]) -> int:
+        metas = [
+            _pack_key(self._prefix + key) + _pack_parts_meta(parts)
+            for key, parts in items
+        ]
+        raw = [p for _, parts in items for p in parts]
+        self._request(OP_PUT_BATCH, (_U32.pack(len(items)), *metas, *raw))
+        return sum(parts_nbytes(parts) for _, parts in items)
+
+    def get_view(self, key: str) -> memoryview | None:
+        status, body = self._request(OP_GET, (_pack_key(self._prefix + key),))
+        if status == ST_MISSING:
+            return None
+        # body is a fresh per-frame buffer (never reused): a zero-copy
+        # read-only view of it is safe to hand to the resolve path
+        return body.toreadonly()
+
+    def wait_for(self, key: str, timeout: float | None = None) -> None:
+        body = (
+            _F64.pack(-1.0 if timeout is None else timeout),
+            _pack_key(self._prefix + key),
+        )
+        guard = None if timeout is None else timeout + _WAIT_SLACK_S
+        status, _ = self._request(OP_WAIT, body, timeout=guard)
+        if status == ST_TIMEOUT:
+            raise TimeoutError(f"key {key!r} not set within {timeout}s")
+
+    def wait_for_any(self, keys: Sequence[str], timeout: float | None = None) -> str:
+        keys = list(keys)
+        body = (
+            _F64.pack(-1.0 if timeout is None else timeout),
+            _U32.pack(len(keys)),
+            b"".join(_pack_key(self._prefix + k) for k in keys),
+        )
+        guard = None if timeout is None else timeout + _WAIT_SLACK_S
+        status, resp = self._request(OP_WAIT_ANY, body, timeout=guard)
+        if status == ST_TIMEOUT:
+            raise TimeoutError(f"none of {len(keys)} keys set within {timeout}s")
+        won, _ = _unpack_key(resp, 0)
+        return won[len(self._prefix):]
+
+    def keys(self) -> Iterable[str]:
+        status, body = self._request(OP_KEYS, (_pack_key(self._prefix),))
+        (n,) = _U32.unpack_from(body, 0)
+        off = _U32.size
+        out = []
+        for _ in range(n):
+            k, off = _unpack_key(body, off)
+            out.append(k[len(self._prefix):])
+        return out
+
+    def ping(self) -> str:
+        """Round-trip liveness probe; returns ``pid:BackingType``."""
+        _, body = self._request(OP_PING, ())
+        return bytes(body).decode()
+
+    def __reduce__(self):
+        return (StoreServerConnector, (self.address, self.namespace))
+
+    def __repr__(self):
+        return f"StoreServerConnector({self.address!r}, ns={self.namespace!r})"

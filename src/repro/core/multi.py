@@ -1,0 +1,374 @@
+"""Policy-routed tiered store: one connector over a priority-ordered stack.
+
+ProxyStore's MultiConnector shape ("Accelerating Communications in
+Federated Applications with Transparent Object Proxies"): every put is
+routed by policy across a stack of backing connectors, and resolution is
+transparent — the consumer never learns (or cares) which tier holds the
+payload.
+
+Routing rules, evaluated in order for each put:
+
+1. **explicit pin** — :meth:`MultiConnector.pin` maps a key to a tier by
+   name before the put lands;
+2. **key tags** — ``#tag`` segments carried in the key (``"k123#bulk"``)
+   route to the first tier whose ``tags`` intersect;
+3. **size thresholds** — the first tier whose ``[min_bytes, max_bytes]``
+   window admits the payload wins (tiny → in-memory, medium → shm, bulk →
+   file/network);
+4. **fallback** — nothing matched: the last tier takes it.
+
+The winning tier is recorded in a per-process route map so a resolve goes
+straight to the right backend; a miss (another process's put, a demotion
+behind this process's back) falls through the stack in priority order and
+re-records.  :meth:`demote` moves a payload to a colder tier in place —
+the memory-pressure eviction hook (ROADMAP item 4): resolution after a
+demotion transparently re-fetches from the colder tier.
+
+Waits cover the whole stack: a key may land in any tier, so
+``wait_for``/``wait_for_any`` park one watcher per tier in that tier's
+native notification wait (sliced so losers exit promptly once a winner
+reports) — wake-up latency is the winning tier's native latency, and
+nothing polls.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+from repro.core import connectors as _c
+from repro.core.framing import parts_nbytes
+
+# Watcher wait slice: losers notice the winner within one slice; the
+# winner returns at its tier's native notification latency regardless.
+_WAIT_SLICE_S = 0.05
+
+
+@dataclass(frozen=True)
+class Tier:
+    """One level of the stack: a named connector plus its routing policy."""
+
+    name: str
+    connector: object
+    min_bytes: int = 0
+    max_bytes: int | None = None  # None: no upper bound
+    tags: frozenset = field(default_factory=frozenset)
+
+    def admits(self, size: int) -> bool:
+        if size < self.min_bytes:
+            return False
+        return self.max_bytes is None or size <= self.max_bytes
+
+
+def key_tags(key: str) -> frozenset:
+    """Routing tags carried in the key itself (``"abc#bulk#ckpt"``)."""
+    if "#" not in key:
+        return frozenset()
+    return frozenset(t for t in key.split("#")[1:] if t)
+
+
+class MultiConnector:
+    """Priority-ordered multi-tier connector (see module docstring).
+
+    Satisfies the full optional-method table by delegating through the
+    protocol helpers, so a tier may itself be a bytes-only connector and
+    everything still works.
+    """
+
+    def __init__(self, tiers: Sequence[Tier]):
+        if not tiers:
+            raise ValueError("MultiConnector needs at least one tier")
+        self.tiers = list(tiers)
+        names = [t.name for t in self.tiers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names: {names}")
+        self._by_name = {t.name: t for t in self.tiers}
+        # per-process hints; cross-process resolves fall through the stack
+        self._routes: dict[str, str] = {}
+        self._pins: dict[str, str] = {}
+        self.channel_id = "+".join(
+            _c.channel_identity(t.connector) for t in self.tiers
+        )
+
+    # -- routing ---------------------------------------------------------
+    def pin(self, key: str, tier: str) -> None:
+        """Route the next put of ``key`` to ``tier`` explicitly."""
+        if tier not in self._by_name:
+            raise KeyError(f"unknown tier {tier!r} (have {list(self._by_name)})")
+        self._pins[key] = tier
+
+    def route_for(self, key: str, size: int) -> Tier:
+        """The tier a put of ``size`` bytes under ``key`` lands in."""
+        pinned = self._pins.get(key)
+        if pinned is not None:
+            return self._by_name[pinned]
+        tags = key_tags(key)
+        if tags:
+            for t in self.tiers:
+                if t.tags & tags:
+                    return t
+        for t in self.tiers:
+            if t.admits(size):
+                return t
+        return self.tiers[-1]
+
+    def tier_of(self, key: str) -> str | None:
+        """Name of the tier currently holding ``key`` (probing on miss)."""
+        name = self._routes.get(key)
+        if name is not None and self._by_name[name].connector.exists(key):
+            return name
+        for t in self.tiers:
+            if t.connector.exists(key):
+                self._routes[key] = t.name
+                return t.name
+        self._routes.pop(key, None)
+        return None
+
+    def _evict_elsewhere(self, key: str, keep: Tier) -> None:
+        # An overwrite that re-routes (new size → new tier) must not leave
+        # a stale copy where the old put landed: fall-through would serve
+        # whichever tier is hotter, and that may be the stale one.
+        old = self._routes.get(key)
+        if old is not None and old != keep.name:
+            self._by_name[old].connector.evict(key)
+
+    # -- puts ------------------------------------------------------------
+    def put(self, key: str, data: bytes) -> None:
+        # bytes fast path: route on len() and hand the buffer straight to
+        # the tier — no tuple wrap, no parts_nbytes sweep (the routed put
+        # is the store hot path; see BENCH_proxy multi_route_overhead_ratio)
+        tier = self.route_for(key, len(data))
+        self._evict_elsewhere(key, tier)
+        tier.connector.put(key, data)
+        self._routes[key] = tier.name
+
+    def put_parts(self, key: str, parts: Sequence) -> int:
+        size = parts_nbytes(parts)
+        tier = self.route_for(key, size)
+        self._evict_elsewhere(key, tier)
+        n = _c.put_payload(tier.connector, key, parts)
+        self._routes[key] = tier.name
+        return n
+
+    def put_parts_new(self, key: str, parts: Sequence) -> int | None:
+        """Put-if-absent, atomic *within the routed tier*.
+
+        Racing writers of the same key route identically when their
+        payloads route identically (the put_if_absent uses — future
+        ``set_result``, loader shard commits — write identical values, so
+        they do); the routed tier's native atomic op then arbitrates.  A
+        cheap cross-tier exists() pre-check rejects keys already resident
+        in a *different* tier.
+        """
+        size = parts_nbytes(parts)
+        tier = self.route_for(key, size)
+        for t in self.tiers:
+            if t is not tier and t.connector.exists(key):
+                return None
+        n = _c.put_payload_new(tier.connector, key, parts)
+        if n is not None:
+            self._routes[key] = tier.name
+        return n
+
+    def put_batch(self, items: Sequence[tuple[str, Sequence]]) -> int:
+        """One batched put per tier group (routing preserved per item)."""
+        groups: dict[str, list] = {}
+        for key, parts in items:
+            tier = self.route_for(key, parts_nbytes(parts))
+            self._evict_elsewhere(key, tier)
+            groups.setdefault(tier.name, []).append((key, parts))
+        total = 0
+        for name, group in groups.items():
+            total += _c.put_batch_payloads(self._by_name[name].connector, group)
+            for key, _ in group:
+                self._routes[key] = name
+        return total
+
+    # -- reads -----------------------------------------------------------
+    def _tier_holding(self, key: str) -> Tier | None:
+        name = self._routes.get(key)
+        if name is not None:
+            tier = self._by_name[name]
+            if tier.connector.exists(key):
+                return tier
+            self._routes.pop(key, None)  # stale hint: fall through below
+        for t in self.tiers:
+            if t.connector.exists(key):
+                self._routes[key] = t.name
+                return t
+        return None
+
+    def get(self, key: str) -> bytes | None:
+        name = self._routes.get(key)
+        if name is not None:
+            data = self._by_name[name].connector.get(key)
+            if data is not None:
+                return data
+            self._routes.pop(key, None)
+        for t in self.tiers:
+            data = t.connector.get(key)
+            if data is not None:
+                self._routes[key] = t.name
+                return data
+        return None
+
+    def get_parts(self, key: str):
+        """Cheapest native payload of the holding tier (parts or view)."""
+        name = self._routes.get(key)
+        if name is not None:
+            payload = _c.get_payload(self._by_name[name].connector, key)
+            if payload is not None:
+                return self._as_parts(payload)
+            self._routes.pop(key, None)
+        for t in self.tiers:
+            payload = _c.get_payload(t.connector, key)
+            if payload is not None:
+                self._routes[key] = t.name
+                return self._as_parts(payload)
+        return None
+
+    @staticmethod
+    def _as_parts(payload):
+        if isinstance(payload, (tuple, list)):
+            return tuple(payload)
+        return (payload,)
+
+    def get_view(self, key: str) -> memoryview | None:
+        name = self._routes.get(key)
+        if name is not None:
+            view = _c.get_view(self._by_name[name].connector, key)
+            if view is not None:
+                return view
+            self._routes.pop(key, None)
+        for t in self.tiers:
+            view = _c.get_view(t.connector, key)
+            if view is not None:
+                self._routes[key] = t.name
+                return view
+        return None
+
+    def exists(self, key: str) -> bool:
+        return self._tier_holding(key) is not None
+
+    def evict(self, key: str) -> None:
+        # correctness over round trips: sweep every tier (a demote or a
+        # cross-process re-route may have left the key off this process's
+        # route map), then drop the hints
+        for t in self.tiers:
+            t.connector.evict(key)
+        self._routes.pop(key, None)
+        self._pins.pop(key, None)
+
+    def keys(self) -> Iterable[str]:
+        seen: dict[str, None] = {}
+        for t in self.tiers:
+            for k in getattr(t.connector, "keys", lambda: ())():
+                seen.setdefault(k, None)
+        return list(seen)
+
+    # -- waits -----------------------------------------------------------
+    def wait_for(self, key: str, timeout: float | None = None) -> None:
+        self.wait_for_any([key], timeout)
+
+    def wait_for_any(self, keys: Sequence[str], timeout: float | None = None) -> str:
+        keys = list(keys)
+        if not keys:
+            raise ValueError("wait_for_any requires at least one key")
+        if len(self.tiers) == 1:
+            return _c.wait_for_any(self.tiers[0].connector, keys, timeout)
+        # fast sweep before parking watchers
+        for t in self.tiers:
+            for k in keys:
+                if t.connector.exists(k):
+                    self._routes[k] = t.name
+                    return k
+        deadline = None if timeout is None else time.monotonic() + timeout
+        done = threading.Event()
+        won: list[tuple[str, str]] = []
+        lock = threading.Lock()
+
+        def watch(tier: Tier) -> None:
+            while not done.is_set():
+                if deadline is None:
+                    slice_t = _WAIT_SLICE_S
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return
+                    slice_t = min(_WAIT_SLICE_S, remaining)
+                try:
+                    k = _c.wait_for_any(tier.connector, keys, slice_t)
+                except TimeoutError:
+                    continue  # slice expired: re-check stop flag, re-park
+                with lock:
+                    if not won:
+                        won.append((k, tier.name))
+                done.set()
+                return
+
+        watchers = [
+            threading.Thread(target=watch, args=(t,), daemon=True)
+            for t in self.tiers
+        ]
+        for w in watchers:
+            w.start()
+        done.wait(timeout=None if timeout is None else timeout + _WAIT_SLICE_S)
+        done.set()  # release losers promptly even on timeout
+        with lock:
+            if won:
+                k, name = won[0]
+                self._routes[k] = name
+                return k
+        raise TimeoutError(f"none of {len(keys)} keys set within {timeout}s")
+
+    # -- demotion (ROADMAP item 4 hook) ----------------------------------
+    def demote(self, key: str, to: str) -> bool:
+        """Move ``key``'s payload to tier ``to`` (colder, usually).
+
+        Write-through then evict: the payload is never absent from every
+        tier at once, so a concurrent fall-through resolve always finds
+        it.  Returns False when the key is resident nowhere.
+        """
+        target = self._by_name.get(to)
+        if target is None:
+            raise KeyError(f"unknown tier {to!r} (have {list(self._by_name)})")
+        src = self._tier_holding(key)
+        if src is None:
+            return False
+        if src.name == to:
+            return True
+        payload = _c.get_payload(src.connector, key)
+        if payload is None:  # evicted under us
+            return False
+        # materialize: the target may keep parts by reference (InMemory),
+        # and the source buffer dies when we evict it below
+        parts = tuple(bytes(p) for p in self._as_parts(payload))
+        del payload  # release any zero-copy view before evicting the source
+        _c.put_payload(target.connector, key, parts)
+        src.connector.evict(key)
+        self._routes[key] = to
+        return True
+
+    # -- lifecycle -------------------------------------------------------
+    def close(self) -> None:
+        for t in self.tiers:
+            t.connector.close()
+        self._routes.clear()
+        self._pins.clear()
+
+    def __reduce__(self):
+        # connectors are picklable channels; routes/pins are process-local
+        # hints and deliberately not carried
+        return (_rebuild, (self.tiers,))
+
+    def __repr__(self):
+        return (
+            "MultiConnector("
+            + " > ".join(f"{t.name}:{type(t.connector).__name__}" for t in self.tiers)
+            + ")"
+        )
+
+
+def _rebuild(tiers):
+    return MultiConnector(tiers)

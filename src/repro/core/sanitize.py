@@ -82,12 +82,18 @@ def format_stack(stack: Iterable) -> str:
 
 
 def _conn_id(connector: Any) -> str:
-    """Stable identity for a mediated channel, shared across Store views."""
-    for attr in ("namespace", "name", "directory", "prefix"):
-        v = getattr(connector, attr, None)
-        if isinstance(v, str) and v:
-            return f"{type(connector).__name__}:{v}"
-    return f"{type(connector).__name__}@{id(connector):x}"
+    """Stable identity for a mediated channel, shared across Store views.
+
+    Delegates to :func:`repro.core.connectors.channel_identity` (imported
+    lazily — sanitize must stay importable before connectors): a
+    server-backed channel is ONE object across every client socket, a
+    tiered MultiConnector is one object across its stack, so lifecycle
+    events recorded through different Store/connector instances land on
+    the same record.
+    """
+    from repro.core.connectors import channel_identity
+
+    return channel_identity(connector)
 
 
 @dataclass

@@ -518,6 +518,28 @@ class Store(Generic[T]):
         if self._san:
             self._san.on_evict(self.name, self.connector, key, via="evict")
 
+    # -- tiering (MultiConnector-backed stores) --------------------------------
+    def tier_of(self, key: str) -> str | None:
+        """Name of the tier holding ``key``; None for single-tier connectors."""
+        tier_of = getattr(self.connector, "tier_of", None)
+        if tier_of is None:
+            return None
+        return tier_of(key)
+
+    def demote(self, key: str, to: str) -> bool:
+        """Move ``key`` to a colder tier (no-op False on non-tiered connectors).
+
+        Invalidates the resolve cache so the next resolve re-fetches from
+        the new tier rather than serving the pre-demotion object.
+        """
+        demote = getattr(self.connector, "demote", None)
+        if demote is None:
+            return False
+        moved = demote(key, to)
+        if moved:
+            self._cache.invalidate(key)
+        return moved
+
     # -- proxies ---------------------------------------------------------------
     def proxy(
         self,

@@ -1,0 +1,74 @@
+"""Launch a standalone TCP store server (``repro.core.connectors_net``).
+
+One process serves one backing connector over the PSF1 wire protocol;
+any number of ``StoreServerConnector`` clients across hosts/processes
+share it as a single channel.  Prints a machine-parsable ready line::
+
+    PSRV READY <host> <port>
+
+to stdout (flushed) once the listener is bound, so wrappers can spawn it
+with ``--port 0`` and scrape the OS-assigned port.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.store_server                  # memory backing
+    PYTHONPATH=src python -m repro.launch.store_server --port 7777
+    PYTHONPATH=src python -m repro.launch.store_server --backing file:/tmp/psrv
+    PYTHONPATH=src python -m repro.launch.store_server --backing shm:myns
+"""
+import argparse
+import signal
+import sys
+
+from repro.core.connectors import (
+    FileConnector,
+    InMemoryConnector,
+    SharedMemoryConnector,
+)
+from repro.core.connectors_net import StoreServer
+
+
+def make_backing(spec: str):
+    """``memory[:NS]`` | ``file:DIR`` | ``shm[:NS]`` → connector."""
+    kind, _, arg = spec.partition(":")
+    if kind == "memory":
+        return InMemoryConnector(arg or "srv")
+    if kind == "file":
+        if not arg:
+            raise ValueError("file backing needs a directory: --backing file:DIR")
+        return FileConnector(arg)
+    if kind == "shm":
+        return SharedMemoryConnector(arg or "srv")
+    raise ValueError(f"unknown backing {spec!r} (memory[:NS] | file:DIR | shm[:NS])")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 (default): let the OS pick; scrape the READY line")
+    ap.add_argument("--backing", default="memory",
+                    help="memory[:NS] | file:DIR | shm[:NS] (default: memory)")
+    args = ap.parse_args(argv)
+
+    server = StoreServer(
+        backing=make_backing(args.backing), host=args.host, port=args.port
+    )
+    server.start()
+    print(f"PSRV READY {server.host} {server.port}", flush=True)
+
+    def _stop(signum, frame):
+        server.stop()
+        raise SystemExit(0)
+
+    signal.signal(signal.SIGTERM, _stop)
+    signal.signal(signal.SIGINT, _stop)
+    try:
+        server.serve_forever()
+    finally:
+        server.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""Shared helper: spawn a real store-server process for cross-process tests."""
+import contextlib
+import os
+import subprocess
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@contextlib.contextmanager
+def store_server(*args):
+    """Spawn ``python -m repro.launch.store_server`` and yield ``"host:port"``.
+
+    The child prints ``PSRV READY <host> <port>`` once bound; we block on
+    that line so the address is connectable the moment the context opens.
+    Terminates (then kills) the child on exit.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.store_server", *args],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+        text=True,
+        env=env,
+    )
+    try:
+        line = proc.stdout.readline().strip()
+        fields = line.split()
+        if len(fields) != 4 or fields[:2] != ["PSRV", "READY"]:
+            err = proc.stderr.read() if proc.poll() is not None else ""
+            raise RuntimeError(f"store server failed to start: {line!r}\n{err}")
+        yield f"{fields[2]}:{fields[3]}", proc
+    finally:
+        if proc.poll() is None:
+            proc.terminate()
+            try:
+                proc.wait(timeout=5)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                proc.wait(timeout=5)

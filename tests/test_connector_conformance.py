@@ -1,0 +1,318 @@
+"""Connector-protocol conformance: every connector, one contract.
+
+Runs all five connectors — in-memory, file, shared-memory, TCP
+store-server, tiered multi — through the same matrix: put/get/exists/
+evict round trips, parts/batch/put-new atomicity, zero-copy views, wait
+semantics (prompt wake, exact timeout), pickling.  Plus pins for the PR 9
+connector-protocol bugfix sweep: fallback-wait timeout overshoot, fork
+key-prefix reseeding, and the FileConnector wait_for_any stat storm.
+"""
+import os
+import pickle
+import threading
+import time
+
+import pytest
+
+from repro.core import connectors as C
+from repro.core.connectors import (
+    FileConnector,
+    InMemoryConnector,
+    SharedMemoryConnector,
+    channel_identity,
+    new_key,
+)
+from repro.core.connectors_net import StoreServerConnector
+from repro.core.multi import MultiConnector, Tier
+
+from _store_server_util import store_server
+
+KINDS = ["memory", "file", "shm", "server", "multi"]
+
+
+@pytest.fixture(scope="module")
+def server_address():
+    with store_server("--backing", "memory:conformance") as (addr, _proc):
+        yield addr
+
+
+@pytest.fixture(params=KINDS)
+def conn(request, tmp_path):
+    kind = request.param
+    if kind == "memory":
+        c = InMemoryConnector(new_key())
+    elif kind == "file":
+        c = FileConnector(str(tmp_path / "fc"))
+    elif kind == "shm":
+        c = SharedMemoryConnector()
+    elif kind == "server":
+        addr = request.getfixturevalue("server_address")
+        c = StoreServerConnector(addr, namespace=new_key())
+    else:
+        c = MultiConnector([
+            Tier("hot", InMemoryConnector(new_key()), max_bytes=256),
+            Tier("cold", FileConnector(str(tmp_path / "cold"))),
+        ])
+    yield c
+    for k in list(getattr(c, "keys", lambda: ())()):
+        c.evict(k)
+    c.close()
+
+
+class TestRoundTrips:
+    def test_put_get_exists_evict(self, conn):
+        assert not conn.exists("k")
+        assert conn.get("k") is None
+        conn.put("k", b"value")
+        assert conn.exists("k")
+        assert conn.get("k") == b"value"
+        conn.evict("k")
+        assert not conn.exists("k")
+        assert conn.get("k") is None
+        conn.evict("k")  # evicting a missing key is a no-op, not an error
+
+    def test_overwrite_serves_latest(self, conn):
+        conn.put("k", b"first")
+        conn.put("k", b"second-and-longer")
+        assert conn.get("k") == b"second-and-longer"
+        conn.put("k", b"3")
+        assert conn.get("k") == b"3"
+
+    @pytest.mark.parametrize("size", [0, 1, 1024, 1 << 20])
+    def test_payload_sizes(self, conn, size):
+        data = os.urandom(size)
+        conn.put("k", data)
+        assert conn.get("k") == data
+
+    def test_put_parts_and_payload(self, conn):
+        parts = (b"head", b"x" * 1000, b"", b"tail")
+        n = C.put_payload(conn, "p", parts)
+        assert n == sum(len(p) for p in parts)
+        payload = C.get_payload(conn, "p")
+        joined = (
+            b"".join(bytes(x) for x in payload)
+            if isinstance(payload, (tuple, list))
+            else bytes(payload)
+        )
+        assert joined == b"".join(parts)
+
+    def test_put_batch(self, conn):
+        items = [(f"b{i}", (bytes([i]) * (i * 100 + 1),)) for i in range(5)]
+        total = C.put_batch_payloads(conn, items)
+        assert total == sum(len(p[0]) for _, p in items)
+        for key, parts in items:
+            assert conn.get(key) == parts[0]
+
+    def test_put_new_is_first_writer_wins(self, conn):
+        assert C.put_payload_new(conn, "n", (b"first",)) == 5
+        assert C.put_payload_new(conn, "n", (b"loser",)) is None
+        assert conn.get("n") == b"first"
+        conn.evict("n")
+        assert C.put_payload_new(conn, "n", (b"again",)) == 5
+
+    def test_get_view(self, conn):
+        data = os.urandom(2048)
+        conn.put("v", data)
+        view = C.get_view(conn, "v")
+        assert view is not None
+        assert bytes(view) == data
+        assert C.get_view(conn, "missing") is None
+
+
+class TestWaits:
+    def test_wait_for_present_returns_immediately(self, conn):
+        conn.put("w", b"x")
+        t0 = time.monotonic()
+        C.wait_for(conn, "w", timeout=5.0)
+        assert time.monotonic() - t0 < 1.0
+
+    def test_wait_for_late_put_wakes(self, conn):
+        def later():
+            time.sleep(0.15)
+            conn.put("late", b"x")
+
+        threading.Thread(target=later, daemon=True).start()
+        t0 = time.monotonic()
+        C.wait_for(conn, "late", timeout=10.0)
+        dt = time.monotonic() - t0
+        assert 0.1 < dt < 5.0
+
+    def test_wait_for_timeout_is_exact(self, conn):
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError):
+            C.wait_for(conn, "never", timeout=0.25)
+        dt = time.monotonic() - t0
+        assert 0.24 <= dt < 1.0, dt
+
+    def test_wait_for_any_returns_winner(self, conn):
+        def later():
+            time.sleep(0.15)
+            conn.put("win", b"x")
+
+        threading.Thread(target=later, daemon=True).start()
+        keys = [f"lose{i}" for i in range(20)] + ["win"]
+        assert C.wait_for_any(conn, keys, timeout=10.0) == "win"
+
+    def test_wait_for_any_timeout_is_shared(self, conn):
+        # ONE deadline across the whole set: 30 keys must not multiply it
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError):
+            C.wait_for_any(conn, [f"k{i}" for i in range(30)], timeout=0.25)
+        dt = time.monotonic() - t0
+        assert 0.24 <= dt < 1.0, dt
+
+
+class TestChannel:
+    def test_pickle_round_trip(self, conn):
+        conn.put("pk", b"payload")
+        clone = pickle.loads(pickle.dumps(conn))
+        try:
+            assert clone.get("pk") == b"payload"
+            assert channel_identity(clone) == channel_identity(conn)
+        finally:
+            if clone is not conn and not isinstance(clone, MultiConnector):
+                # MultiConnector.close closes the shared child connectors
+                clone.close()
+
+    def test_channel_identity_is_stable(self, conn):
+        assert channel_identity(conn) == channel_identity(conn)
+        other = InMemoryConnector(new_key())
+        assert channel_identity(conn) != channel_identity(other)
+        other.close()
+
+
+# ---------------------------------------------------------------------------
+# Bugfix pins (the PR 9 sweep)
+# ---------------------------------------------------------------------------
+
+
+class _BytesOnly:
+    """Minimal connector: exercises every duck-typed fallback path."""
+
+    def __init__(self):
+        self.d = {}
+
+    def put(self, key, data):
+        self.d[key] = bytes(data)
+
+    def get(self, key):
+        return self.d.get(key)
+
+    def exists(self, key):
+        return key in self.d
+
+    def evict(self, key):
+        self.d.pop(key, None)
+
+    def close(self):
+        self.d.clear()
+
+
+class TestFallbackWaitTimeout:
+    """Pin: fallback waits never overshoot ``timeout`` by a backoff step."""
+
+    def test_wait_for_clamps_final_sleep(self):
+        c = _BytesOnly()
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError):
+            # aggressive backoff: unclamped sleeps would run 0.05+0.1+0.2
+            # = 0.35s+ against a 0.25s budget
+            C.wait_for(c, "never", timeout=0.25, poll_min=0.05, poll_max=1.0)
+        dt = time.monotonic() - t0
+        assert 0.24 <= dt < 0.35, dt
+
+    def test_wait_for_any_clamps_final_sleep(self):
+        c = _BytesOnly()
+        keys = [f"k{i}" for i in range(50)]
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError):
+            C.wait_for_any(c, keys, timeout=0.25, poll_min=0.05, poll_max=1.0)
+        dt = time.monotonic() - t0
+        assert 0.24 <= dt < 0.35, dt
+
+    def test_wait_for_any_late_key_still_prompt(self):
+        c = _BytesOnly()
+
+        def later():
+            time.sleep(0.1)
+            c.put("k49", b"x")
+
+        threading.Thread(target=later, daemon=True).start()
+        won = C.wait_for_any(c, [f"k{i}" for i in range(50)], timeout=5.0)
+        assert won == "k49"
+
+
+class TestForkKeyUniqueness:
+    """Pin: ``new_key()`` reseeds its prefix in forked children."""
+
+    @pytest.mark.skipif(not hasattr(os, "fork"), reason="needs fork")
+    def test_forked_children_generate_disjoint_keys(self):
+        n = 200
+        readers = []
+        pids = []
+        for _ in range(2):
+            r, w = os.pipe()
+            pid = os.fork()
+            if pid == 0:  # child
+                os.close(r)
+                try:
+                    payload = "\n".join(new_key() for _ in range(n)).encode()
+                    os.write(w, payload)
+                finally:
+                    os.close(w)
+                    os._exit(0)
+            os.close(w)
+            readers.append(r)
+            pids.append(pid)
+        parent_keys = {new_key() for _ in range(n)}
+        sets = [parent_keys]
+        for r, pid in zip(readers, pids):
+            chunks = []
+            while True:
+                b = os.read(r, 65536)
+                if not b:
+                    break
+                chunks.append(b)
+            os.close(r)
+            os.waitpid(pid, 0)
+            child_keys = set(b"".join(chunks).decode().split("\n"))
+            assert len(child_keys) == n
+            sets.append(child_keys)
+        for i in range(len(sets)):
+            for j in range(i + 1, len(sets)):
+                assert not (sets[i] & sets[j]), (i, j)
+
+
+class TestFileWaitAnyStatStorm:
+    """Pin: FileConnector.wait_for_any stats the directory, not every key."""
+
+    class _CountingFileConnector(FileConnector):
+        def __init__(self, directory):
+            super().__init__(directory)
+            self.exists_calls = 0
+
+        def exists(self, key):
+            self.exists_calls += 1
+            return super().exists(key)
+
+    def test_ready_sweep_uses_one_listdir(self, tmp_path):
+        c = self._CountingFileConnector(str(tmp_path / "fc"))
+        keys = [f"k{i}" for i in range(500)]
+        c.put("k499", b"x")
+        c.exists_calls = 0
+        assert c.wait_for_any(keys, timeout=5.0) == "k499"
+        # the wide sweep must not degrade to per-key stat(2) calls
+        assert c.exists_calls == 0
+
+    def test_late_put_with_wide_key_set(self, tmp_path):
+        c = self._CountingFileConnector(str(tmp_path / "fc"))
+        keys = [f"k{i}" for i in range(500)]
+
+        def later():
+            time.sleep(0.1)
+            c.put("k250", b"x")
+
+        threading.Thread(target=later, daemon=True).start()
+        c.exists_calls = 0
+        assert c.wait_for_any(keys, timeout=10.0) == "k250"
+        assert c.exists_calls == 0

@@ -1,0 +1,209 @@
+"""Tiered MultiConnector: routing policy, fall-through, demotion, Store wiring."""
+import pickle
+import threading
+import time
+
+import pytest
+
+from repro.core import Store
+from repro.core import connectors as C
+from repro.core.connectors import FileConnector, InMemoryConnector, new_key
+from repro.core.multi import MultiConnector, Tier, key_tags
+
+
+@pytest.fixture
+def stack(tmp_path):
+    hot = InMemoryConnector(new_key())
+    cold = FileConnector(str(tmp_path / "cold"))
+    m = MultiConnector([
+        Tier("hot", hot, max_bytes=256),
+        Tier("cold", cold, tags=frozenset({"bulk"})),
+    ])
+    yield m, hot, cold
+    m.close()
+
+
+class TestRouting:
+    def test_size_threshold_routes(self, stack):
+        m, hot, cold = stack
+        m.put("small", b"s" * 16)
+        m.put("big", b"B" * 4096)
+        assert hot.exists("small") and not cold.exists("small")
+        assert cold.exists("big") and not hot.exists("big")
+        assert m.tier_of("small") == "hot"
+        assert m.tier_of("big") == "cold"
+
+    def test_tag_routes_override_size(self, stack):
+        m, hot, cold = stack
+        # tiny payload, but the #bulk tag pins it to the cold tier
+        m.put("k#bulk", b"x")
+        assert cold.exists("k#bulk") and not hot.exists("k#bulk")
+        assert key_tags("k#bulk#extra") == frozenset({"bulk", "extra"})
+        assert key_tags("plain") == frozenset()
+
+    def test_pin_overrides_everything(self, stack):
+        m, hot, cold = stack
+        m.pin("p", "cold")
+        m.put("p", b"tiny")
+        assert cold.exists("p") and not hot.exists("p")
+        with pytest.raises(KeyError):
+            m.pin("q", "nonexistent-tier")
+
+    def test_no_tier_admits_falls_to_last(self, tmp_path):
+        m = MultiConnector([
+            Tier("a", InMemoryConnector(new_key()), max_bytes=10),
+            Tier("b", InMemoryConnector(new_key()), max_bytes=20),
+        ])
+        m.put("huge", b"x" * 1000)  # admitted nowhere: last tier takes it
+        assert m.tier_of("huge") == "b"
+        m.close()
+
+    def test_overwrite_reroute_evicts_stale_copy(self, stack):
+        m, hot, cold = stack
+        m.put("k", b"small")
+        assert hot.exists("k")
+        m.put("k", b"B" * 4096)  # grew: re-routes to cold
+        assert not hot.exists("k"), "stale hot copy must be evicted"
+        assert m.get("k") == b"B" * 4096
+        m.put("k", b"small-again")  # shrank: back to hot
+        assert not cold.exists("k")
+        assert m.get("k") == b"small-again"
+
+
+class TestFallThrough:
+    def test_foreign_put_found_by_probe(self, stack):
+        m, hot, cold = stack
+        # another process's put lands in a tier this instance never routed
+        cold.put("foreign", b"f")
+        assert m.exists("foreign")
+        assert m.get("foreign") == b"f"
+        assert m.tier_of("foreign") == "cold"
+
+    def test_stale_route_hint_recovers(self, stack):
+        m, hot, cold = stack
+        m.put("k", b"v")
+        hot.evict("k")  # evicted behind the route map's back
+        cold.put("k", b"moved")
+        assert m.get("k") == b"moved"
+        assert m.tier_of("k") == "cold"
+
+    def test_get_view_and_parts_fall_through(self, stack):
+        m, hot, cold = stack
+        cold.put("f", b"payload")
+        assert bytes(m.get_view("f")) == b"payload"
+        parts = m.get_parts("f")
+        assert b"".join(bytes(p) for p in parts) == b"payload"
+
+    def test_evict_sweeps_all_tiers(self, stack):
+        m, hot, cold = stack
+        hot.put("k", b"hot-copy")
+        cold.put("k", b"cold-copy")  # pathological double residency
+        m.evict("k")
+        assert not hot.exists("k") and not cold.exists("k")
+
+
+class TestBatchAndPutNew:
+    def test_put_batch_splits_by_tier(self, stack):
+        m, hot, cold = stack
+        n = m.put_batch([
+            ("s1", (b"a" * 10,)),
+            ("s2", (b"b" * 20,)),
+            ("big", (b"c" * 1000,)),
+        ])
+        assert n == 1030
+        assert hot.exists("s1") and hot.exists("s2") and cold.exists("big")
+
+    def test_put_parts_new_atomicity(self, stack):
+        m, hot, cold = stack
+        assert m.put_parts_new("n", (b"first",)) == 5
+        assert m.put_parts_new("n", (b"later",)) is None
+        assert m.get("n") == b"first"
+
+    def test_put_parts_new_rejects_cross_tier_resident(self, stack):
+        m, hot, cold = stack
+        cold.put("n", b"resident")  # already in a tier the put wouldn't route to
+        assert m.put_parts_new("n", (b"x",)) is None
+        assert m.get("n") == b"resident"
+
+
+class TestWaits:
+    def test_wait_for_any_across_tiers(self, stack):
+        m, hot, cold = stack
+
+        def later():
+            time.sleep(0.15)
+            cold.put("w-cold", b"x")
+
+        threading.Thread(target=later, daemon=True).start()
+        t0 = time.monotonic()
+        won = m.wait_for_any(["w-hot", "w-cold"], timeout=10.0)
+        dt = time.monotonic() - t0
+        assert won == "w-cold"
+        assert dt < 5.0
+        assert m.tier_of("w-cold") == "cold"
+
+    def test_wait_for_timeout(self, stack):
+        m, _, _ = stack
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError):
+            m.wait_for("never", timeout=0.3)
+        dt = time.monotonic() - t0
+        assert 0.29 <= dt < 1.0, dt
+
+
+class TestDemotion:
+    def test_demote_moves_payload(self, stack):
+        m, hot, cold = stack
+        m.put("d", b"data" * 8)
+        assert m.tier_of("d") == "hot"
+        assert m.demote("d", "cold")
+        assert m.tier_of("d") == "cold"
+        assert not hot.exists("d")
+        assert m.get("d") == b"data" * 8
+
+    def test_demote_missing_and_same_tier(self, stack):
+        m, hot, cold = stack
+        assert not m.demote("ghost", "cold")
+        m.put("k", b"v")
+        assert m.demote("k", "hot")  # already there: trivially true
+        with pytest.raises(KeyError):
+            m.demote("k", "bogus")
+
+    def test_store_demote_invalidates_resolve_cache(self, stack):
+        m, hot, cold = stack
+        s = Store("tiered", m)
+        key = s.put([1, 2, 3])
+        assert s.get(key) == [1, 2, 3]  # warm the resolve cache
+        assert s.demote(key, "cold")
+        assert s.tier_of(key) == "cold"
+        assert not hot.exists(key)
+        assert s.get(key) == [1, 2, 3]  # re-fetched from the cold tier
+
+    def test_store_demote_on_plain_connector_is_noop(self):
+        s = Store("plain", InMemoryConnector(new_key()))
+        key = s.put("x")
+        assert s.tier_of(key) is None
+        assert s.demote(key, "anywhere") is False
+        assert s.get(key) == "x"
+
+
+class TestStoreIntegration:
+    def test_proxy_resolves_through_tiers(self, stack):
+        m, hot, cold = stack
+        s = Store("tiered", m)
+        small = s.proxy({"k": 1})
+        bulk = s.proxy(list(range(10_000)))
+        assert small["k"] == 1
+        assert len(bulk) == 10_000
+        # the bulk payload routed cold, the small one hot
+        from repro.core import get_factory
+
+        assert m.tier_of(get_factory(bulk).key) == "cold"
+        assert m.tier_of(get_factory(small).key) == "hot"
+
+    def test_pickled_connector_same_channel(self, stack):
+        m, hot, cold = stack
+        m.put("k", b"v")
+        clone = pickle.loads(pickle.dumps(m))
+        assert clone.channel_id == m.channel_id
+        assert clone.get("k") == b"v"  # file tier survives; route re-probed

@@ -1,0 +1,394 @@
+"""Cross-process store server: the dist/data/serve layers run UNCHANGED.
+
+The PR 9 acceptance bar: a real ``repro.launch.store_server`` process
+(spawned per test class), with ``StoreServerConnector`` clients in the
+parent and in subprocesses, driving the exact protocols the other layers
+already speak — lease heartbeats with SIGKILL chaos, shard dispatch with
+a straggler redispatch, and the serve delta/completion stream across an
+engine restart.  Zero changes to those layers; the connector is the only
+moving part.
+"""
+import json
+import os
+import pickle
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.core import Store
+from repro.core.connectors import new_key
+from repro.core.connectors_net import StoreServerConnector
+from repro.core.sanitize import _conn_id
+
+from _store_server_util import store_server
+
+
+def _wait_until(predicate, timeout, what):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return
+        time.sleep(0.02)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+def _subprocess_env():
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+@pytest.fixture(scope="class")
+def server():
+    with store_server() as (addr, proc):
+        yield addr, proc
+
+
+# ---------------------------------------------------------------------------
+# Channel identity + client robustness
+# ---------------------------------------------------------------------------
+
+
+_XP_PUTTER = """
+import sys
+from repro.core.connectors_net import StoreServerConnector
+addr, ns = sys.argv[1], sys.argv[2]
+c = StoreServerConnector(addr, namespace=ns)
+c.put("from-subprocess", b"hello-across-processes")
+c.close()
+"""
+
+
+class TestCrossClient:
+    def test_two_clients_one_channel(self, server):
+        addr, _ = server
+        ns = new_key()
+        a = StoreServerConnector(addr, namespace=ns)
+        b = StoreServerConnector(addr, namespace=ns)
+        a.put("k", b"from-a")
+        assert b.get("k") == b"from-a"
+        # ProxySan identity: a server-backed channel is ONE object across
+        # clients — both connectors key to the same channel id
+        assert _conn_id(a) == _conn_id(b)
+        other = StoreServerConnector(addr, namespace=new_key())
+        assert _conn_id(other) != _conn_id(a)  # namespaces are distinct channels
+        for c in (a, b, other):
+            c.close()
+
+    def test_subprocess_put_visible_to_parent(self, server):
+        addr, _ = server
+        ns = new_key()
+        parent = StoreServerConnector(addr, namespace=ns)
+        proc = subprocess.run(
+            [sys.executable, "-c", _XP_PUTTER, addr, ns],
+            env=_subprocess_env(), capture_output=True, timeout=60,
+        )
+        assert proc.returncode == 0, proc.stderr.decode()
+        assert parent.get("from-subprocess") == b"hello-across-processes"
+        parent.close()
+
+    def test_client_disconnect_does_not_wedge_server(self, server):
+        addr, _ = server
+        ns = new_key()
+        rude = StoreServerConnector(addr, namespace=ns)
+        rude.put("k", b"v")
+        del rude  # abandon the pooled sockets without a goodbye
+        survivor = StoreServerConnector(addr, namespace=ns)
+        assert survivor.get("k") == b"v"
+        survivor.close()
+
+    def test_concurrent_wait_and_put_share_one_connector(self, server):
+        """A thread parked in a server-side wait must not block another
+        thread's put on the SAME connector (the pool contract the serve
+        engine's puller/admission threads rely on)."""
+        addr, _ = server
+        c = StoreServerConnector(addr, namespace=new_key())
+        won = []
+
+        def waiter():
+            won.append(c.wait_for_any(["a", "b"], timeout=30.0))
+
+        t = threading.Thread(target=waiter, daemon=True)
+        t.start()
+        time.sleep(0.1)  # let the wait park server-side
+        c.put("b", b"x")  # same connector, different pooled socket
+        t.join(timeout=30)
+        assert not t.is_alive() and won == ["b"]
+        c.close()
+
+    def test_error_frames_keep_connection_alive(self, server):
+        addr, _ = server
+        c = StoreServerConnector(addr, namespace=new_key())
+        with pytest.raises(TimeoutError):
+            c.wait_for("never", timeout=0.2)
+        # the timed-out connection is still pooled and serviceable
+        c.put("k", b"v")
+        assert c.get("k") == b"v"
+        c.close()
+
+
+# ---------------------------------------------------------------------------
+# Lease service over the server, with SIGKILL chaos
+# ---------------------------------------------------------------------------
+
+
+_XP_LEASE_WORKER = """
+import sys, time
+from repro.core import Store
+from repro.core.connectors_net import StoreServerConnector
+from repro.dist.lease import LeaseService
+
+addr, ns, name, ttl, beats = (
+    sys.argv[1], sys.argv[2], sys.argv[3], float(sys.argv[4]), int(sys.argv[5])
+)
+svc = LeaseService(
+    Store(f"xp-srv-worker-{name}", StoreServerConnector(addr, namespace=ns),
+          register=False),
+    ttl=ttl,
+)
+svc.register(name)
+print("REGISTERED", flush=True)
+for _ in range(beats):
+    time.sleep(ttl / 4)
+    svc.renew(name)
+"""
+
+
+@pytest.mark.multiproc(timeout=120)
+class TestLeaseOverServer:
+    def test_heartbeat_sigkill_reregister(self, server):
+        from repro.dist.lease import LeaseService
+
+        addr, _ = server
+        ns = new_key()
+        ttl = 0.8
+        monitor = LeaseService(
+            Store("xp-srv-monitor", StoreServerConnector(addr, namespace=ns),
+                  register=False),
+            ttl=ttl,
+        )
+        # chaos: the worker would beat ~forever; we SIGKILL it mid-beat
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _XP_LEASE_WORKER, addr, ns, "w0",
+             str(ttl), "100000"],
+            env=_subprocess_env(), stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        try:
+            _wait_until(lambda: monitor.live() == ["w0"], 30, "worker live")
+            gen = monitor.lease("w0").generation
+            assert gen == 1
+            proc.send_signal(signal.SIGKILL)
+            proc.wait(timeout=30)
+            _wait_until(lambda: monitor.dead() == ["w0"], 30, "worker dead")
+            assert monitor.live() == []
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+                proc.wait(timeout=30)
+        # re-register: a second incarnation claims the next generation
+        proc2 = subprocess.Popen(
+            [sys.executable, "-c", _XP_LEASE_WORKER, addr, ns, "w0",
+             str(ttl), "2"],
+            env=_subprocess_env(), stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        try:
+            _wait_until(lambda: monitor.is_live("w0"), 30, "worker re-registered")
+            assert monitor.lease("w0").generation == gen + 1
+        finally:
+            out, err = proc2.communicate(timeout=60)
+        assert proc2.returncode == 0, err.decode()
+        monitor.store.close()
+
+
+# ---------------------------------------------------------------------------
+# DispatchingDataLoader over the server (straggler redispatch intact)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.multiproc(timeout=120)
+class TestLoaderOverServer:
+    def _batch(self, step):
+        return {"step": step, "payload": bytes([step % 251]) * 512}
+
+    def test_all_shards_in_order_over_server(self, server):
+        from repro.core.proxy import extract
+        from repro.data.pipeline import DispatchingDataLoader
+
+        addr, _ = server
+        loader = DispatchingDataLoader(
+            self._batch,
+            num_steps=6,
+            store=Store("xp-srv-loader",
+                        StoreServerConnector(addr, namespace=new_key()),
+                        register=False),
+            workers=2,
+            prefetch=2,
+        )
+        got = [extract(p) for p in loader]
+        assert [g["step"] for g in got] == list(range(6))
+        assert all(g == self._batch(i) for i, g in enumerate(got))
+        loader.stop()
+
+    def test_straggler_redispatch_over_server(self, server):
+        from repro.core.proxy import extract
+        from repro.data.pipeline import DispatchingDataLoader, StragglerPolicy
+
+        addr, _ = server
+        release = threading.Event()
+        hung = []
+
+        def worker_fn(worker, step):
+            if step == 3 and not hung:
+                hung.append(worker)
+                release.wait(timeout=60)
+            return self._batch(step)
+
+        loader = DispatchingDataLoader(
+            self._batch,
+            num_steps=6,
+            store=Store("xp-srv-straggle",
+                        StoreServerConnector(addr, namespace=new_key()),
+                        register=False),
+            workers=["dw0", "dw1"],
+            policy=StragglerPolicy(
+                warn_factor=2.0, redispatch_factor=4.0, window=8, min_samples=3
+            ),
+            worker_fn=worker_fn,
+            prefetch=2,
+            supervise_every=0.01,
+            shard_timeout=60.0,
+        )
+        try:
+            got = [extract(p) for p in loader]
+            assert [g["step"] for g in got] == list(range(6))
+            stragglers = [
+                r for r in loader.redispatches
+                if r["step"] == 3 and r["reason"] == "straggler"
+            ]
+            assert stragglers
+            assert stragglers[0]["to"] != hung[0]
+        finally:
+            release.set()
+            loader.stop()
+
+
+# ---------------------------------------------------------------------------
+# Serve protocol over the server, across an engine restart
+# ---------------------------------------------------------------------------
+
+
+_XP_SERVE_CLIENT = """
+import json, sys
+sys.path.insert(0, sys.argv[4])  # tests dir, for _serve_toy
+import numpy as np
+from _serve_toy import reference_decode
+from repro.configs import get_smoke_config
+from repro.core import Store
+from repro.core.connectors_net import StoreServerConnector
+from repro.core.streaming import (
+    FileLogPublisher, FileLogSubscriber, StreamConsumer, StreamProducer,
+)
+from repro.serve.client import ServeClient
+
+addr, logdir, n = sys.argv[1], sys.argv[2], int(sys.argv[3])
+cfg = get_smoke_config("smollm-135m")
+store = Store("xp-srv-req", StoreServerConnector(addr, namespace="serve-req"))
+producer = StreamProducer(FileLogPublisher(logdir), {"requests": store})
+rng = np.random.default_rng(42)
+prompts = {}
+for i in range(n):
+    rid = f"x{i}"
+    prompts[rid] = rng.integers(1, cfg.vocab, 5).astype(np.int32)
+    producer.send(
+        "requests",
+        {"prompt": prompts[rid]},
+        metadata={"req_id": rid, "max_new_tokens": 4},
+    )
+    producer.flush_topic("requests")
+producer.close_topic("requests")
+
+client = ServeClient(
+    StreamConsumer(FileLogSubscriber("responses", logdir), timeout=60.0)
+)
+client.collect()  # until the (restarted) engine closes the topic
+ok = True
+for rid, prompt in prompts.items():
+    ref = reference_decode(cfg, prompt, 4, max_len=32)
+    rec = client.results.get(rid)
+    if rec is None or rec.stream_tokens != ref or rec.result["tokens"] != ref:
+        ok = False
+print(json.dumps({
+    "ok": ok and client.closed and not client.out_of_order,
+    "n_results": len(client.results),
+}))
+"""
+
+
+@pytest.mark.multiproc(timeout=180)
+class TestServeOverServer:
+    def test_serve_stream_survives_engine_restart_over_server(
+        self, server, tmp_path
+    ):
+        """The TestCrossProcessClient scenario with every bulk payload on
+        the TCP store instead of FileConnector: requests/responses resolve
+        through ``StoreServerConnector`` while the FileLog carries only
+        metadata.  Engine 1 serves 2 of 4 requests and is torn down; engine
+        2 resumes from the pickled subscriber offset; the external client
+        sees one continuous, ordered, complete stream."""
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        from repro.core.streaming import (
+            FileLogPublisher,
+            FileLogSubscriber,
+            StreamConsumer,
+            StreamProducer,
+        )
+        from test_serve_stream import make_engine
+
+        addr, _ = server
+        logdir = str(tmp_path / "log")
+        n = 4
+        tests_dir = os.path.dirname(os.path.abspath(__file__))
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _XP_SERVE_CLIENT, addr, logdir, str(n),
+             tests_dir],
+            env=_subprocess_env(), stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        try:
+            resp_store = Store(
+                "xp-srv-resp", StoreServerConnector(addr, namespace="serve-resp")
+            )
+
+            def resp_producer():
+                return StreamProducer(
+                    FileLogPublisher(logdir), {"responses": resp_store}
+                )
+
+            sub1 = FileLogSubscriber("requests", logdir)
+            consumer1 = StreamConsumer(sub1, timeout=60.0)
+            engine1 = make_engine()
+            engine1.run(
+                consumer1, resp_producer(), max_requests=2, close_responses=False
+            )
+            assert len(engine1.completed) == 2
+            engine1.close(reclaim_responses=False)
+
+            sub2 = pickle.loads(pickle.dumps(sub1))
+            consumer2 = StreamConsumer(sub2, timeout=60.0)
+            engine2 = make_engine()
+            engine2.run(consumer2, resp_producer())
+            assert len(engine2.completed) == 2
+            engine2.close(reclaim_responses=False)
+
+            out, err = proc.communicate(timeout=120)
+        except BaseException:
+            proc.kill()
+            raise
+        assert proc.returncode == 0, err.decode()
+        report = json.loads(out.decode().strip().splitlines()[-1])
+        assert report["ok"], report
+        assert report["n_results"] == n
