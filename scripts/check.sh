@@ -77,6 +77,16 @@ echo "== serve: speculative decode bit-identity =="
 python -m pytest -x -q tests/test_serve_spec.py tests/test_kernels.py \
     -k "bit_identical or multi_query"
 
+echo
+echo "== fleet: failover chaos matrix =="
+# The serve-fleet acceptance bar as a named gate (also part of tier-1):
+# N subprocess engines behind the front-end router, one SIGKILL'd before
+# admission / mid-decode / after its completion commit but before the
+# client read — every client transcript must stay bit-identical to the
+# single-engine greedy reference with exactly one on_done per request
+# (no loss, no duplicate), plus the dead-engine client-deadline pin.
+REPRO_PROXYSAN=1 python -m pytest -x -q tests/test_fleet_chaos.py
+
 if [[ "${1:-}" != "--fast" ]]; then
     echo
     echo "== perf smoke: proxy_overhead --quick =="
@@ -115,10 +125,14 @@ if [[ "${1:-}" != "--fast" ]]; then
     # failure modes (streaming broken → ttft_speedup ~1 vs the 10× cap;
     # static batching → exactly 1.0 vs 1.88; serialized decode → ~1 vs
     # ~3.1-3.8; draft rejected every step → accepted/slot-step exactly
-    # 1.0 vs the ≥1.5 gate).  --require pins the speculative-decode
-    # metric: dropping it from the bench is itself a gate failure.
+    # 1.0 vs the ≥1.5 gate).  --require pins the speculative-decode and
+    # fleet metrics: dropping either from the bench is itself a gate
+    # failure.  fleet_scaling is the router-overhead-flatness ratio (this
+    # is a one-CPU box — see benchmarks/serve_bench.py): a router that
+    # serialized forwarding or started resolving proxies collapses it.
     python scripts/compare_bench.py --serve --tolerance 0.25 \
-        --require spec_accepted_tokens_per_step
+        --require spec_accepted_tokens_per_step \
+        --require fleet_scaling
 fi
 
 echo

@@ -112,6 +112,7 @@ HOT_PATH_SUFFIXES = (
     "core/proxy.py",
     "serve/engine.py",
     "serve/client.py",
+    "serve/router.py",
 )
 
 # Modules whose stores are read across processes: the mutable-key rule

@@ -39,6 +39,7 @@ import os
 import socket
 import struct
 import threading
+import time
 from contextlib import contextmanager
 from typing import Iterable, Sequence
 
@@ -87,6 +88,30 @@ _IOV_CHUNK = 512
 # server owns timeout arbitration, the socket guard only catches a dead
 # server
 _WAIT_SLACK_S = 30.0
+# server-side parked waits probe their connection's peer at this cadence:
+# a rudely-disconnected client (crash, SIGKILL) releases the connection
+# thread within one tick instead of holding it for the wait's full budget
+_PEER_TICK = 0.25
+
+
+class _PeerGone(Exception):
+    """The waiting connection's client hung up: abandon the wait, no
+    response frame (there is nobody to read it)."""
+
+
+def _peer_alive(sock: socket.socket) -> bool:
+    """Non-blocking peek: has the peer closed (or reset) the connection?
+
+    The request/response protocol is strictly half-duplex per connection,
+    so while the server owes a response nothing should be readable — a
+    readable EOF (``b""``) or a reset means the client is gone."""
+    try:
+        probe = sock.recv(1, socket.MSG_PEEK | socket.MSG_DONTWAIT)
+    except (BlockingIOError, InterruptedError):
+        return True  # nothing to read: peer still there
+    except OSError:
+        return False  # reset / bad fd: peer gone
+    return len(probe) > 0
 
 
 # -- low-level frame I/O -----------------------------------------------------
@@ -249,7 +274,9 @@ class StoreServer:
                 except (ConnectionError, OSError):
                     return  # client went away: normal teardown
                 try:
-                    status, out = self._dispatch(op, body)
+                    status, out = self._dispatch(op, body, conn)
+                except _PeerGone:
+                    return  # waiting client hung up: release the thread
                 except TimeoutError:
                     status, out = ST_TIMEOUT, ()
                 except Exception as e:  # answered loudly, connection survives
@@ -267,7 +294,35 @@ class StoreServer:
                 pass
 
     # -- dispatch --
-    def _dispatch(self, op: int, body: memoryview) -> tuple[int, tuple]:
+    def _wait_sliced(self, conn, wait_once, timeout: float | None):
+        """Run a backing wait in ``_PEER_TICK`` slices, probing the
+        connection's peer between slices.
+
+        The backing wait is notification-driven (condition variables), so
+        slicing costs one spurious wakeup per tick, not a busy poll — but
+        it bounds how long a thread parked for a rudely-disconnected
+        client lingers: one tick, not the wait's full budget (a client
+        crash during an unbounded wait used to leak the thread forever).
+        Raises :class:`_PeerGone` when the probe says the client left.
+        """
+        if conn is None:
+            return wait_once(timeout)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            tick = _PEER_TICK
+            if deadline is not None:
+                tick = min(tick, max(deadline - time.monotonic(), 0.0))
+            try:
+                return wait_once(tick)
+            except TimeoutError:
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise
+                if not _peer_alive(conn):
+                    raise _PeerGone from None
+
+    def _dispatch(
+        self, op: int, body: memoryview, conn: socket.socket | None = None
+    ) -> tuple[int, tuple]:
         b = self.backing
         if op == OP_PUT or op == OP_PUT_NEW:
             key, off = _unpack_key(body, 0)
@@ -319,7 +374,10 @@ class StoreServer:
         if op == OP_WAIT:
             (t,) = _F64.unpack_from(body, 0)
             key, _ = _unpack_key(body, _F64.size)
-            _wait_for(b, key, None if t < 0 else t)  # raises TimeoutError
+            # raises TimeoutError on deadline, _PeerGone on client hangup
+            self._wait_sliced(
+                conn, lambda tt: _wait_for(b, key, tt), None if t < 0 else t
+            )
             return ST_OK, ()
         if op == OP_WAIT_ANY:
             (t,) = _F64.unpack_from(body, 0)
@@ -329,7 +387,11 @@ class StoreServer:
             for _ in range(nkeys):
                 k, off = _unpack_key(body, off)
                 keys.append(k)
-            won = _wait_for_any(b, keys, None if t < 0 else t)
+            won = self._wait_sliced(
+                conn,
+                lambda tt: _wait_for_any(b, keys, tt),
+                None if t < 0 else t,
+            )
             return ST_OK, (_pack_key(won),)
         if op == OP_KEYS:
             prefix, _ = _unpack_key(body, 0)

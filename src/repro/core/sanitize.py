@@ -322,6 +322,23 @@ class Sanitizer:
         with self._lock:
             self._count("moves")
 
+    def note_orphan(self, store: str, connector, key: str) -> None:
+        """Register an externally-minted payload this process *failed to
+        reclaim* (a serve engine's best-effort orphaned-bulk evict threw).
+
+        The payload was put by another process, so no local ``on_put``
+        record exists — without this hook the orphan is invisible to the
+        sanitizer even though it will sit resident in the channel forever.
+        Recording a live mint here makes it surface in ``leak_report()`` /
+        ``report()`` for as long as it stays resident, with the *reclaim
+        failure site* as its provenance stack.
+        """
+        k = (_conn_id(connector), key)
+        with self._lock:
+            self._count("orphans_noted")
+            if k not in self._live:
+                self._live[k] = MintRecord(store, key, "object", _stack(2), connector)
+
     # -- reporting ------------------------------------------------------------
     def live_records(self, *, store: str | None = None,
                      kinds: tuple = ("owned", "object")) -> list[MintRecord]:

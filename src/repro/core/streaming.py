@@ -419,6 +419,56 @@ class StreamProducer:
             publish_event(self.publisher, topic, event)
         self._buffers[topic] = []
 
+    def send_committed(
+        self,
+        topic: str,
+        obj: Any,
+        *,
+        key: str,
+        metadata: dict | None = None,
+        lifetime: Any | None = None,
+    ) -> bool:
+        """Exactly-once publish: commit ``obj`` at a *deterministic* key
+        with ``put_if_absent``, then publish an event referencing that key
+        — whether or not this producer won the commit.
+
+        The ``DispatchingDataLoader`` twin-commit pattern lifted into the
+        stream layer: when two producers race the same logical result (a
+        redispatched serve request re-completed by a survivor engine),
+        exactly one payload lands in the channel, every producer's event
+        points at the *same* cell, and the consumer's one-shot resolve
+        (``evict_on_resolve``) reclaims it exactly once.  Duplicate events
+        are the dedup point — a router/client drops all but the first
+        terminal event per key, and the dropped events reference a payload
+        that the winning resolve already evicted (or will).
+
+        Returns ``True`` when this call's put won the commit.  ``lifetime``
+        takes custody only on a win — the loser does not own the cell.
+        Bypasses batching; buffered sends flush first (event order).
+        """
+        self.flush_topic(topic)
+        store = self.store_for(topic)
+        won = store.put_if_absent(obj, key)
+        if won and lifetime is not None:
+            lifetime.add(store, key)
+        deserializer = self._event_deserializer(store)
+        seq = self._seq.get(topic, 0)
+        self._seq[topic] = seq + 1
+        event = {
+            "topic": topic,
+            "key": key,
+            "store": store.name,
+            "connector": store.connector,
+            "metadata": dict(metadata or {}),
+            "seq": seq,
+            # one-shot: the first resolve reclaims the committed cell
+            "evict_on_resolve": True,
+        }
+        if deserializer is not None:
+            event["deserializer"] = deserializer
+        publish_event(self.publisher, topic, event)
+        return won
+
     def send_meta(self, topic: str, metadata: dict) -> None:
         """Publish a *metadata-only* event: no bulk payload, no store put.
 

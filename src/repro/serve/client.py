@@ -108,17 +108,40 @@ class ServeClient:
         return rec
 
     def collect(
-        self, n: int | None = None, *, timeout: float | None = None
+        self,
+        n: int | None = None,
+        *,
+        timeout: float | None = None,
+        deadline: float | None = None,
     ) -> dict[str, StreamedResult]:
         """Consume events until ``n`` completions (or the topic closes when
-        ``n`` is None).  ``timeout`` bounds each event wait."""
+        ``n`` is None).  ``timeout`` bounds each event wait; ``deadline``
+        bounds the whole call — against a dead engine that never publishes
+        again, the client surfaces ``TimeoutError`` naming the incomplete
+        req_ids instead of blocking forever in the consumer wait."""
+        deadline_t = None if deadline is None else time.monotonic() + deadline
         done = sum(1 for r in self.results.values() if r.done)
         while n is None or done < n:
+            wait = timeout
+            if deadline_t is not None:
+                remaining = deadline_t - time.monotonic()
+                wait = remaining if wait is None else min(wait, remaining)
+                wait = max(wait, 0.0)
             try:
-                if timeout is None:
+                if wait is None:
                     proxy, meta = self.consumer.next_with_metadata()
                 else:
-                    proxy, meta = self.consumer.next_with_metadata(timeout=timeout)
+                    proxy, meta = self.consumer.next_with_metadata(timeout=wait)
+            except TimeoutError:
+                if deadline_t is not None and time.monotonic() >= deadline_t:
+                    incomplete = sorted(
+                        r for r, rec in self.results.items() if not rec.done
+                    )
+                    raise TimeoutError(
+                        f"serve client deadline ({deadline:g}s) expired; "
+                        f"incomplete req_ids: {incomplete}"
+                    ) from None
+                raise  # caller's per-event timeout contract, unchanged
             except StopIteration:
                 self.closed = True
                 break

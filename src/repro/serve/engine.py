@@ -70,6 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sanitize as _sanitize
 from repro.core.lifetimes import ContextLifetime
 from repro.core.proxy import extract
 from repro.core.store import Store
@@ -134,6 +135,8 @@ class ServeEngine:
         spec_k: int = 0,
         draft_model=None,
         draft_params=None,
+        on_load_change=None,
+        done_commit_prefix: str | None = None,
     ):
         from repro.core.connectors import new_key
         from repro.serve.kvcache import PageTable
@@ -157,6 +160,17 @@ class ServeEngine:
         self.paged = paged and max_len % page_size == 0
         self.batch_prefill = batch_prefill
         self.share_prefixes = share_prefixes
+        # Fleet hooks (serve/router.py).  ``on_load_change(pages_available)``
+        # fires after every admission batch and every completion so an
+        # engine can publish its capacity as store metadata (the router's
+        # least-loaded signal); a failing hook is counted, never fatal.
+        # ``done_commit_prefix`` switches completions to the exactly-once
+        # ``send_committed`` path: the record lands at the deterministic
+        # key ``{prefix}{req_id}`` via put_if_absent, so a redispatched
+        # request re-completed by a survivor engine commits ONE payload
+        # however many engines finish it.
+        self.on_load_change = on_load_change
+        self.done_commit_prefix = done_commit_prefix
         # speculative decode: a draft model proposes spec_k tokens per slot
         # per step; the target verifies all of them in one paged forward.
         # Greedy rejection keeps the longest matching prefix plus the
@@ -272,6 +286,8 @@ class ServeEngine:
             "spec_steps": 0,
             "spec_slot_steps": 0,
             "spec_accepted_tokens": 0,
+            "reclaim_failures": 0,
+            "load_publish_failures": 0,
         }
 
     def _page_bytes(self, page_size: int) -> int:
@@ -703,7 +719,22 @@ class ServeEngine:
             slot.pages = self.pages.pages_of(req.req_id) if self.paged else []
             self.metrics["prefills"] += 1
             self.metrics["tokens"] += 1
+        self._notify_load()
         return firsts
+
+    def _notify_load(self) -> None:
+        """Publish current capacity through the ``on_load_change`` hook.
+
+        A broken publish channel (store server briefly unreachable) must
+        not abort the serve loop — the failure is counted so it is never
+        silent, and the next admission/completion retries naturally.
+        """
+        if self.on_load_change is None:
+            return
+        try:
+            self.on_load_change(self.pages.pages_available())
+        except BaseException:
+            self.metrics["load_publish_failures"] += 1
 
     def _request_lifetime(self, req_id: str) -> ContextLifetime:
         lt = self._req_lifetimes.get(req_id)
@@ -746,6 +777,7 @@ class ServeEngine:
         slot.generated = []
         slot.first_token_at = None
         slot.pages = []
+        self._notify_load()
 
     def _spec_decode_step(self, active, send_delta, finish_if_done):
         """One speculative engine step over the active slots: draft k
@@ -920,16 +952,25 @@ class ServeEngine:
                     if req_id is None:
                         # unaddressable event: nobody else will ever pull
                         # this topic, so its unresolved bulk payload would
-                        # be resident forever — reclaim it (best-effort:
-                        # the malformed_events count is the signal, and a
-                        # half-broken factory must not kill the puller)
+                        # be resident forever — reclaim it.  A failed
+                        # reclaim is no longer swallowed: it is counted
+                        # (``reclaim_failures``) and the orphan is handed
+                        # to ProxySan so it surfaces in the leak report
+                        # for as long as it stays resident.
+                        f = None
                         try:
                             f = object.__getattribute__(proxy, "__factory__")
                             Store.get_or_reattach(
                                 f.store_name, f.connector
                             ).evict(f.key)
-                        except BaseException:  # proxylint: disable=swallowed-error
-                            pass
+                        except BaseException:
+                            self.metrics["reclaim_failures"] += 1
+                            if f is not None:
+                                san = _sanitize.active_for(f.store_name)
+                                if san is not None:
+                                    san.note_orphan(
+                                        f.store_name, f.connector, f.key
+                                    )
                     with cond:
                         state["pulled"] += 1
                         if req_id is None:
@@ -955,14 +996,29 @@ class ServeEngine:
             if response_producer is None:
                 return
             entry = self.completed[req_id]
+            meta = {
+                "req_id": req_id,
+                "kind": "done",
+                "n_tokens": len(entry["tokens"]),
+            }
+            if self.done_commit_prefix is not None:
+                # fleet mode: commit the record at the deterministic key
+                # shared by every engine that might finish this request
+                # (put_if_absent — one payload no matter how many twins
+                # complete a redispatched request); the event always
+                # references that key, the router forwards the first one
+                response_producer.send_committed(
+                    response_topic,
+                    {"req_id": req_id, **entry},
+                    key=f"{self.done_commit_prefix}{req_id}",
+                    metadata=meta,
+                    lifetime=self._response_lifetime(req_id),
+                )
+                return
             response_producer.send(
                 response_topic,
                 {"req_id": req_id, **entry},
-                metadata={
-                    "req_id": req_id,
-                    "kind": "done",
-                    "n_tokens": len(entry["tokens"]),
-                },
+                metadata=meta,
                 # the response lifetime takes custody of the completion
                 # bulk: a client that never resolves it (crashed, filtered)
                 # no longer leaks it past engine.close(); a client that

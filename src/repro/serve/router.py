@@ -1,0 +1,398 @@
+"""Serve fleet router: front-end fan-out over N engines, with failover.
+
+The router sits between one client-facing request topic and N
+:class:`~repro.serve.engine.ServeEngine` processes, speaking *metadata
+only* — it never resolves a proxy.  Request events are forwarded verbatim
+(same store key, same connector) to a per-engine request topic, and each
+engine's response topic is merged back onto the one client response topic,
+so clients and engines both run the unmodified serve protocol.
+
+Contract
+--------
+- **Routing** is least-loaded: engines publish ``pages_available()`` to a
+  control store under ``{load_prefix}{name}`` (the ``ServeEngine``
+  ``on_load_change`` hook); the router reads those cells ``fresh`` and
+  ties break toward the fewest in-flight assignments.
+- **Liveness** rides a :class:`~repro.dist.lease.LeaseService`: engines
+  register and renew under their fleet name; the router's watch thread
+  blocks in ``lease.watch`` and treats a lease expiry as engine death.
+- **Failover** re-publishes every non-terminal request assigned to a dead
+  engine to a survivor (the original request event is kept verbatim, so
+  the survivor resolves the *same* prompt bulk — fleet clients publish
+  prompts with ``evict_on_resolve=False`` for exactly this reason).
+- **Exactly-once** client delivery is enforced here, not at the engines:
+  - deltas are forwarded only when ``index`` equals the per-request
+    forwarded count, so a redispatched request's replayed prefix (greedy
+    decode is deterministic — the replayed tokens are bit-identical) is
+    dropped and the client sees one gapless stream;
+  - the first terminal event (``done``/``error``) per request wins; later
+    ones count as ``duplicate_dones`` and are dropped.  Engines in fleet
+    mode commit completions with ``StreamProducer.send_committed`` at the
+    deterministic key ``{done_commit_prefix}{req_id}`` (put-if-absent), so
+    twin completions of a redispatched request share ONE payload cell and
+    the client's single ``evict_on_resolve`` resolve reclaims it once.
+- **Shutdown**: when the intake topic closes and every request is
+  terminal, the router closes each live engine's request topic; when every
+  engine has closed its response topic (or died), it closes the client
+  response topic and :meth:`wait` returns.
+
+Threads: one intake, one forwarder per engine, one lease watcher; all
+state transitions and response-topic publishes happen under one lock, so
+the response log order matches the dedup decisions exactly.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+from repro.core.streaming import _END, _load_event, publish_event
+
+
+@dataclass
+class _ReqState:
+    """Router-side view of one in-flight request."""
+
+    event: dict  # the original request event, re-publishable verbatim
+    engine: str  # current assignee
+    terminal: bool = False  # a done/error has been forwarded
+    forwarded: int = 0  # deltas forwarded (== next expected index)
+
+
+class Router:
+    """Fan requests across engines; merge responses exactly-once.
+
+    Parameters
+    ----------
+    engines:
+        Fleet member names; also the lease worker names and the suffixes
+        of the per-engine topics (``{request_topic_prefix}{name}`` in,
+        ``responses-{name}`` out via ``make_engine_subscriber``).
+    subscriber:
+        Broker subscriber on the client-facing request topic.
+    publisher:
+        Broker publisher used for every router output (per-engine request
+        topics and the merged client response topic).
+    make_engine_subscriber:
+        ``name -> Subscriber`` on that engine's response topic; called in
+        the forwarder thread so subprocess log tails attach lazily.
+    lease:
+        :class:`~repro.dist.lease.LeaseService` the engines renew under;
+        ``None`` disables the watch thread (no failover — tests only).
+    control_store:
+        Store carrying the per-engine load cells (mutable keys, read
+        ``fresh``).
+    """
+
+    def __init__(
+        self,
+        engines,
+        *,
+        subscriber,
+        publisher,
+        make_engine_subscriber,
+        lease=None,
+        control_store=None,
+        load_prefix: str = "load-",
+        request_topic_prefix: str = "requests-",
+        response_topic: str = "responses",
+        tick: float = 0.25,
+    ):
+        self.engines = list(engines)
+        self.subscriber = subscriber
+        self.publisher = publisher
+        self.make_engine_subscriber = make_engine_subscriber
+        self.lease = lease
+        self.control_store = control_store
+        self.load_prefix = load_prefix
+        self.request_topic_prefix = request_topic_prefix
+        self.response_topic = response_topic
+        self.tick = tick
+
+        self._lock = threading.RLock()
+        self._state: dict[str, _ReqState] = {}
+        self._dead: set[str] = set()
+        self._engine_closed: set[str] = set()
+        self._intake_closed = False
+        self._shutdown_sent = False
+        self._responses_closed = False
+        self._stop_evt = threading.Event()
+        self._done_evt = threading.Event()
+        # per-engine forwarder gates: cleared = paused (test hook for the
+        # "done published but not yet read" chaos window)
+        self._gates = {n: threading.Event() for n in self.engines}
+        for g in self._gates.values():
+            g.set()
+        self._threads: list[threading.Thread] = []
+        self.metrics = {
+            "requests_routed": 0,
+            "deltas_forwarded": 0,
+            "dones_forwarded": 0,
+            "dropped_stale_deltas": 0,
+            "duplicate_dones": 0,
+            "duplicate_requests": 0,
+            "unroutable_requests": 0,
+            "redispatches": 0,
+            "engine_deaths": 0,
+            "failed_requests": 0,
+            "ignored_events": 0,
+            "watch_errors": 0,
+        }
+
+    # -- topology ------------------------------------------------------------
+    def _req_topic(self, name: str) -> str:
+        return f"{self.request_topic_prefix}{name}"
+
+    def _pick_engine_locked(self) -> str | None:
+        """Most free pages wins; ties break toward fewer in-flight."""
+        best, best_score = None, None
+        for name in self.engines:
+            if name in self._dead:
+                continue
+            load = None
+            if self.control_store is not None:
+                # mutable cell, written by another process: fresh read
+                load = self.control_store.get(
+                    self.load_prefix + name, fresh=True
+                )
+            inflight = sum(
+                1
+                for r in self._state.values()
+                if r.engine == name and not r.terminal
+            )
+            score = (load if load is not None else -1, -inflight)
+            if best_score is None or score > best_score:
+                best, best_score = name, score
+        return best
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "Router":
+        self._threads.append(
+            threading.Thread(
+                target=self._intake_loop, name="router-intake", daemon=True
+            )
+        )
+        for name in self.engines:
+            self._threads.append(
+                threading.Thread(
+                    target=self._forward_loop,
+                    args=(name,),
+                    name=f"router-fwd-{name}",
+                    daemon=True,
+                )
+            )
+        if self.lease is not None:
+            self._threads.append(
+                threading.Thread(
+                    target=self._watch_loop, name="router-watch", daemon=True
+                )
+            )
+        for t in self._threads:
+            t.start()
+        return self
+
+    def wait(self, timeout: float | None = None) -> bool:
+        """Block until the merged response topic has been closed."""
+        return self._done_evt.wait(timeout)
+
+    def close(self) -> None:
+        self._stop_evt.set()
+        for g in self._gates.values():
+            g.set()  # unpark paused forwarders so they see the stop
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self.subscriber.close()
+
+    # -- test / introspection hooks -------------------------------------------
+    def snapshot(self) -> dict[str, tuple[str, bool, int]]:
+        """``req_id -> (engine, terminal, deltas_forwarded)``."""
+        with self._lock:
+            return {
+                rid: (rec.engine, rec.terminal, rec.forwarded)
+                for rid, rec in self._state.items()
+            }
+
+    def pause_forwarder(self, name: str) -> None:
+        self._gates[name].clear()
+
+    def resume_forwarder(self, name: str) -> None:
+        self._gates[name].set()
+
+    def mark_engine_dead(self, name: str) -> None:
+        """Out-of-band death report (tests; lease watch calls this too)."""
+        with self._lock:
+            self._on_engine_dead_locked(name)
+
+    # -- intake ----------------------------------------------------------------
+    def _intake_loop(self) -> None:
+        while not self._stop_evt.is_set():
+            try:
+                raw = self.subscriber.next_event(timeout=self.tick)
+            except TimeoutError:
+                continue
+            event = _load_event(raw)
+            if event.get(_END):
+                with self._lock:
+                    self._intake_closed = True
+                    self._maybe_shutdown_locked()
+                return
+            meta = event.get("metadata", {})
+            rid = meta.get("req_id")
+            with self._lock:
+                if rid is None:
+                    self.metrics["unroutable_requests"] += 1
+                    continue
+                if rid in self._state:
+                    self.metrics["duplicate_requests"] += 1
+                    continue
+                target = self._pick_engine_locked()
+                if target is None:
+                    self.metrics["failed_requests"] += 1
+                    self._publish_error_locked(rid, "no live engines")
+                    continue
+                self._state[rid] = _ReqState(event=event, engine=target)
+                self.metrics["requests_routed"] += 1
+                topic = self._req_topic(target)
+                publish_event(self.publisher, topic, {**event, "topic": topic})
+
+    # -- per-engine response forwarders -----------------------------------------
+    def _forward_loop(self, name: str) -> None:
+        sub = self.make_engine_subscriber(name)
+        gate = self._gates[name]
+        try:
+            while not self._stop_evt.is_set():
+                if not gate.wait(self.tick):
+                    continue  # paused (chaos-test window)
+                try:
+                    raw = sub.next_event(timeout=self.tick)
+                except TimeoutError:
+                    continue
+                event = _load_event(raw)
+                if event.get(_END):
+                    with self._lock:
+                        self._engine_closed.add(name)
+                        self._maybe_shutdown_locked()
+                    return
+                self._forward_one(event)
+        finally:
+            sub.close()
+
+    def _forward_one(self, event: dict) -> None:
+        meta = event.get("metadata", {})
+        rid = meta.get("req_id")
+        kind = meta.get("kind")
+        with self._lock:
+            rec = self._state.get(rid) if rid is not None else None
+            if rec is None:
+                self.metrics["ignored_events"] += 1
+                return
+            if kind == "delta":
+                if rec.terminal or meta.get("index") != rec.forwarded:
+                    # replayed prefix of a redispatched request (greedy
+                    # decode: the dropped tokens are bit-identical to the
+                    # ones already forwarded), or a straggler after done
+                    self.metrics["dropped_stale_deltas"] += 1
+                    return
+                rec.forwarded += 1
+                self.metrics["deltas_forwarded"] += 1
+            elif kind in ("done", "error"):
+                if rec.terminal:
+                    # twin completion of a redispatched request; its event
+                    # references the same committed cell the winner's
+                    # client resolve reclaims — drop, don't double-send
+                    self.metrics["duplicate_dones"] += 1
+                    return
+                rec.terminal = True
+                self.metrics["dones_forwarded"] += 1
+            else:
+                self.metrics["ignored_events"] += 1
+                return
+            publish_event(
+                self.publisher,
+                self.response_topic,
+                {**event, "topic": self.response_topic},
+            )
+            if rec.terminal:
+                self._maybe_shutdown_locked()
+
+    # -- lease watch / failover --------------------------------------------------
+    def _watch_loop(self) -> None:
+        known = None
+        while not self._stop_evt.is_set():
+            try:
+                snap = self.lease.watch(known, timeout=1.0)
+            except Exception:
+                with self._lock:
+                    self.metrics["watch_errors"] += 1
+                self._stop_evt.wait(self.tick)
+                continue
+            known = snap
+            dead = set(snap.dead) & set(self.engines)
+            if not dead:
+                continue
+            with self._lock:
+                for name in sorted(dead):
+                    self._on_engine_dead_locked(name)
+
+    def _on_engine_dead_locked(self, name: str) -> None:
+        if name in self._dead or name not in self.engines:
+            return
+        self._dead.add(name)
+        self.metrics["engine_deaths"] += 1
+        for rid, rec in self._state.items():
+            if rec.terminal or rec.engine != name:
+                continue
+            target = self._pick_engine_locked()
+            if target is None:
+                rec.terminal = True
+                self.metrics["failed_requests"] += 1
+                self._publish_error_locked(
+                    rid, f"engine {name} died; no live engines"
+                )
+                continue
+            rec.engine = target
+            self.metrics["redispatches"] += 1
+            topic = self._req_topic(target)
+            # verbatim re-publish: same prompt key/connector — the prompt
+            # bulk is persistent (evict_on_resolve=False) so the survivor
+            # resolves the same bytes the dead engine did
+            publish_event(
+                self.publisher, topic, {**rec.event, "topic": topic}
+            )
+        self._maybe_shutdown_locked()
+
+    # -- shutdown ladder ---------------------------------------------------------
+    def _publish_error_locked(self, rid: str, error: str) -> None:
+        publish_event(
+            self.publisher,
+            self.response_topic,
+            {
+                "topic": self.response_topic,
+                "meta_only": True,
+                "metadata": {"req_id": rid, "kind": "error", "error": error},
+                "seq": -1,
+            },
+        )
+
+    def _maybe_shutdown_locked(self) -> None:
+        if not self._intake_closed:
+            return
+        if any(not r.terminal for r in self._state.values()):
+            return
+        if not self._shutdown_sent:
+            self._shutdown_sent = True
+            for name in self.engines:
+                if name not in self._dead:
+                    topic = self._req_topic(name)
+                    publish_event(
+                        self.publisher, topic, {_END: True, "topic": topic}
+                    )
+        if not self._responses_closed and all(
+            n in self._engine_closed or n in self._dead for n in self.engines
+        ):
+            self._responses_closed = True
+            publish_event(
+                self.publisher,
+                self.response_topic,
+                {_END: True, "topic": self.response_topic},
+            )
+            self._done_evt.set()

@@ -1,0 +1,137 @@
+"""Deterministic toy "LM" for serve tests, chaos drills, and fleet benches.
+
+``CountingModel`` speaks the model decode API (``prefill`` /
+``decode_step`` / ``cache_specs`` / ``param_specs``) but computes integer
+arithmetic instead of a neural net: the next token is
+
+    next = (sum(history[0..pos]) + pos + 1) % vocab
+
+so every generated token depends on the *whole* prefix **and** the exact
+position — a wrong per-slot position, a stale cache row, or cross-slot
+leakage produces a different token immediately.  Integer sums in float32
+are exact at these sizes, so engine-vs-reference comparisons are
+bit-identical, with no neural-net reduction-order caveats.
+
+Lives in ``src`` (not ``tests``) because the fleet entry point
+(``repro.launch.fleet engine --toy``) and the fleet benchmark run it in
+*subprocess* engines, where the tests package is not importable;
+``tests/_serve_toy.py`` re-exports it for the existing suite.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec
+
+
+class CountingModel:
+    """Integer-arithmetic stand-in: deterministic, position-sensitive."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def param_specs(self) -> dict:
+        return {}
+
+    def cache_specs(self, batch_size: int, max_len: int) -> dict:
+        return {
+            "hist": ParamSpec(
+                (1, batch_size, max_len, 1),
+                (None, "batch", "kv_seq", None),
+                jnp.float32,
+                0.0,
+            )
+        }
+
+    def _next(self, hist, index):
+        """(1, B, S, 1) history + scalar position → (B,) next token."""
+        S = hist.shape[2]
+        mask = (jnp.arange(S) <= index)[None, None, :, None]
+        prefix = jnp.sum(jnp.where(mask, hist, 0.0), axis=2)  # (1, B, 1)
+        return (prefix[0, :, 0] + index + 1) % self.cfg.vocab
+
+    def prefill(self, params, tokens, max_len: int):
+        B, S = tokens.shape
+        hist = jnp.zeros((1, B, max_len, 1), jnp.float32)
+        hist = hist.at[:, :, :S, 0].set(tokens.astype(jnp.float32)[None])
+        nxt = self._next(hist, S - 1)
+        logits = jax.nn.one_hot(nxt.astype(jnp.int32), self.cfg.vocab)
+        return logits, {"hist": hist}
+
+    def prefill_batch(self, params, tokens, lens, max_len: int):
+        """Batched multi-request prefill: (B, S) right-padded prompts with
+        per-row valid lengths.  Pad positions hold 0, so the integer prefix
+        sums match the per-request ``prefill`` exactly (bit-identical)."""
+        B, S = tokens.shape
+        valid = jnp.arange(S)[None, :] < lens[:, None]
+        toks = jnp.where(valid, tokens, 0).astype(jnp.float32)
+        hist = jnp.zeros((1, B, max_len, 1), jnp.float32)
+        hist = hist.at[:, :, :S, 0].set(toks[None])
+        idx = jnp.maximum(lens - 1, 0)  # (B,) last valid position per row
+        mask = (jnp.arange(max_len)[None, :] <= idx[:, None])[None, :, :, None]
+        prefix = jnp.sum(jnp.where(mask, hist, 0.0), axis=2)  # (1, B, 1)
+        nxt = (prefix[0, :, 0] + idx + 1) % self.cfg.vocab
+        logits = jax.nn.one_hot(nxt.astype(jnp.int32), self.cfg.vocab)
+        return logits, {"hist": hist}
+
+    def decode_step(self, params, cache, tokens, index):
+        """tokens (B, 1) is the token *at* position ``index``; logits
+        predict position ``index + 1`` (the convention pinned by
+        test_decode_matches_prefill)."""
+        hist = cache["hist"]
+        tok = tokens[:, 0].astype(jnp.float32)
+        hist = hist.at[:, :, index, 0].set(tok[None])
+        nxt = self._next(hist, index)
+        logits = jax.nn.one_hot(nxt.astype(jnp.int32), self.cfg.vocab)
+        return logits, {"hist": hist}
+
+    def decode_multi(self, params, cache, tokens, index):
+        """K-token decode (speculative verify): ``tokens`` (B, K) land at
+        positions ``index .. index+K-1``; ``logits[:, t]`` predicts
+        position ``index+t+1`` from the prefix *through* token ``t``.
+        Integer-exact, so K == 1 is bit-identical to ``decode_step``."""
+        hist = cache["hist"]
+        K = tokens.shape[1]
+        outs = []
+        for t in range(K):  # static unroll: K is small (spec_k + 1)
+            tok = tokens[:, t].astype(jnp.float32)
+            hist = hist.at[:, :, index + t, 0].set(tok[None])
+            outs.append(self._next(hist, index + t))
+        logits = jax.nn.one_hot(jnp.stack(outs, 1).astype(jnp.int32), self.cfg.vocab)
+        return logits, {"hist": hist}
+
+    def verify_batch(self, params, cache, tokens, lens):
+        """Per-row multi-position decode: row ``b``'s K tokens sit at
+        positions ``lens[b] .. lens[b]+K-1`` of its own cache row (same
+        contract as ``DecoderLM.verify_batch``)."""
+
+        def one(cache_b, tok_b, len_b):
+            cb = jax.tree.map(lambda c: c[:, None], cache_b)
+            logits, nc = self.decode_multi(params, cb, tok_b[None], len_b)
+            return logits[0], jax.tree.map(lambda c: c[:, 0], nc)
+
+        return jax.vmap(one, in_axes=(1, 0, 0), out_axes=(0, 1))(
+            cache, tokens, lens
+        )
+
+
+def reference_decode(cfg, prompt, max_new: int, *, eos_id: int = -1,
+                     max_len: int = 64, model=None) -> list[int]:
+    """Sequential single-request greedy decode: the ground truth the
+    continuous-batching engine must reproduce bit-identically."""
+    import numpy as np
+
+    model = model or CountingModel(cfg)
+    tokens = jnp.asarray(np.asarray(prompt, np.int32)[None])
+    logits, cache = model.prefill({}, tokens, max_len)
+    out = [int(jnp.argmax(logits[0, : cfg.vocab]))]
+    pos = tokens.shape[1]
+    while (
+        out[-1] != eos_id and len(out) < max_new and pos < max_len - 1
+    ):
+        step = jnp.asarray([[out[-1]]], jnp.int32)
+        logits, cache = model.decode_step({}, cache, step, jnp.int32(pos))
+        out.append(int(jnp.argmax(logits[0, : cfg.vocab])))
+        pos += 1
+    return out

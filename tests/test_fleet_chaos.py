@@ -1,0 +1,279 @@
+"""Fleet failover chaos matrix: SIGKILL an engine at each lifecycle stage.
+
+The exactly-once contract under test (see ``repro.serve.router``): for
+every request, the client receives the exact greedy-decode token stream
+once — no gap, no duplicate, one ``on_done`` — no matter when an engine
+dies:
+
+- **before admission** (``test_kill_engine_before_admission``): the
+  victim holds its lease and publishes load but is parked before its
+  serve loop (the fleet ``--hold-key`` chaos hook), so its assigned
+  requests have produced nothing when it is killed;
+- **mid-decode** (``test_kill_engine_mid_decode``): the headline drill —
+  the victim is killed while streaming a long request; the survivor
+  replays from the persistent prompt bulk and the router drops the
+  bit-identical replayed prefix;
+- **after completion-publish, before client read**
+  (``test_kill_engine_after_commit_before_client_read``): the victim
+  committed ``done-{req_id}`` (put-if-absent) and died before the client
+  consumed it; the survivor's twin completion references the same cell
+  and the router forwards exactly one terminal event.
+
+Tokens are checked bit-identically against ``reference_decode`` (the
+CountingModel is integer-exact), so a replayed/redispatched request that
+drifted by even one token fails loudly.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from _serve_toy import reference_decode
+from repro.configs import get_smoke_config
+from repro.core.connectors import new_key
+from repro.core.connectors_net import StoreServer, StoreServerConnector
+from repro.core.store import Store
+from repro.core.streaming import (
+    FileLogPublisher,
+    FileLogSubscriber,
+    StreamConsumer,
+    StreamProducer,
+    _load_event,
+)
+from repro.launch.fleet import EngineProc, Fleet
+from repro.serve.client import ServeClient
+
+CFG = get_smoke_config("smollm-135m")
+
+
+def _wait_until(predicate, timeout: float, what: str) -> None:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return
+        time.sleep(0.01)
+    raise AssertionError(f"timed out after {timeout}s waiting for {what}")
+
+
+def _counting(counts: dict):
+    """on_done hook that counts completions per req_id."""
+
+    def on_done(rid, rec):
+        counts[rid] = counts.get(rid, 0) + 1
+
+    return on_done
+
+
+def _assert_exactly_once(fleet, prompts, max_new, counts, *, max_len):
+    """Every request: bit-identical tokens, gapless stream, one on_done."""
+    for rid, prompt in prompts.items():
+        rec = fleet.client.results[rid]
+        assert rec.error is None, (rid, rec.error)
+        want = reference_decode(CFG, prompt, max_new[rid], max_len=max_len)
+        assert rec.result["tokens"] == want, rid
+        assert rec.stream_tokens == want, rid  # no gap, no duplicate delta
+        assert counts.get(rid) == 1, rid  # on_done fired exactly once
+    assert not fleet.client.out_of_order
+    assert not fleet.client.rejections
+    assert fleet.client.closed  # router ran its shutdown ladder to the end
+
+
+@pytest.mark.multiproc(timeout=300)
+class TestFleetChaos:
+    def test_kill_engine_mid_decode(self):
+        """Headline drill: SIGKILL the engine streaming a 600-token request
+        once >= 3 deltas have been forwarded.  The survivor re-resolves the
+        same prompt bulk, replays, and the client sees one gapless exact
+        stream per request."""
+        counts: dict[str, int] = {}
+        fleet = Fleet(
+            2, slots=2, max_len=1024, page_size=16, ttl=2.0,
+            on_done=_counting(counts),
+        )
+        prompts: dict[str, np.ndarray] = {}
+        max_new: dict[str, int] = {}
+
+        def send(rid, prompt, n):
+            prompts[rid] = prompt
+            max_new[rid] = n
+            fleet.send(rid, prompt, n)
+
+        try:
+            send("long", np.arange(1, 7, dtype=np.int32), 600)
+            for i in range(3):
+                send(f"s{i}", np.array([2 + i, 3, 5, 7], np.int32), 8)
+            fleet.close_intake()
+
+            def mid_decode():
+                snap = fleet.router.snapshot()
+                if "long" not in snap:
+                    return False
+                _, terminal, forwarded = snap["long"]
+                assert not terminal, "long finished before the kill window"
+                return forwarded >= 3
+
+            _wait_until(mid_decode, 60, "long request mid-decode")
+            victim = fleet.router.snapshot()["long"][0]
+            fleet.kill_engine(victim)
+
+            fleet.client.collect(deadline=120.0)
+            # snapshot metrics NOW: once the survivor exits cleanly after
+            # shutdown its lease expires too, and the watch thread counts
+            # that as a (benign, post-terminal) second death while the slow
+            # reference decodes below run
+            m = dict(fleet.router.metrics)
+            _assert_exactly_once(fleet, prompts, max_new, counts, max_len=1024)
+            assert m["engine_deaths"] == 1
+            assert m["failed_requests"] == 0
+            assert m["redispatches"] >= 1  # at least the long request moved
+            # the survivor's replayed prefix was dropped, not re-delivered
+            assert m["dropped_stale_deltas"] >= 3
+        finally:
+            fleet.stop()
+
+    def test_kill_engine_before_admission(self):
+        """The victim is lease-live and load-published but parked *before*
+        its serve loop (``hold``), so its assigned requests were never
+        admitted.  Killing it must redispatch them untouched."""
+        counts: dict[str, int] = {}
+        fleet = Fleet(2, ttl=2.0, hold=("e1",), on_done=_counting(counts))
+        prompts: dict[str, np.ndarray] = {}
+        try:
+            for i in range(6):
+                p = np.array([1 + i, 2, 3, 4], np.int32)
+                prompts[f"a{i}"] = p
+                fleet.send(f"a{i}", p, 6)
+            fleet.close_intake()
+            _wait_until(
+                lambda: any(
+                    eng == "e1" and not terminal
+                    for eng, terminal, _ in fleet.router.snapshot().values()
+                ),
+                30,
+                "a request assigned to the held engine e1",
+            )
+            fleet.kill_engine("e1")
+            fleet.client.collect(deadline=120.0)
+            m = dict(fleet.router.metrics)  # before post-shutdown expiries
+            _assert_exactly_once(
+                fleet, prompts, {r: 6 for r in prompts}, counts, max_len=32
+            )
+            assert m["engine_deaths"] == 1
+            assert m["redispatches"] >= 1
+            assert m["failed_requests"] == 0
+        finally:
+            fleet.stop()
+
+    def test_kill_engine_after_commit_before_client_read(self):
+        """The victim commits ``done-c0`` (visible in the response store)
+        and dies before the client reads it — both forwarders are paused to
+        pin that window open.  The survivor's twin completion references
+        the same committed cell; the client must get exactly one done and
+        the victim's late event must drop as a duplicate."""
+        counts: dict[str, int] = {}
+        fleet = Fleet(2, ttl=2.0, on_done=_counting(counts))
+        resp = StoreServerConnector(fleet.server.address, namespace="resp")
+        try:
+            for name in fleet.names:
+                fleet.router.pause_forwarder(name)
+            prompt = np.array([3, 1, 4, 1, 5], np.int32)
+            fleet.send("c0", prompt, 6)
+            fleet.close_intake()
+            # the completion is durably committed server-side...
+            resp.wait_for("done-c0", timeout=60.0)
+            victim = fleet.router.snapshot()["c0"][0]
+            survivor = next(n for n in fleet.names if n != victim)
+            # ...and fully *published*: the done event must be in the
+            # victim's response log before the kill, else there is no late
+            # event for the duplicate-drop assertion below (commit and
+            # event append are two steps; SIGKILL can land between them)
+            vsub = FileLogSubscriber(f"responses-{victim}", fleet.logdir)
+
+            def done_event_logged():
+                while True:
+                    try:
+                        raw = vsub.next_event(timeout=0.05)
+                    except TimeoutError:
+                        return False
+                    meta = _load_event(raw).get("metadata", {})
+                    if meta.get("req_id") == "c0" and meta.get("kind") == "done":
+                        return True
+
+            _wait_until(done_event_logged, 30, "victim's done event logged")
+            vsub.close()
+            # the client has still read nothing: kill the committer now
+            fleet.kill_engine(victim)
+            fleet.router.resume_forwarder(survivor)
+
+            fleet.client.collect(deadline=120.0)
+            _assert_exactly_once(
+                fleet, {"c0": prompt}, {"c0": 6}, counts, max_len=32
+            )
+            # now let the victim's buffered done event through: it must be
+            # dropped as a duplicate of the already-forwarded terminal
+            fleet.router.resume_forwarder(victim)
+            _wait_until(
+                lambda: fleet.router.metrics["duplicate_dones"] >= 1,
+                30,
+                "victim's late done dropped as duplicate",
+            )
+            assert fleet.router.metrics["dones_forwarded"] == 1
+            assert not fleet.client.rejections
+        finally:
+            resp.close()
+            fleet.stop()
+
+
+@pytest.mark.multiproc(timeout=300)
+class TestFleetClientDeadline:
+    def test_dead_engine_surfaces_timeout_with_req_id(self, tmp_path):
+        """Satellite bugfix pin: a client collecting against an engine that
+        died mid-stream must surface ``TimeoutError`` naming the incomplete
+        req_id at its deadline instead of blocking forever."""
+        logdir = str(tmp_path)
+        prefix = f"dead-{new_key()}"
+        server = StoreServer().start()
+        proc = None
+        try:
+            proc = EngineProc(
+                "e0", server.address, logdir, prefix,
+                toy=True, slots=2, max_len=1024, page_size=16, ttl=60.0,
+            )
+            proc.wait_ready()
+            req_store = Store(
+                f"{prefix}-req",
+                StoreServerConnector(server.address, namespace="req"),
+                register=False,
+            )
+            producer = StreamProducer(
+                FileLogPublisher(logdir), {"requests-e0": req_store}
+            )
+            killed = []
+
+            def kill_on_first_delta(rid, token, index):
+                if not killed:
+                    killed.append(rid)
+                    proc.kill()  # mid-stream death: no done, no topic close
+
+            client = ServeClient(
+                StreamConsumer(
+                    FileLogSubscriber("responses-e0", logdir), timeout=60.0
+                ),
+                on_delta=kill_on_first_delta,
+            )
+            producer.send(
+                "requests-e0",
+                {"prompt": np.arange(1, 6, dtype=np.int32)},
+                metadata={"req_id": "d0", "max_new_tokens": 600},
+            )
+            producer.flush_topic("requests-e0")
+            t0 = time.monotonic()
+            with pytest.raises(TimeoutError) as ei:
+                client.collect(1, deadline=5.0)
+            assert "d0" in str(ei.value)  # names the incomplete request
+            assert killed == ["d0"]  # the stream really started first
+            assert time.monotonic() - t0 < 30.0  # deadline, not the 60s wait
+        finally:
+            if proc is not None:
+                proc.stop()
+            server.stop()

@@ -428,3 +428,65 @@ class TestCrossProcessClient:
         report = json.loads(out.decode().strip().splitlines()[-1])
         assert report["ok"], report
         assert report["n_results"] == n
+
+
+class TestOrphanReclaimFailure:
+    def test_reclaim_failure_counted_and_surfaced_by_proxysan(self):
+        """Satellite: the engine's best-effort reclaim of an unaddressable
+        request's bulk (no ``req_id`` — nobody will ever pull it again)
+        used to swallow eviction failures silently.  A failed reclaim must
+        now land in ``metrics['reclaim_failures']`` AND hand the orphan to
+        ProxySan so the resident payload shows up in the leak report."""
+        from repro.core import sanitize as _sanitize
+
+        ns = f"rf-{new_key()}"
+        store = Store(f"{ns}-req", sanitize=True)
+        producer = StreamProducer(QueuePublisher(ns), {"requests": store})
+        consumer = StreamConsumer(QueueSubscriber("requests", ns), timeout=10.0)
+        resp_producer = StreamProducer(
+            QueuePublisher(ns), {"responses": Store(f"{ns}-resp")}
+        )
+        # unaddressable: no req_id in the metadata
+        producer.send("requests", {"prompt": np.arange(1, 5, dtype=np.int32)},
+                      metadata={"note": "no req_id"})
+        producer.flush_topic("requests")
+        producer.close_topic("requests")
+
+        evict_attempts = []
+
+        def failing_evict(key):
+            evict_attempts.append(key)
+            raise RuntimeError("injected channel failure")
+
+        orig_evict = store.connector.evict
+        store.connector.evict = failing_evict
+        engine = make_engine()
+        try:
+            engine.run(consumer, resp_producer)
+            assert engine.metrics["malformed_events"] == 1
+            assert engine.metrics["reclaim_failures"] == 1
+            assert len(evict_attempts) == 1
+            san = _sanitize.active_for(store.name)
+            assert san is not None
+            leaked = san.leak_report(store=store.name, kinds=("object",))
+            assert any(l["key"] == evict_attempts[0] for l in leaked), leaked
+        finally:
+            store.connector.evict = orig_evict
+            # reclaim for real so the orphan does not outlive the test
+            store.connector.evict(evict_attempts[0])
+            engine.close()
+
+    def test_reclaim_success_keeps_failure_count_zero(self):
+        """Control: a healthy channel reclaims the orphan; no failure is
+        counted and nothing is handed to ProxySan."""
+        s = queue_streams()
+        s["producer"].send(
+            "requests", {"prompt": np.arange(1, 5, dtype=np.int32)}, metadata={}
+        )
+        s["producer"].flush_topic("requests")
+        s["producer"].close_topic("requests")
+        engine = make_engine()
+        engine.run(s["consumer"], s["resp_producer"])
+        assert engine.metrics["malformed_events"] == 1
+        assert engine.metrics["reclaim_failures"] == 0
+        engine.close()

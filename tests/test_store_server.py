@@ -392,3 +392,84 @@ class TestServeOverServer:
         report = json.loads(out.decode().strip().splitlines()[-1])
         assert report["ok"], report
         assert report["n_results"] == n
+
+
+# ---------------------------------------------------------------------------
+# Rude client disconnect releases parked wait threads (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+class TestRudeDisconnectReleasesWaitThread:
+    def _conn_threads(self):
+        return sum(
+            1
+            for t in threading.enumerate()
+            if t.name == "store-server-conn" and t.is_alive()
+        )
+
+    def test_wait_thread_released_on_peer_close(self):
+        """A connection thread parked in a server-side WAIT for a client
+        that rudely disconnected used to linger until the wait's own
+        timeout (60s here).  The sliced wait probes the peer every
+        ``_PEER_TICK``; the thread must be back within seconds of the
+        close, far below the wait budget."""
+        import socket as socket_mod
+
+        from repro.core.connectors_net import (
+            OP_WAIT,
+            StoreServer,
+            _F64,
+            _pack_key,
+            send_frame,
+        )
+
+        server = StoreServer().start()
+        try:
+            base = self._conn_threads()
+            sock = socket_mod.create_connection((server.host, server.port))
+            # park the connection's server thread in a 60s wait on a key
+            # that never lands
+            send_frame(
+                sock, OP_WAIT, (_F64.pack(60.0), _pack_key("ns|never-set"))
+            )
+            _wait_until(
+                lambda: self._conn_threads() == base + 1, 10,
+                "wait parked server-side",
+            )
+            t0 = time.monotonic()
+            sock.close()  # rude: no goodbye, the response is never read
+            _wait_until(
+                lambda: self._conn_threads() == base, 10,
+                "parked thread released after peer close",
+            )
+            # released by the peer probe, not by the 60s wait expiring
+            assert time.monotonic() - t0 < 10.0
+        finally:
+            server.stop()
+
+    def test_patient_client_still_gets_the_push(self):
+        """Control: slicing the server-side wait must not break the push
+        contract — a connected client parked in wait_for is woken by the
+        put, and the sliced wait still honors its own deadline."""
+        from repro.core.connectors_net import StoreServer, StoreServerConnector
+
+        server = StoreServer().start()
+        try:
+            c = StoreServerConnector(server.address, namespace=new_key())
+            woken = []
+
+            def waiter():
+                c.wait_for("arrives", timeout=30.0)
+                woken.append(time.monotonic())
+
+            t = threading.Thread(target=waiter, daemon=True)
+            t.start()
+            time.sleep(0.6)  # let the wait park (and slice) server-side
+            c.put("arrives", b"x")
+            t.join(timeout=10)
+            assert not t.is_alive() and woken
+            with pytest.raises(TimeoutError):
+                c.wait_for("never-arrives", timeout=0.4)
+            c.close()
+        finally:
+            server.stop()
